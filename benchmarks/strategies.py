@@ -1,0 +1,105 @@
+"""The 10 mapping strategies of paper Appendix A.9, as DSL programs, with
+per-strategy semantic checks (the paper's 'strategy test').
+"""
+
+from __future__ import annotations
+
+PREAMBLE = """
+Task * GPU,CPU;
+Region * * GPU FBMEM;
+Region * * CPU SYSMEM;
+mcpu = Machine(CPU);
+mgpu = Machine(GPU);
+"""
+
+STRATEGIES = {}
+
+
+def _strategy(n, body, check):
+    STRATEGIES[n] = {"src": PREAMBLE + body, "check": check}
+
+
+_strategy(
+    1,
+    """
+mlin = mgpu.merge(0, 1);
+def block1d(Tuple ipoint, Tuple ispace) {
+  idx = ipoint * mlin.size / ispace;
+  return mlin[*idx];
+}
+IndexTaskMap calculate_new_currents block1d;
+IndexTaskMap distribute_charge block1d;
+IndexTaskMap update_voltages block1d;
+""",
+    lambda plan: sorted(plan.device_table("calculate_new_currents",
+                                          (8,))) == list(range(8)),
+)
+
+_strategy(
+    2,
+    """
+Region * rp_shared GPU ZCMEM;
+Region * rp_ghost GPU ZCMEM;
+""",
+    lambda plan: plan.placement_for("t", "rp_shared", "TP").memory == "REPL"
+    and plan.placement_for("t", "rp_ghost", "TP").memory == "REPL",
+)
+
+_strategy(
+    3,
+    "Layout * * * AOS;\n",
+    lambda plan: plan.layout_for("t", "r").soa is False,
+)
+
+_strategy(
+    4,
+    "Layout * * * F_order;\n",
+    lambda plan: plan.layout_for("t", "r").order == "F",
+)
+
+_strategy(
+    5,
+    "Layout * * * Align==64 F_order;\n",
+    lambda plan: plan.layout_for("t", "r").align == 64
+    and plan.layout_for("t", "r").order == "F",
+)
+
+_strategy(
+    6,
+    "Task calculate_new_currents CPU;\n",
+    lambda plan: plan.procs_for("calculate_new_currents") == ("INLINE",),
+)
+
+_strategy(
+    7,
+    "CollectMemory calculate_new_currents *;\n",
+    lambda plan: ("calculate_new_currents", "*") in plan.collects,
+)
+
+_strategy(
+    8,
+    "InstanceLimit calculate_new_currents 4;\n",
+    lambda plan: plan.instance_limit_for("calculate_new_currents") == 4,
+)
+
+_strategy(
+    9,
+    "Region distribute_charge rp_shared GPU ZCMEM;\n",
+    lambda plan: plan.placement_for("distribute_charge", "rp_shared",
+                                    "TP").memory == "REPL",
+)
+
+_strategy(
+    10,
+    """
+def cyclic1d(Task task) {
+  ip = task.ipoint;
+  return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];
+}
+IndexTaskMap calculate_new_currents cyclic1d;
+IndexTaskMap distribute_charge cyclic1d;
+IndexTaskMap update_voltages cyclic1d;
+""",
+    lambda plan: len(set(plan.device_table("update_voltages",
+                                           (8,)).tolist())) > 1,
+)

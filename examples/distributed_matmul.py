@@ -1,0 +1,35 @@
+"""Run all six distributed matmul algorithms on host devices and verify
+them against jnp.dot.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/distributed_matmul.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.mm_algorithms import ALGORITHMS, run_algorithm
+
+
+def main():
+    devs = jax.devices()
+    print(f"{len(devs)} devices")
+    rng = np.random.RandomState(0)
+    M = N = K = 128
+    A = jnp.asarray(rng.randn(M, K), jnp.float32)
+    B = jnp.asarray(rng.randn(K, N), jnp.float32)
+    ref = A @ B
+    for alg in ALGORITHMS:
+        try:
+            d = devs[:4] if alg in ("cannon", "pumma") and \
+                len(devs) not in (4, 16, 64) else devs
+            C = run_algorithm(alg, A, B, devices=d)
+            err = float(jnp.max(jnp.abs(C - ref)))
+            print(f"{alg:10s} max_err={err:.2e}  OK")
+        except AssertionError as e:
+            print(f"{alg:10s} skipped ({e})")
+
+
+if __name__ == "__main__":
+    main()

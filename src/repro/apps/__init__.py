@@ -1,0 +1,2 @@
+from . import circuit, pennant, stencil, taskgraph  # noqa: F401
+from .taskgraph import TaskGraphApp, evaluate_plan, throughput  # noqa: F401

@@ -1,0 +1,149 @@
+"""MapperAgent specialization for the task-graph applications (paper §5.2)
+and the matmul algorithms (paper §5.3).
+
+App decision axes: per-task processor, per-region memory, global layout,
+index-mapping function per index task.  Matmul decision axis: the index
+mapping function family + its transformation parameters (paper A.3/A.5).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Tuple
+
+from ..core.agent.trace_lite import Bundle, Module
+from .taskgraph import TaskGraphApp
+
+PROCS = ("GPU", "CPU", "OMP")
+MEMS = ("FBMEM", "ZCMEM", "SYSMEM")
+LAYOUTS = ("SOA", "AOS")
+ORDERS = ("C_order", "F_order")
+ALIGNS = (0, 64, 128)
+INDEX_FNS = ("block1d", "cyclic1d", "block2d", "cyclic2d", "linearize",
+             "linearize3d", "blockcyclic")
+
+
+def index_fn_code(name: str) -> str:
+    body = {
+        "block1d": ("m1 = mgpu.merge(0, 1);\n"
+                    "  idx = ipoint * m1.size / ispace;\n"
+                    "  return m1[*idx];"),
+        "cyclic1d": ("m1 = mgpu.merge(0, 1);\n"
+                     "  idx = ipoint % m1.size;\n"
+                     "  return m1[*idx];"),
+        "block2d": ("idx = ipoint * mgpu.size / ispace;\n"
+                    "  return mgpu[*idx];"),
+        "cyclic2d": ("idx = ipoint % mgpu.size;\n"
+                     "  return mgpu[*idx];"),
+        "linearize": ("lin = ipoint[0] * ispace[1] + ipoint[1];\n"
+                      "  return mgpu[lin % mgpu.size[0],"
+                      " (lin / mgpu.size[0]) % mgpu.size[1]];"),
+        # paper A.5: COSMA / Johnson linearization of a 3D tile grid
+        "linearize3d": ("lin = ipoint[0] + ipoint[1] * ispace[0]"
+                        " + ipoint[2] * ispace[0] * ispace[1];\n"
+                        "  return mgpu[lin % mgpu.size[0],"
+                        " (lin / mgpu.size[0]) % mgpu.size[1]];"),
+        "blockcyclic": ("idx = ipoint / mgpu.size % mgpu.size;\n"
+                        "  return mgpu[*idx];"),
+    }[name]
+    return (f"def {name}(Tuple ipoint, Tuple ispace) {{\n  {body}\n}}")
+
+
+class AppMapperAgent(Module):
+    def __init__(self, app: TaskGraphApp,
+                 decisions: Optional[Dict] = None):
+        self.app_desc = app
+        tasks = tuple(t.name for t in app.tasks)
+        regions = tuple(app.regions)
+        d = decisions or self.default_decisions(app)
+
+        def render_tasks(value, _):
+            return "\n".join(f"Task {t} {p};" for t, p in value.items())
+
+        def render_regions(value, _):
+            return "\n".join(f"Region * {r} GPU {m};"
+                             for r, m in value.items())
+
+        def render_layout(value, _):
+            aln = f" Align=={value['align']}" if value.get("align") else ""
+            return (f"Layout * * * {value['soa']} {value['order']}{aln};")
+
+        def render_idx(value, _):
+            fn = value["fn"]
+            lines = ["mgpu = Machine(GPU);", index_fn_code(fn)]
+            for t in value["index_tasks"]:
+                lines.append(f"IndexTaskMap {t} {fn};")
+            return "\n".join(lines)
+
+        self.task_decision = Bundle(
+            "task_decision", {t: PROCS for t in tasks},
+            dict(d["task_decision"]), render_tasks)
+        self.region_decision = Bundle(
+            "region_decision", {r: MEMS for r in regions},
+            dict(d["region_decision"]), render_regions)
+        self.layout_decision = Bundle(
+            "layout_decision",
+            {"soa": LAYOUTS, "order": ORDERS, "align": ALIGNS},
+            dict(d["layout_decision"]), render_layout)
+        self.index_task_map_decision = Bundle(
+            "index_task_map_decision", {"fn": INDEX_FNS},
+            dict(d["index_task_map_decision"]), render_idx)
+
+    @staticmethod
+    def default_decisions(app: TaskGraphApp) -> Dict:
+        return {
+            "task_decision": {t.name: "CPU" for t in app.tasks},
+            "region_decision": {r: "SYSMEM" for r in app.regions},
+            "layout_decision": {"soa": "SOA", "order": "C_order", "align": 0},
+            "index_task_map_decision": {
+                "fn": "block1d",
+                "index_tasks": tuple(t.name for t in app.tasks)},
+        }
+
+    @staticmethod
+    def random_decisions(app: TaskGraphApp, seed: int) -> Dict:
+        rng = random.Random(seed)
+        return {
+            "task_decision": {t.name: rng.choice(PROCS) for t in app.tasks},
+            "region_decision": {r: rng.choice(MEMS) for r in app.regions},
+            "layout_decision": {"soa": rng.choice(LAYOUTS),
+                                "order": rng.choice(ORDERS),
+                                "align": rng.choice(ALIGNS)},
+            "index_task_map_decision": {
+                "fn": rng.choice(INDEX_FNS),
+                "index_tasks": tuple(t.name for t in app.tasks)},
+        }
+
+    def generate_mapper(self) -> Dict[str, str]:
+        return {b.name: b.forward(None) for b in self.bundles()}
+
+    def mapper_text(self) -> str:
+        o = self.generate_mapper()
+        order = ["task_decision", "region_decision", "layout_decision",
+                 "index_task_map_decision"]
+        return "\n".join(o[k] for k in order if o.get(k))
+
+    def decisions(self):
+        return self.parameters()
+
+    def set_decisions(self, d):
+        self.load_parameters(d)
+
+
+def mutate_app_decisions(app: TaskGraphApp, decisions: Dict,
+                         rng: random.Random, k: int = 1) -> Dict:
+    import copy
+    out = copy.deepcopy(decisions)
+    axes: List[Tuple[str, str, tuple]] = []
+    for t in app.tasks:
+        axes.append(("task_decision", t.name, PROCS))
+    for r in app.regions:
+        axes.append(("region_decision", r, MEMS))
+    axes += [("layout_decision", "soa", LAYOUTS),
+             ("layout_decision", "order", ORDERS),
+             ("layout_decision", "align", ALIGNS),
+             ("index_task_map_decision", "fn", INDEX_FNS)]
+    for _ in range(k):
+        mod, key, choices = rng.choice(axes)
+        out[mod][key] = rng.choice(choices)
+    return out

@@ -1,0 +1,142 @@
+"""Pennant-like benchmark (Ferenbaugh 2015): Lagrangian staggered-grid
+hydrodynamics.  We implement a simplified structured-quad variant of the
+per-cycle kernel sequence (the real Pennant's control flow) on jnp arrays:
+
+    adv_pos_half      advance point positions by half-step velocities
+    calc_rho          zone density from corner-gathered volumes
+    calc_pressure     EOS: p = (gamma-1) rho e
+    calc_force        corner forces from pressure gradients
+    calc_accel        scatter corner forces to points, F = m a
+    adv_pos_full      full-step position/velocity update
+    calc_work_energy  zone energy update from corner work
+
+Zones gather from their 4 corner points and scatter back -- the
+gather/scatter regions (sides/corners) are the mapping-sensitive data."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .taskgraph import Region, Task, TaskGraphApp
+
+GAMMA = 5.0 / 3.0
+
+
+def make_mesh_state(nz: int, seed: int = 0):
+    """nz x nz zones; (nz+1)^2 points."""
+    npt = nz + 1
+    rng = np.random.RandomState(seed)
+    xs, ys = np.meshgrid(np.arange(npt, dtype=np.float32),
+                         np.arange(npt, dtype=np.float32))
+    return {
+        "px": jnp.asarray(xs), "py": jnp.asarray(ys),
+        "pu": jnp.asarray(rng.randn(npt, npt) * 0.01, jnp.float32),
+        "pv": jnp.asarray(rng.randn(npt, npt) * 0.01, jnp.float32),
+        "zr": jnp.ones((nz, nz), jnp.float32),
+        "ze": jnp.ones((nz, nz), jnp.float32),
+        "zm": jnp.ones((nz, nz), jnp.float32),
+        "pm": jnp.ones((npt, npt), jnp.float32),
+    }
+
+
+def _zone_gather(p):
+    """Gather the 4 corners of each zone: [nz, nz, 4]."""
+    return jnp.stack([p[:-1, :-1], p[:-1, 1:], p[1:, 1:], p[1:, :-1]],
+                     axis=-1)
+
+
+def _corner_scatter(c):
+    """Scatter per-zone-corner values back to points ([nz,nz,4] -> pts)."""
+    npt = c.shape[0] + 1
+    out = jnp.zeros((npt, npt), c.dtype)
+    out = out.at[:-1, :-1].add(c[..., 0])
+    out = out.at[:-1, 1:].add(c[..., 1])
+    out = out.at[1:, 1:].add(c[..., 2])
+    out = out.at[1:, :-1].add(c[..., 3])
+    return out
+
+
+def zone_volume(px, py):
+    x = _zone_gather(px)
+    y = _zone_gather(py)
+    # shoelace over the quad
+    x2 = jnp.roll(x, -1, axis=-1)
+    y2 = jnp.roll(y, -1, axis=-1)
+    return 0.5 * jnp.abs(jnp.sum(x * y2 - x2 * y, axis=-1)) + 1e-9
+
+
+def pennant_cycle(s, dt=1e-3):
+    # adv_pos_half
+    pxh = s["px"] + 0.5 * dt * s["pu"]
+    pyh = s["py"] + 0.5 * dt * s["pv"]
+    # calc_rho
+    vol = zone_volume(pxh, pyh)
+    zr = s["zm"] / vol
+    # calc_pressure
+    zp = (GAMMA - 1.0) * zr * s["ze"]
+    # calc_force: corner force ~ pressure difference across corners
+    fx = _corner_scatter(jnp.broadcast_to(zp[..., None], zp.shape + (4,))
+                         * 0.25)
+    fy = fx
+    # calc_accel + adv_pos_full
+    pu = s["pu"] + dt * fx / s["pm"]
+    pv = s["pv"] + dt * fy / s["pm"]
+    px = s["px"] + dt * pu
+    py = s["py"] + dt * pv
+    # calc_work_energy
+    work = _zone_gather(pu).mean(-1) * zp * dt
+    ze = s["ze"] + work / jnp.maximum(s["zm"], 1e-9)
+    return {**s, "px": px, "py": py, "pu": pu, "pv": pv, "zr": zr, "ze": ze}
+
+
+def make_app(nz: int = 4096, n_devices: int = 8,
+             iterations: int = 10) -> TaskGraphApp:
+    n_zones = nz * nz
+    n_pts = (nz + 1) ** 2
+    fb = 4
+    regions = {
+        "points": Region("points", n_pts * fb * 6, "stream"),
+        "zones": Region("zones", n_zones * fb * 4, "stream"),
+        "sides": Region("sides", n_zones * 4 * fb * 3, "gather"),
+        "corners": Region("corners", n_zones * 4 * fb * 2, "gather"),
+        "ghost_points": Region("ghost_points", (nz + 1) * 4 * fb * 6,
+                               "gather"),
+        "eos_params": Region("eos_params", 1024, "gather"),
+    }
+    tasks = [
+        Task("adv_pos_half", n_pts * 4.0, ("points",), ("points",),
+             0.999, n_devices),
+        Task("calc_rho", n_zones * 24.0, ("points", "sides", "ghost_points"),
+             ("zones",), 0.999, n_devices),
+        Task("calc_pressure", n_zones * 3.0, ("zones", "eos_params"),
+             ("zones",), 0.999, n_devices),
+        Task("calc_force", n_zones * 16.0, ("zones", "sides"),
+             ("corners",), 0.999, n_devices),
+        Task("calc_accel", n_pts * 6.0, ("corners", "points"),
+             ("points",), 0.995, n_devices),
+        Task("adv_pos_full", n_pts * 8.0, ("points",), ("points",),
+             0.999, n_devices),
+        Task("calc_work_energy", n_zones * 10.0, ("corners", "zones"),
+             ("zones",), 0.999, n_devices),
+    ]
+    return TaskGraphApp("pennant", tasks, regions, n_devices, iterations)
+
+
+EXPERT_MAPPER = """
+# Expert pennant mapper: all kernels on GPU, zone/point data in FBMEM,
+# ghost boundary points in ZCMEM, SOA Fortran layout for the mesh arrays.
+Task * GPU;
+Region * * GPU FBMEM;
+Region * ghost_points GPU ZCMEM;
+Layout * * * SOA F_order;
+mgpu = Machine(GPU);
+def block1d(Tuple ipoint, Tuple ispace) {
+  m1 = mgpu.merge(0, 1);
+  idx = ipoint * m1.size / ispace;
+  return m1[*idx];
+}
+IndexTaskMap calc_rho block1d;
+IndexTaskMap calc_force block1d;
+"""

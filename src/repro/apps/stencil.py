@@ -1,0 +1,118 @@
+"""Stencil benchmark (PRK 2D star stencil, Van der Wijngaart & Mattson
+2014): each point updated from its 4r star neighbours, plus an increment
+of the input grid.  Two tasks, 12 data arguments -- matching the paper's
+description of its smallest search space (2^38)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .taskgraph import Region, Task, TaskGraphApp
+
+RADIUS = 2
+
+
+def stencil_step(grid: jax.Array, inp: jax.Array):
+    """One star-stencil iteration on a torus (single-device oracle for the
+    shard_map version; periodic boundaries via roll)."""
+    out = jnp.zeros_like(grid)
+    w = 1.0 / (2 * RADIUS)
+    for r in range(1, RADIUS + 1):
+        out = out + (
+            jnp.roll(grid, -r, axis=1) + jnp.roll(grid, r, axis=1)
+            + jnp.roll(grid, -r, axis=0) + jnp.roll(grid, r, axis=0)
+        ) * (w / r)
+    return out, inp + 1.0
+
+
+def stencil_step_sharded(grid: jax.Array, inp: jax.Array, mesh: Mesh):
+    """shard_map version with halo exchange over a (x, y) mesh."""
+    ax, ay = mesh.axis_names
+
+    def kernel(g, i):
+        # halo exchange: neighbours along both axes (torus shifts)
+        px, py = mesh.shape[ax], mesh.shape[ay]
+
+        def shift(x, axis_name, n_axis, delta, axis):
+            perm = [(s, (s + delta) % n_axis) for s in range(n_axis)]
+            return jax.lax.ppermute(x, axis_name, perm)
+
+        up = shift(g[-RADIUS:, :], ax, px, 1, 0)
+        down = shift(g[:RADIUS, :], ax, px, -1, 0)
+        g_v = jnp.concatenate([up, g, down], axis=0)
+        left = shift(g_v[:, -RADIUS:], ay, py, 1, 1)
+        right = shift(g_v[:, :RADIUS], ay, py, -1, 1)
+        g_h = jnp.concatenate([left, g_v, right], axis=1)
+
+        out = jnp.zeros_like(g)
+        w = 1.0 / (2 * RADIUS)
+        n0, n1 = g.shape
+        for r in range(1, RADIUS + 1):
+            out = out + (
+                g_h[RADIUS:RADIUS + n0, RADIUS + r:RADIUS + n1 + r]
+                + g_h[RADIUS:RADIUS + n0, RADIUS - r:RADIUS + n1 - r]
+                + g_h[RADIUS + r:RADIUS + n0 + r, RADIUS:RADIUS + n1]
+                + g_h[RADIUS - r:RADIUS + n0 - r, RADIUS:RADIUS + n1]
+            ) * (w / r)
+        return out, i + 1.0
+
+    return shard_map(kernel, mesh=mesh,
+                     in_specs=(P(ax, ay), P(ax, ay)),
+                     out_specs=(P(ax, ay), P(ax, ay)))(grid, inp)
+
+
+def make_app(n: int = 8192, n_devices: int = 8,
+             iterations: int = 10) -> TaskGraphApp:
+    cell_bytes = 8
+    grid_bytes = n * n * cell_bytes
+    flops_stencil = n * n * (4 * RADIUS + 1) * 2.0
+    flops_add = n * n * 1.0
+    # 12 data arguments: in/out grids + per-direction halo buffers
+    regions = {"grid_in": Region("grid_in", grid_bytes, "stream"),
+               "grid_out": Region("grid_out", grid_bytes, "stream")}
+    for d in ("n", "s", "e", "w"):
+        regions[f"halo_{d}_send"] = Region(
+            f"halo_{d}_send", n * RADIUS * cell_bytes, "stream")
+        regions[f"halo_{d}_recv"] = Region(
+            f"halo_{d}_recv", n * RADIUS * cell_bytes, "stream")
+    regions["weights"] = Region("weights", (2 * RADIUS + 1) ** 2 * 8, "gather")
+    regions["params"] = Region("params", 1024, "gather")
+    tasks = [
+        Task("stencil", flops_stencil,
+             reads=("grid_in", "weights", "halo_n_recv", "halo_s_recv",
+                    "halo_e_recv", "halo_w_recv"),
+             writes=("grid_out", "halo_n_send", "halo_s_send",
+                     "halo_e_send", "halo_w_send"),
+             parallel_fraction=0.999, launches=n_devices),
+        Task("add", flops_add, reads=("grid_in", "params"),
+             writes=("grid_in",), parallel_fraction=0.999,
+             launches=n_devices),
+    ]
+    return TaskGraphApp("stencil", tasks, regions, n_devices, iterations)
+
+
+EXPERT_MAPPER = """
+# Expert stencil mapper: both tasks on the accelerators, grids partitioned
+# in FBMEM, halos in ZCMEM for neighbour access, SOA streaming layout.
+Task stencil GPU;
+Task add GPU;
+Region stencil * GPU FBMEM;
+Region add * GPU FBMEM;
+Region stencil halo_n_recv GPU ZCMEM;
+Region stencil halo_s_recv GPU ZCMEM;
+Region stencil halo_e_recv GPU ZCMEM;
+Region stencil halo_w_recv GPU ZCMEM;
+Layout * * * SOA C_order Align==64;
+mgpu = Machine(GPU);
+def block2d(Tuple ipoint, Tuple ispace) {
+  idx = ipoint * mgpu.size / ispace;
+  return mgpu[*idx];
+}
+IndexTaskMap stencil block2d;
+"""

@@ -1,0 +1,172 @@
+"""Task-graph application model: the workloads of paper §5.2.
+
+A :class:`TaskGraphApp` describes an iterative scientific application as
+tasks (with FLOP / byte footprints) over data regions.  A DSL MappingPlan
+binds to it exactly as Legion mappers bind to applications:
+
+  Task <name> <proc>       executes the task on TP (all chips), DP (data
+                           replicas), or INLINE (one chip)
+  Region <task> <r> <mem>  SHARD (FBMEM): partitioned HBM, fast access,
+                           cross-task transfer when producers/consumers
+                           live on different processor sets;
+                           REPL (ZCMEM): shared access -- free reads from
+                           every chip, broadcast cost on writes, P-fold
+                           memory footprint;
+                           HOST (SYSMEM): PCIe-speed access, no HBM use
+  Layout ... SOA/AOS/F/C   vector-unit efficiency / stride penalties
+  InstanceLimit t n        caps task concurrency (serialization factor)
+
+``evaluate_plan`` returns modeled seconds per iteration and raises the
+paper's Execution Error on HBM overflow.  The model constants are the
+roofline constants of launch/roofline.py; the real JAX implementations of
+each app (stencil.py, circuit.py, pennant.py) validate numerics and
+provide measured wall time at host scale.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.dsl.errors import ExecutionError
+from ..core.mapping.plan import MappingPlan
+
+CHIP_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HOST_BW = 8e9            # PCIe-ish
+LAUNCH_OVERHEAD = 5e-6   # per task launch
+HBM_BYTES = 16 * (1 << 30)
+
+
+@dataclass(frozen=True)
+class Region:
+    name: str
+    bytes: int
+    # access pattern: "stream" likes SOA/C, "gather" likes AOS/F
+    pattern: str = "stream"
+
+
+@dataclass(frozen=True)
+class Task:
+    name: str
+    flops: float
+    reads: Tuple[str, ...]
+    writes: Tuple[str, ...]
+    parallel_fraction: float = 1.0   # Amdahl
+    launches: int = 1                # index-task launch count
+
+
+@dataclass
+class TaskGraphApp:
+    name: str
+    tasks: List[Task]
+    regions: Dict[str, Region]
+    n_devices: int = 8
+    iterations: int = 1
+
+    def region(self, name: str) -> Region:
+        return self.regions[name]
+
+
+def _access_seconds(region: Region, mem: str, n: int, write: bool,
+                    inline: bool = False) -> float:
+    b = region.bytes
+    if mem == "HOST":
+        return b / HOST_BW
+    if mem == "REPL":
+        if write:
+            return b * (n - 1) / n / ICI_BW + b / HBM_BW  # broadcast + store
+        return b / n / HBM_BW if not inline else b / HBM_BW
+    # SHARD: partitioned; each chip touches its slice.  A single-chip
+    # (INLINE) task must gather the whole region over the interconnect.
+    if inline:
+        return b * (n - 1) / n / ICI_BW + b / HBM_BW
+    return b / n / HBM_BW
+
+
+def _placement(plan: MappingPlan, task: str, region: str, proc: str) -> str:
+    """Placement with proc-dependent default: a task with no matching
+    Region statement for its processor gets FBMEM semantics on the
+    accelerators and SYSMEM on INLINE (the Legion default-mapper rule)."""
+    p = plan.placement_lookup(task, region, proc)
+    if p is not None:
+        return p.memory
+    return "SHARD" if proc in ("TP", "DP", "SP", "ANY") else "HOST"
+
+
+def _layout_factor(region: Region, plan: MappingPlan, task: str,
+                   proc: str) -> float:
+    spec = plan.layout_for(task, region.name, proc)
+    f = 1.0
+    if region.pattern == "stream":
+        if not spec.soa:
+            f *= 1.6          # AOS breaks vectorized streams
+        if spec.order == "F":
+            f *= 1.3          # strided access
+    else:  # gather pattern
+        if spec.soa:
+            f *= 1.25         # AOS keeps struct fields together
+        if spec.order == "C":
+            f *= 1.1
+    if spec.align and spec.align >= 64:
+        f *= 0.95             # aligned vector loads
+    return f
+
+
+def evaluate_plan(app: TaskGraphApp, plan: MappingPlan) -> float:
+    """Modeled seconds per iteration of the app under this mapping."""
+    n = app.n_devices
+    hbm_per_dev = 0.0
+    for rname, region in app.regions.items():
+        # placement as seen by the tasks that touch it most (first toucher)
+        toucher = next((t.name for t in app.tasks
+                        if rname in t.reads + t.writes), "*")
+        procs = plan.procs_for(toucher)
+        proc = procs[0] if procs else "TP"
+        mem = _placement(plan, toucher, rname, proc)
+        if mem == "REPL":
+            hbm_per_dev += region.bytes
+        elif mem == "SHARD":
+            hbm_per_dev += region.bytes / n
+        # HOST: no HBM
+    if hbm_per_dev > HBM_BYTES:
+        raise ExecutionError(
+            f"out of memory -- regions need {hbm_per_dev/2**30:.1f} GiB "
+            f"per chip, exceeds HBM capacity 16 GiB")
+
+    total = 0.0
+    for task in app.tasks:
+        procs = plan.procs_for(task.name)
+        proc = procs[0] if procs else "TP"
+        limit = plan.instance_limit_for(task.name)
+        if proc in ("TP", "DP", "SP"):
+            par = n if proc == "TP" else max(n // 2, 1)
+            if limit:
+                par = min(par, limit)
+            eff = task.parallel_fraction
+            compute = task.flops * (eff / par + (1 - eff)) / CHIP_FLOPS
+            launch = LAUNCH_OVERHEAD * task.launches
+        else:  # INLINE: single chip, no launch overhead
+            compute = task.flops / CHIP_FLOPS
+            launch = 0.0
+        inline = proc not in ("TP", "DP", "SP", "ANY")
+        mem_t = 0.0
+        for rname in task.reads:
+            region = app.region(rname)
+            mem = _placement(plan, task.name, rname, proc)
+            mem_t += _access_seconds(region, mem, n, write=False,
+                                     inline=inline) * \
+                _layout_factor(region, plan, task.name, proc)
+        for rname in task.writes:
+            region = app.region(rname)
+            mem = _placement(plan, task.name, rname, proc)
+            mem_t += _access_seconds(region, mem, n, write=True,
+                                     inline=inline) * \
+                _layout_factor(region, plan, task.name, proc)
+        total += max(compute, mem_t) + launch
+    return total * app.iterations
+
+
+def throughput(app: TaskGraphApp, plan: MappingPlan) -> float:
+    return 1.0 / evaluate_plan(app, plan)

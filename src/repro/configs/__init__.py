@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from ..models.config import ModelConfig
+from .shapes import SHAPES, ShapeSpec, cell_supported, input_specs, \
+    abstract_caches
+
+ARCH_MODULES: Dict[str, str] = {
+    "whisper-small": "whisper_small",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen3-14b": "qwen3_14b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_MODULES)}")
+    mod = importlib.import_module(f".{ARCH_MODULES[arch]}", __package__)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_cells():
+    """Every (arch, shape) pair with its skip reason (None = runs)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            out.append((arch, shape, cell_supported(cfg, shape)))
+    return out
+
+
+__all__ = [
+    "ARCH_IDS", "ARCH_MODULES", "get_config", "all_cells", "SHAPES",
+    "ShapeSpec", "cell_supported", "input_specs", "abstract_caches",
+]

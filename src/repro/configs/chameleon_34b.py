@@ -1,0 +1,26 @@
+"""chameleon-34b [vlm] -- 48L d8192 64H (kv=8) ff22016 vocab=65536.
+Early-fusion VLM: VQ image tokens arrive as precomputed token ids from the
+stub frontend (input_specs); backbone is a dense decoder with qk-norm.
+[arXiv:2405.09818]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    mlp_act="silu_glu",
+    qk_norm=True,
+    frontend="vq_tokens",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=192, vocab_size=512,
+)

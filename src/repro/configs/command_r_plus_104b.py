@@ -1,0 +1,23 @@
+"""command-r-plus-104b [dense] -- 64L d12288 96H (kv=8) ff33792
+vocab=256000.  GQA, no biases.  [hf:CohereForAI/c4ai-command-r-plus]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    mlp_act="silu_glu",
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=128, num_heads=8, num_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512,
+)

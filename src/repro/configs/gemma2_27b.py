@@ -1,0 +1,30 @@
+"""gemma2-27b [dense] -- 46L d4608 32H (kv=16) ff36864 vocab=256000.
+Local+global alternating attention, logit softcaps, sandwich norms.
+[arXiv:2408.00118]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab_size=256000,
+    mlp_act="gelu_glu",
+    layer_pattern=("local", "attn"),
+    local_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    use_post_norms=True,
+    tie_embeddings=True,
+    scale_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512, local_window=8,
+)

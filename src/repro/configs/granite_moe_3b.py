@@ -1,0 +1,26 @@
+"""granite-moe-3b-a800m [moe] -- 32L d1536 24H (kv=8) per-expert ff=512
+vocab=49155, 40 experts top-8.  [hf:ibm-granite/granite-3.0-3b-a800m-base]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    mlp_act="silu_glu",
+    num_experts=40,
+    top_k=8,
+    layer_pattern=("moe",),
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=64, vocab_size=512, num_experts=8, top_k=2,
+)

@@ -1,0 +1,25 @@
+"""mamba2-2.7b [ssm] -- 64L d2560, attention-free, vocab=50280,
+ssm_state=128 (SSD, state-space duality).  [arXiv:2405.21060]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    vocab_size=50280,
+    layer_pattern=("ssm",),
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_groups=1,
+    ssm_chunk=256,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, vocab_size=512, ssm_state=16, ssm_headdim=16,
+    ssm_chunk=8,
+)

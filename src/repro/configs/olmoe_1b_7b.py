@@ -1,0 +1,25 @@
+"""olmoe-1b-7b [moe] -- 16L d2048 16H (kv=16) per-expert ff=1024
+vocab=50304, 64 experts top-8.  [arXiv:2409.02060]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50304,
+    mlp_act="silu_glu",
+    num_experts=64,
+    top_k=8,
+    layer_pattern=("moe",),
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=64, vocab_size=512, num_experts=8, top_k=2,
+)

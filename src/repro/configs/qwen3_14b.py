@@ -1,0 +1,23 @@
+"""qwen3-14b [dense] -- 40L d5120 40H (kv=8) ff17408 vocab=151936.
+QK-norm, GQA.  [hf:Qwen/Qwen3-14B]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    vocab_size=151936,
+    mlp_act="silu_glu",
+    qk_norm=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=192, vocab_size=512,
+)

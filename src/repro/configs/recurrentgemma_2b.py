@@ -1,0 +1,30 @@
+"""recurrentgemma-2b [hybrid] -- 26L d2560 10H (kv=1, MQA) ff7680
+vocab=256000.  RG-LRU + local attention, pattern (rec, rec, local) with
+window 2048.  [arXiv:2402.19427]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    mlp_act="gelu_glu",
+    layer_pattern=("rec", "rec", "local"),
+    local_window=2048,
+    rnn_width=2560,
+    rnn_conv=4,
+    rnn_blocks=10,
+    tie_embeddings=True,
+    scale_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=6, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=128, vocab_size=512, local_window=8, rnn_width=64, rnn_blocks=4,
+)

@@ -1,0 +1,88 @@
+"""Assigned input-shape sets and abstract input specs for the dry-run.
+
+Four shapes per LM architecture (40 cells total):
+
+    train_4k      seq_len=4096    global_batch=256   -> train_step
+    prefill_32k   seq_len=32768   global_batch=32    -> prefill_step
+    decode_32k    seq_len=32768   global_batch=128   -> serve_step (1 token,
+                                                        KV cache of seq_len)
+    long_500k     seq_len=524288  global_batch=1     -> serve_step; only for
+                                                        sub-quadratic archs
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins --
+no device allocation, shardable, suitable for .lower().
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason (recorded in
+    EXPERIMENTS.md -- see DESIGN.md §Arch-applicability)."""
+    s = SHAPES[shape_name]
+    if s.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 500k decode requires sub-quadratic "
+                "attention (skip per spec)")
+    return None
+
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Abstract inputs for the cell's step function.
+
+    train/prefill: {"tokens": [B, S]} (+ "frames" [B, S_enc, D] for
+    enc-dec / audio stubs).  decode: {"tokens": [B, 1], "index": scalar}
+    (the serve caches are built separately by the launcher, abstractly).
+    """
+    s = SHAPES[shape_name]
+    b = s.global_batch
+    if cfg.is_encoder_decoder:
+        # seq_len applies to the encoder frame axis; decoder = target len.
+        if s.step in ("train", "prefill"):
+            return {
+                "tokens": _tok((b, cfg.max_target_len)),
+                "frames": jax.ShapeDtypeStruct(
+                    (b, s.seq_len, cfg.d_model), jnp.dtype(cfg.dtype)),
+            }
+        return {"tokens": _tok((b, 1))}
+    if s.step in ("train", "prefill"):
+        return {"tokens": _tok((b, s.seq_len))}
+    return {"tokens": _tok((b, 1))}
+
+
+def abstract_caches(cfg: ModelConfig, shape_name: str, order: str = "C"):
+    """Abstract (ShapeDtypeStruct) serve caches for a decode cell."""
+    from ..models.registry import init_serve_caches
+    s = SHAPES[shape_name]
+    enc_len = s.seq_len if cfg.is_encoder_decoder else 0
+    max_len = cfg.max_target_len if cfg.is_encoder_decoder else s.seq_len
+    return jax.eval_shape(
+        lambda: init_serve_caches(cfg, s.global_batch, max_len, order=order,
+                                  enc_len=enc_len))

@@ -1,0 +1,22 @@
+"""stablelm-1.6b [dense] -- 24L d2048 32H (kv=32) ff5632 vocab=100352.
+[hf:stabilityai/stablelm-2-1_6b]"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100352,
+    mlp_act="silu_glu",
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=192, vocab_size=512,
+)

@@ -1,0 +1,31 @@
+"""whisper-small [audio] -- enc-dec transformer backbone, conv frontend
+stubbed (input_specs supplies precomputed frame embeddings).
+[arXiv:2212.04356]
+
+Deviations noted in DESIGN.md: RoPE replaces learned/sinusoidal positions;
+attention/MLP biases omitted (systems-irrelevant)."""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    num_encoder_layers=12,
+    is_encoder_decoder=True,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    mlp_act="gelu",
+    vocab_size=51865,
+    max_target_len=448,
+    frontend="audio_frames",
+    layer_pattern=("attn",),
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, num_encoder_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512, max_target_len=16,
+)

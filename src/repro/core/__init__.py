@@ -1,0 +1,5 @@
+# The paper's primary contribution: the mapping DSL (agent-system
+# interface), the MapperAgent, LLM-optimizer search, and the feedback
+# machinery.  See DESIGN.md for the TPU adaptation table.
+from . import dsl, mapping, agent  # noqa: F401
+from .evaluator import LMCellEvaluator, CallableEvaluator  # noqa: F401

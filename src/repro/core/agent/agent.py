@@ -1,0 +1,120 @@
+"""The MapperAgent (paper Fig. 5a / Fig. A6): decision bundles that render
+a DSL mapper.
+
+Each decision procedure is a trainable Bundle; ``generate_mapper()`` is the
+forward pass combining all code statements.  The same agent template is the
+shared starting point for every task (paper A.8 note); optimizers mutate
+bundle values to specialize it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..mapping import space
+from .trace_lite import Bundle, Module
+
+
+def _render_tasks(value: Dict, app) -> str:
+    lines = []
+    for stage, proc in value.items():
+        if app is not None and stage not in app.get("stages", value):
+            continue
+        lines.append(f"Task {stage} {proc};")
+    return "\n".join(lines)
+
+
+def _render_regions(value: Dict, app) -> str:
+    lines = [f"Region step weights TP {value['weights']};"]
+    act = value["activations"]
+    if act == "REMAT":
+        lines.append("Region step activations TP REMAT;")
+    else:
+        lines.append(f"Region step activations TP {act};")
+    lines.append(f"Region decode kv_cache TP {value['kv_cache']};")
+    return "\n".join(lines)
+
+
+def _render_layouts(value: Dict, app) -> str:
+    lines = [f"Layout decode kv_cache * {value['kv_order']};"]
+    if value.get("scores", "default") != "default":
+        order = "C_order" if value["scores"] == "chunked" else "F_order"
+        lines.append(f"Layout attention scores * {order};")
+    if value.get("act_order", "SOA") == "AOS":
+        lines.append("Layout step activations * AOS;")
+    return "\n".join(lines)
+
+
+def _render_instance_limit(value: Dict, app) -> str:
+    n = int(value.get("microbatches", 1))
+    return f"InstanceLimit step {n};" if n > 1 else ""
+
+
+def _render_index_maps(value: Dict, app) -> str:
+    kind = value.get("experts", "block")
+    lines = [
+        "mtpu = Machine(TPU);",
+        "mlin = mtpu.merge(0, 1);",
+    ]
+    if kind == "cyclic":
+        lines += [
+            "def experts_map(Tuple ipoint, Tuple ispace) {",
+            "  idx = ipoint % mlin.size;",
+            "  return mlin[*idx];",
+            "}",
+        ]
+    else:
+        lines += [
+            "def experts_map(Tuple ipoint, Tuple ispace) {",
+            "  idx = ipoint * mlin.size / ispace;",
+            "  return mlin[*idx];",
+            "}",
+        ]
+    lines.append("IndexTaskMap experts experts_map;")
+    return "\n".join(lines)
+
+
+class MapperAgent(Module):
+    """Generates LM mappers; bundles follow the paper's decomposition."""
+
+    def __init__(self, decisions: Optional[Dict] = None, app: Optional[Dict] = None):
+        d = decisions or space.default_decisions()
+        self.app = app or {}
+        self.task_decision = Bundle(
+            "task_decision",
+            {s: space.PROC_CHOICES for s in space.STAGES},
+            d["task_decision"], _render_tasks)
+        self.region_decision = Bundle(
+            "region_decision",
+            {"weights": space.WEIGHT_MEM, "activations": space.ACT_MEM,
+             "kv_cache": space.KV_MEM},
+            d["region_decision"], _render_regions)
+        self.layout_decision = Bundle(
+            "layout_decision",
+            {"kv_order": space.ORDERS, "scores": space.SCORES_LAYOUT},
+            d["layout_decision"], _render_layouts)
+        self.instance_limit_decision = Bundle(
+            "instance_limit_decision", {"microbatches": space.MICRO},
+            d["instance_limit_decision"], _render_instance_limit)
+        self.index_task_map_decision = Bundle(
+            "index_task_map_decision", {"experts": space.EXPERT_MAPS},
+            d["index_task_map_decision"], _render_index_maps)
+
+    def generate_mapper(self) -> Dict[str, str]:
+        """Forward pass: bundle name -> emitted statements."""
+        outputs = {}
+        for b in self.bundles():
+            outputs[b.name] = b.forward(self.app)
+        return outputs
+
+    def mapper_text(self) -> str:
+        outputs = self.generate_mapper()
+        order = ["task_decision", "region_decision", "layout_decision",
+                 "instance_limit_decision", "index_task_map_decision"]
+        return "\n".join(outputs[k] for k in order if outputs.get(k))
+
+    def decisions(self) -> Dict[str, Dict]:
+        return self.parameters()
+
+    def set_decisions(self, d: Dict[str, Dict]):
+        self.load_parameters(d)

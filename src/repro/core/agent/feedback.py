@@ -1,0 +1,137 @@
+"""System feedback + enhanced feedback (paper §4.2, Table 2 / Table A1).
+
+Three system-feedback categories:
+  1. Compile Error   -- the mapper failed to parse/compile in the DSL
+  2. Execution Error -- the mapper compiled but the system rejected it
+                        (OOM, bad index map, sharding mismatch)
+  3. Performance Metric -- step time / throughput of the mapped program
+
+Enhanced feedback adds keyword-matched *explanations* and *suggestions*
+(the paper implements these "via keyword matching, where system feedback
+triggers the corresponding explanations and suggestions").  The ablation
+levels (System / +Explain / +Explain+Suggest) mirror Fig. 8.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+@dataclass
+class Feedback:
+    system: str
+    explain: str = ""
+    suggest: str = ""
+    score: Optional[float] = None     # seconds (lower better); None on error
+
+    def render(self, level: str = "full") -> str:
+        parts = [self.system]
+        if level in ("explain", "full") and self.explain:
+            parts.append("Explanation: " + self.explain)
+        if level == "full" and self.suggest:
+            parts.append("Suggestion: " + self.suggest)
+        return "\n".join(parts)
+
+
+# (pattern, explain, suggest) -- matched against the system feedback text.
+ENHANCE_RULES: List[Tuple[str, str, str]] = [
+    (r"Syntax error, unexpected ':'",
+     "",
+     "There should be no colon in brace-style function definitions; use "
+     "{ ... } or end the colon-form body with a return statement."),
+    (r"Syntax error",
+     "The mapper is not a valid DSL program.",
+     "Emit only Task/Region/Layout/IndexTaskMap statements terminated by "
+     "';' and def functions with braces."),
+    (r"IndexTaskMap's function undefined",
+     "",
+     "Define the IndexTaskMap function first before using it."),
+    (r"not found",
+     "",
+     "Include mtpu = Machine(TPU); in the generated code before using it."),
+    (r"index out of bound",
+     "IndexTaskMap statements cause error.",
+     "Ensure the first index ends with % m.size[0] and the second with "
+     "% m.size[1]."),
+    (r"out of memory|exceeds HBM",
+     "The mapped step does not fit per-device HBM.",
+     "Move activations to REMAT (Region step activations TP REMAT;), raise "
+     "InstanceLimit step <n>; to split the batch into microbatches, keep "
+     "weights in FBMEM (sharded) rather than ZCMEM (replicated), or Task "
+     "attention SP; to shard replicated activations over the model axis."),
+    (r"unknown processor|unknown memory|unknown layout",
+     "A statement uses an identifier outside the DSL vocabulary.",
+     "Use processors {TP, DP, SP, INLINE}, memories {FBMEM, ZCMEM, SYSMEM, "
+     "REMAT}, layouts {SOA, AOS, C_order, F_order, Align==<n>}."),
+    (r"tuple arity mismatch|expects \d+ args",
+     "IndexTaskMap function arity does not match the iteration space.",
+     "Take (Task task) or (Tuple ipoint, Tuple ispace) and index the "
+     "machine with the right rank."),
+    (r"collective term dominates",
+     "Inter-chip communication is the bottleneck for this mapping.",
+     "Reduce cross-chip traffic: Task attention SP; (sequence parallelism "
+     "turns TP all-reduces into reduce-scatters), or place small stages "
+     "INLINE, or use ZCMEM weights to trade memory for gathers, or pick a "
+     "blocked IndexTaskMap so neighbouring tiles land on neighbouring "
+     "chips."),
+    (r"memory term dominates",
+     "HBM traffic is the bottleneck for this mapping.",
+     "Layout attention scores * C_order; (chunked online-softmax attention "
+     "keeps scores out of HBM), Region step activations TP REMAT; to trade "
+     "FLOPs for traffic, or F_order KV cache for seq-major locality."),
+    (r"compute term dominates",
+     "The mapping is close to the compute roofline.",
+     "Remove recompute waste: Region step activations TP FBMEM; if memory "
+     "allows (useful_flops_ratio < 1 indicates remat overhead), and lower "
+     "InstanceLimit to cut per-microbatch overheads."),
+    (r"Execution time|throughput",
+     "",
+     "Move more stages to TP to reduce execution time, or try different "
+     "IndexTaskMap functions to maximize throughput."),
+]
+
+
+def enhance(system: str, score: Optional[float] = None,
+            extra_explain: str = "") -> Feedback:
+    """Keyword-match the rules against system feedback (+ any
+    already-derived explanation): the paper's enhanced-feedback layer."""
+    explains = [extra_explain] if extra_explain else []
+    suggests = []
+    probe = system + "\n" + extra_explain
+    for pat, exp, sug in ENHANCE_RULES:
+        if re.search(pat, probe, re.IGNORECASE):
+            if exp:
+                explains.append(exp)
+            if sug:
+                suggests.append(sug)
+            if len(suggests) >= 2:
+                break
+    return Feedback(system=system, explain=" ".join(explains),
+                    suggest=" ".join(suggests), score=score)
+
+
+def performance_feedback(report) -> Feedback:
+    """Build the Performance Metric feedback from a RooflineReport.
+
+    The raw numbers are System feedback; the bottleneck interpretation is
+    the Explain channel (ablated away at the 'system' level, Fig. 8)."""
+    t = report.step_time_s
+    sys_txt = (
+        f"Performance Metric: step time {t*1e3:.1f} ms "
+        f"(compute {report.compute_s*1e3:.1f} ms, memory "
+        f"{report.memory_s*1e3:.1f} ms, collective "
+        f"{report.collective_s*1e3:.1f} ms). "
+        f"useful_flops_ratio={report.useful_flops_ratio:.2f}, "
+        f"roofline_fraction={report.roofline_fraction:.3f}."
+    )
+    explain = f"The {report.bottleneck} term dominates the step time."
+    return enhance(sys_txt, score=t, extra_explain=explain)
+
+
+def error_feedback(err: Exception) -> Feedback:
+    from ..dsl.errors import DSLError
+    if isinstance(err, DSLError):
+        return enhance(err.feedback())
+    return enhance(f"Execution Error: {err}")

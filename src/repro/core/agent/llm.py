@@ -1,0 +1,114 @@
+"""Pluggable LLM proposal backend.
+
+The paper uses gpt-4o as the optimizer brain.  This container is offline,
+so the default backend is :class:`HeuristicLLM` -- a deterministic proposal
+engine that consumes the *same enhanced-feedback text* the LLM would see
+and applies the suggestions via keyword rules (i.e. the paper's
+"Suggest" channel closed-loop).  A real client implements
+:class:`LLMClient.propose` with an API call; everything else (agent,
+feedback, optimizers, evaluators) is backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import random
+import re
+from typing import Dict, List, Optional, Protocol, Tuple
+
+from ..mapping import space
+
+
+class LLMClient(Protocol):
+    def propose(self, prompt: str, decisions: Dict[str, Dict],
+                rng: random.Random) -> Dict[str, Dict]:
+        """Given the optimizer prompt (history + feedback), return new
+        decisions for the agent's trainable bundles."""
+        ...
+
+
+class HeuristicLLM:
+    """Deterministic feedback-following proposer.
+
+    Rule table: feedback keyword -> decision edit.  When no rule fires, it
+    falls back to a single random mutation (exploration), mirroring how an
+    LLM optimizer explores when feedback is uninformative.
+    """
+
+    name = "heuristic"
+
+    def __init__(self, rules=None, neighbor_fn=None):
+        if rules is not None:
+            self._RULES = rules
+        self._neighbor_fn = neighbor_fn or (
+            lambda d, rng, k=1: space.neighbors(d, rng, k))
+
+    _RULES: List[Tuple[str, Dict]] = [
+        (r"collective term dominates",
+         {"try": [("task_decision", "attention", "SP"),
+                  ("instance_limit_decision", "microbatches", 1),
+                  ("task_decision", "embed", "INLINE"),
+                  ("task_decision", "lm_head", "INLINE"),
+                  ("region_decision", "weights", "ZCMEM"),
+                  ("task_decision", "mlp", "DP")]}),
+        (r"memory term dominates",
+         {"try": [("layout_decision", "scores", "chunked"),
+                  ("region_decision", "activations", "REMAT"),
+                  ("layout_decision", "kv_order", "F_order"),
+                  ("instance_limit_decision", "microbatches", 4)]}),
+        (r"compute term dominates",
+         {"try": [("region_decision", "activations", "FBMEM"),
+                  ("instance_limit_decision", "microbatches", 1)]}),
+        (r"out of memory|exceeds HBM",
+         {"try": [("region_decision", "activations", "REMAT"),
+                  ("instance_limit_decision", "microbatches", 8),
+                  ("region_decision", "weights", "FBMEM"),
+                  ("task_decision", "attention", "SP"),
+                  ("instance_limit_decision", "microbatches", 16)]}),
+        (r"Move more stages to TP|Move more tasks",
+         {"try": [("task_decision", "mlp", "TP"),
+                  ("task_decision", "attention", "TP"),
+                  ("task_decision", "moe", "TP")]}),
+    ]
+
+    def propose(self, prompt: str, decisions: Dict[str, Dict],
+                rng: random.Random) -> Dict[str, Dict]:
+        import copy
+        out = copy.deepcopy(decisions)
+        fired = False
+        for pat, action in self._RULES:
+            if not re.search(pat, prompt, re.IGNORECASE):
+                continue
+            # An LLM rewrites one decision procedure (Trace bundle) per
+            # step: apply the rule's pending edits for the first bundle
+            # that still has any, leaving later bundles for next steps.
+            bundle = None
+            for mod, key, val in action["try"]:
+                if out.get(mod, {}).get(key) != val:
+                    if bundle is None:
+                        bundle = mod
+                    if mod != bundle:
+                        break
+                    out[mod][key] = val
+                    fired = True
+            if fired:
+                break
+        if not fired:
+            out = self._neighbor_fn(out, rng, 1)
+        return out
+
+
+class ScriptedLLM:
+    """Replay a fixed list of decision edits (tests / ablations)."""
+
+    name = "scripted"
+
+    def __init__(self, edits: List[Tuple[str, str, object]]):
+        self.edits = list(edits)
+
+    def propose(self, prompt, decisions, rng):
+        import copy
+        out = copy.deepcopy(decisions)
+        if self.edits:
+            mod, key, val = self.edits.pop(0)
+            out[mod][key] = val
+        return out

@@ -1,0 +1,209 @@
+"""LLM-optimizer search algorithms over the mapper space (paper §4.2/§5).
+
+* ``OPROSearch``  -- OPRO (Yang et al.): the optimizer sees a history of
+  (solution, score) pairs plus the latest feedback and proposes the next
+  solution; here the proposal backend is the pluggable LLMClient.
+* ``TraceSearch`` -- Trace (Cheng et al.): feedback is propagated to the
+  *responsible bundle* (per-module credit assignment from the roofline
+  bottleneck / error node), and only implicated bundles are mutated.
+* ``RandomSearch`` -- the paper's random-mapper baseline.
+* ``AnnealingSearch`` -- classic single-mutation simulated annealing
+  (a non-LLM discrete-optimization baseline, beyond the paper).
+
+All drive the same loop (paper Fig. 5b):
+    mapper = agent(app); feedback = evaluate(mapper);
+    optimizer.zero_feedback(); optimizer.backward(feedback);
+    optimizer.step().
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from ..mapping import space
+from .agent import MapperAgent
+from .feedback import Feedback
+from .llm import HeuristicLLM, LLMClient
+from .trace_lite import TraceGraph, TraceRecord
+
+# bundle credit assignment: feedback category -> implicated bundles
+# (ordered: the FIRST matching category wins, mirroring how Trace
+# back-propagates feedback to the node that produced the failing code)
+_CREDIT = (
+    (r"IndexTaskMap's function undefined|index out of bound|tuple index",
+     ("index_task_map_decision",)),
+    (r"out of memory|exceeds HBM",
+     ("region_decision", "instance_limit_decision", "layout_decision")),
+    (r"collective term",
+     ("task_decision", "region_decision", "index_task_map_decision")),
+    (r"memory term",
+     ("layout_decision", "region_decision", "instance_limit_decision")),
+    (r"compute term", ("region_decision", "instance_limit_decision")),
+    (r"Syntax", ("task_decision", "region_decision", "layout_decision")),
+    (r"Execution time|step time",
+     ("task_decision", "region_decision")),
+)
+
+
+@dataclass
+class SearchResult:
+    graph: TraceGraph
+    best_mapper: str
+    best_score: float
+    best_decisions: Dict
+    trajectory: List[float] = field(default_factory=list)
+
+
+class Search:
+    name = "base"
+
+    def __init__(self, seed: int = 0, feedback_level: str = "full",
+                 llm: Optional[LLMClient] = None,
+                 random_fn: Optional[Callable[[int], Dict]] = None,
+                 neighbor_fn: Optional[Callable] = None):
+        self.rng = random.Random(seed)
+        self.feedback_level = feedback_level
+        self.llm = llm or HeuristicLLM()
+        self.random_fn = random_fn or space.random_decisions
+        self.neighbor_fn = neighbor_fn or space.neighbors
+
+    # -- subclass hook -------------------------------------------------------
+    def propose(self, agent: MapperAgent, graph: TraceGraph) -> Dict:
+        raise NotImplementedError
+
+    # -- main loop (paper Fig. 5b) ------------------------------------------
+    def run(self, agent: MapperAgent,
+            evaluate: Callable[[str], Feedback],
+            iterations: int = 10) -> SearchResult:
+        graph = TraceGraph()
+        trajectory: List[float] = []
+        best_valid = None
+        seen_texts = set()
+        for it in range(iterations):
+            if it > 0:
+                proposal = self.propose(agent, graph)
+                # avoid re-evaluating stale candidates: explore if the
+                # proposal renders a mapper we already tried
+                for _ in range(8):
+                    agent.set_decisions(proposal)
+                    if agent.mapper_text() not in seen_texts:
+                        break
+                    proposal = self.neighbor_fn(proposal, self.rng, k=1)
+                agent.set_decisions(proposal)
+            outputs = agent.generate_mapper()
+            mapper = agent.mapper_text()
+            seen_texts.add(mapper)
+            fb = evaluate(mapper)
+            rec = TraceRecord(values=agent.decisions(), outputs=outputs,
+                              mapper=mapper, score=fb.score,
+                              feedback=fb.render(self.feedback_level))
+            graph.add(rec)
+            if fb.score is not None and (best_valid is None
+                                         or fb.score < best_valid):
+                best_valid = fb.score
+            trajectory.append(best_valid if best_valid is not None
+                              else float("inf"))
+        best = graph.best()
+        return SearchResult(
+            graph=graph,
+            best_mapper=best.mapper if best else "",
+            best_score=best.score if best else float("inf"),
+            best_decisions=best.values if best else {},
+            trajectory=trajectory,
+        )
+
+
+class RandomSearch(Search):
+    name = "random"
+
+    def propose(self, agent, graph):
+        return self.random_fn(self.rng.randrange(1 << 30))
+
+
+class OPROSearch(Search):
+    """History-of-solutions prompt -> LLM proposal, restarted from the best
+    known solution each step (OPRO keeps the top-k trajectory in prompt)."""
+
+    name = "opro"
+
+    def _prompt(self, graph: TraceGraph) -> str:
+        lines = ["Optimize the mapper. History (decisions -> score):"]
+        scored = sorted(
+            [r for r in graph.records if r.score is not None],
+            key=lambda r: r.score)[:5]
+        for r in scored:
+            lines.append(f"  score={r.score:.4f}s")
+        last = graph.last()
+        if last is not None:
+            lines.append("Latest feedback:\n" + last.feedback)
+        return "\n".join(lines)
+
+    def propose(self, agent, graph):
+        base = graph.best() or graph.last()
+        decisions = base.values if base else agent.decisions()
+        return self.llm.propose(self._prompt(graph), decisions, self.rng)
+
+
+class TraceSearch(Search):
+    """Per-bundle credit assignment: mutate only the bundles implicated by
+    the latest feedback (Trace's graph backward), via the LLM backend."""
+
+    name = "trace"
+
+    def propose(self, agent, graph):
+        import copy, re
+        base = graph.best() or graph.last()
+        decisions = copy.deepcopy(base.values if base else agent.decisions())
+        last = graph.last()
+        feedback = last.feedback if last else ""
+        implicated = set()
+        for pat, bundles in _CREDIT:
+            if re.search(pat, feedback, re.IGNORECASE):
+                implicated.update(bundles)
+                break  # first (most specific) category wins
+        proposal = self.llm.propose(feedback, decisions, self.rng)
+        if not implicated:
+            return proposal
+        # keep proposal edits only on implicated bundles
+        out = copy.deepcopy(decisions)
+        for b in implicated:
+            if b in proposal:
+                out[b] = proposal[b]
+        if out == decisions:  # no effective edit: explore one implicated axis
+            out = self.neighbor_fn(out, self.rng, k=1)
+        return out
+
+
+class AnnealingSearch(Search):
+    name = "annealing"
+
+    def __init__(self, seed: int = 0, feedback_level: str = "full",
+                 llm=None, t0: float = 1.0, cooling: float = 0.7, **kw):
+        super().__init__(seed, feedback_level, llm, **kw)
+        self.t0 = t0
+        self.cooling = cooling
+        self._current: Optional[Dict] = None
+        self._current_score = float("inf")
+        self._step = 0
+
+    def propose(self, agent, graph):
+        last = graph.last()
+        if last and last.score is not None:
+            t = self.t0 * (self.cooling ** self._step)
+            accept = (last.score < self._current_score or
+                      self.rng.random() < math.exp(
+                          -(last.score - self._current_score)
+                          / max(t * max(self._current_score, 1e-9), 1e-12)))
+            if accept:
+                self._current = last.values
+                self._current_score = last.score
+        self._step += 1
+        base = self._current or agent.decisions()
+        return self.neighbor_fn(base, self.rng, k=1)
+
+
+SEARCHES = {c.name: c for c in
+            (RandomSearch, OPROSearch, TraceSearch, AnnealingSearch)}

@@ -1,0 +1,99 @@
+"""Minimal Trace-style machinery (Cheng et al., 2024).
+
+The paper builds its MapperAgent on Trace: Python methods decorated with
+``@bundle(trainable=True)`` are the *parameters* of an agent; at each
+optimization step an LLM rewrites trainable bundles given the execution
+graph and feedback.
+
+This module reproduces the interface at the granularity the mapper agent
+needs: a :class:`Bundle` is a named, trainable decision procedure whose
+*parameter* is a structured value (the decision dict) and whose *forward*
+renders DSL statements.  The execution graph (which bundle produced which
+statements, and what feedback the system returned) is recorded in a
+:class:`TraceGraph` that optimizers consume -- the Trace-style optimizer
+does per-bundle credit assignment exactly the way Trace back-propagates
+text feedback through the graph.
+
+A real-LLM backend can be plugged via core.agent.llm.LLMClient; the
+offline default is the HeuristicLLM proposal engine.
+"""
+
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+class TraceExecutionError(Exception):
+    """Raised when executing the generated mapper fails; carries the node
+    (bundle) most implicated, like Trace's exception_node."""
+
+    def __init__(self, message: str, exception_node: Optional[str] = None):
+        super().__init__(message)
+        self.exception_node = exception_node
+
+
+@dataclass
+class Bundle:
+    """A trainable code block: parameter (decision dict) + renderer."""
+
+    name: str
+    options: Dict[str, tuple]                 # key -> allowed values
+    value: Dict[str, Any]                     # current decisions
+    render: Callable[[Dict[str, Any], Any], str]  # (value, app) -> DSL text
+    trainable: bool = True
+
+    def forward(self, app) -> str:
+        return self.render(self.value, app)
+
+    def clone_value(self) -> Dict[str, Any]:
+        return copy.deepcopy(self.value)
+
+
+@dataclass
+class TraceRecord:
+    """One forward+feedback cycle."""
+
+    values: Dict[str, Dict[str, Any]]         # bundle name -> decisions
+    outputs: Dict[str, str]                   # bundle name -> DSL text
+    mapper: str
+    score: Optional[float] = None             # lower is better (seconds)
+    feedback: str = ""
+    error_node: Optional[str] = None
+
+
+@dataclass
+class TraceGraph:
+    records: List[TraceRecord] = field(default_factory=list)
+
+    def add(self, rec: TraceRecord):
+        self.records.append(rec)
+
+    def best(self) -> Optional[TraceRecord]:
+        scored = [r for r in self.records if r.score is not None]
+        if not scored:
+            return None
+        return min(scored, key=lambda r: r.score)
+
+    def last(self) -> Optional[TraceRecord]:
+        return self.records[-1] if self.records else None
+
+
+class Module:
+    """Base class: an agent whose parameters are its bundles."""
+
+    def bundles(self) -> List[Bundle]:
+        out = []
+        for v in self.__dict__.values():
+            if isinstance(v, Bundle):
+                out.append(v)
+        return out
+
+    def parameters(self) -> Dict[str, Dict[str, Any]]:
+        return {b.name: b.clone_value() for b in self.bundles()}
+
+    def load_parameters(self, params: Dict[str, Dict[str, Any]]):
+        for b in self.bundles():
+            if b.name in params:
+                b.value = copy.deepcopy(params[b.name])

@@ -1,0 +1,11 @@
+from .machine import MachineSpace, MachineError, make_machine
+from .errors import DSLError, LexError, ParseError, CompileError, ExecutionError
+from .parser import parse
+from .compiler import compile_mapper
+from .interp import Evaluator, TaskPoint
+
+__all__ = [
+    "MachineSpace", "MachineError", "make_machine",
+    "DSLError", "LexError", "ParseError", "CompileError", "ExecutionError",
+    "parse", "compile_mapper", "Evaluator", "TaskPoint",
+]

@@ -1,0 +1,176 @@
+"""AST node definitions for the mapping DSL (paper Fig. A1 grammar)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple, Union
+
+
+# --------------------------------------------------------------------------
+# Expressions (FuncDef bodies)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class IntLit:
+    value: int
+
+
+@dataclass(frozen=True)
+class Name:
+    ident: str
+
+
+@dataclass(frozen=True)
+class TupleLit:
+    items: Tuple["Expr", ...]
+
+
+@dataclass(frozen=True)
+class MachineExpr:
+    proc: str  # TPU | GPU | CPU | OMP
+
+
+@dataclass(frozen=True)
+class Attr:
+    obj: "Expr"
+    name: str
+
+
+@dataclass(frozen=True)
+class Call:
+    func: "Expr"
+    args: Tuple["Expr", ...]
+
+
+@dataclass(frozen=True)
+class Index:
+    obj: "Expr"
+    items: Tuple["Expr", ...]  # may contain Splat
+
+
+@dataclass(frozen=True)
+class Splat:
+    expr: "Expr"
+
+
+@dataclass(frozen=True)
+class BinOp:
+    op: str  # + - * / % < > <= >= == !=
+    lhs: "Expr"
+    rhs: "Expr"
+
+
+@dataclass(frozen=True)
+class Ternary:
+    cond: "Expr"
+    then: "Expr"
+    other: "Expr"
+
+
+Expr = Union[IntLit, Name, TupleLit, MachineExpr, Attr, Call, Index, Splat,
+             BinOp, Ternary]
+
+
+# --------------------------------------------------------------------------
+# Function statements
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Assign:
+    target: str
+    value: Expr
+
+
+@dataclass(frozen=True)
+class Return:
+    value: Expr
+
+
+FuncStmt = Union[Assign, Return]
+
+
+# --------------------------------------------------------------------------
+# Top-level statements
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TaskStmt:
+    """``Task <name|*> <Proc>+;`` -- processor / parallelism-class selection."""
+    task: str
+    procs: Tuple[str, ...]
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class RegionStmt:
+    """``Region <task|*> <region|*> [<Proc>] <Memory>;`` -- placement."""
+    task: str
+    region: str
+    proc: Optional[str]
+    memory: str
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class LayoutStmt:
+    """``Layout <task|*> <region|*> <proc|*> Constraint+;``"""
+    task: str
+    region: str
+    proc: str
+    constraints: Tuple[Tuple[str, Optional[int]], ...]  # (kind, arg)
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class IndexTaskMapStmt:
+    task: str
+    func: str
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class SingleTaskMapStmt:
+    task: str
+    func: str
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class InstanceLimitStmt:
+    task: str
+    limit: int
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class CollectMemoryStmt:
+    task: str
+    region: str
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class GlobalAssign:
+    """``m = Machine(GPU);`` or other top-level binding."""
+    target: str
+    value: Expr
+    line: int = 0
+
+
+@dataclass(frozen=True)
+class FuncDef:
+    name: str
+    params: Tuple[str, ...]
+    param_types: Tuple[Optional[str], ...]
+    body: Tuple[FuncStmt, ...]
+    line: int = 0
+
+
+Statement = Union[TaskStmt, RegionStmt, LayoutStmt, IndexTaskMapStmt,
+                  SingleTaskMapStmt, InstanceLimitStmt, CollectMemoryStmt,
+                  GlobalAssign, FuncDef]
+
+
+@dataclass
+class Program:
+    statements: List[Statement] = field(default_factory=list)
+
+    def of_type(self, ty) -> List[Statement]:
+        return [s for s in self.statements if isinstance(s, ty)]

@@ -1,0 +1,66 @@
+"""DSL program -> MappingPlan compiler.
+
+``compile_mapper(src, machine_factory)`` parses, semantic-checks and loads a
+DSL mapper.  ``machine_factory(proc_kind)`` supplies the processor space that
+``Machine(...)`` expressions evaluate to -- for the TPU backend this is the
+production mesh viewed as a 2-D (or 3-D) MachineSpace.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from . import ast as A
+from .errors import CompileError, DSLError
+from .interp import Evaluator
+from .machine import MachineSpace
+from .parser import parse
+from ..mapping.plan import (
+    LayoutSpec, MappingPlan, Placement, MEMORY_ALIASES, PROC_ALIASES,
+)
+
+
+def compile_mapper(
+    src: str,
+    machine_factory: Callable[[str], MachineSpace],
+) -> MappingPlan:
+    program = parse(src)
+    ev = Evaluator(machine_factory)
+    ev.load(program)
+
+    plan = MappingPlan(source=src, evaluator=ev)
+
+    for stmt in program.statements:
+        if isinstance(stmt, A.TaskStmt):
+            plan.task_procs[(stmt.task,)] = stmt.procs
+        elif isinstance(stmt, A.RegionStmt):
+            mem = MEMORY_ALIASES.get(stmt.memory, stmt.memory)
+            proc = "*"
+            if stmt.proc and stmt.proc != "*":
+                proc = PROC_ALIASES.get(stmt.proc, stmt.proc)
+            plan.placements[(stmt.task, stmt.region, proc)] = \
+                Placement(None if proc == "*" else proc, mem)
+        elif isinstance(stmt, A.LayoutStmt):
+            spec = LayoutSpec.from_constraints(stmt.constraints)
+            plan.layouts[(stmt.task, stmt.region, stmt.proc)] = spec
+        elif isinstance(stmt, A.IndexTaskMapStmt):
+            if stmt.func not in ev.funcs:
+                raise CompileError(
+                    f"IndexTaskMap's function undefined: {stmt.func!r} "
+                    f"(line {stmt.line})"
+                )
+            plan.index_maps[stmt.task] = stmt.func
+        elif isinstance(stmt, A.SingleTaskMapStmt):
+            if stmt.func not in ev.funcs:
+                raise CompileError(
+                    f"SingleTaskMap's function undefined: {stmt.func!r} "
+                    f"(line {stmt.line})"
+                )
+            plan.single_maps[stmt.task] = stmt.func
+        elif isinstance(stmt, A.InstanceLimitStmt):
+            plan.instance_limits[stmt.task] = stmt.limit
+        elif isinstance(stmt, A.CollectMemoryStmt):
+            plan.collects.append((stmt.task, stmt.region))
+        # GlobalAssign / FuncDef already handled by Evaluator.load.
+
+    return plan

@@ -1,0 +1,31 @@
+"""DSL error types.  Error messages mirror the paper's system feedback
+(Table 2 / Table A1) so the enhanced-feedback rules can keyword-match."""
+
+from __future__ import annotations
+
+
+class DSLError(Exception):
+    """Base class for all mapper-DSL errors."""
+
+    kind = "Compile Error"
+
+    def feedback(self) -> str:
+        return f"{self.kind}: {self}"
+
+
+class LexError(DSLError):
+    pass
+
+
+class ParseError(DSLError):
+    pass
+
+
+class CompileError(DSLError):
+    """Semantic errors (undefined functions, unknown tasks, bad constraints)."""
+
+
+class ExecutionError(DSLError):
+    """Errors raised while *applying* a mapper (OOM, bad index map, ...)."""
+
+    kind = "Execution Error"

@@ -1,0 +1,234 @@
+"""Evaluator for DSL index-mapping functions.
+
+A ``FuncDef`` becomes a Python callable.  The value domain is:
+
+* ints
+* tuples of ints (iteration points / space extents; elementwise arithmetic)
+* :class:`MachineSpace` objects
+* ``TaskPoint`` records (``task.ipoint``, ``task.ispace``, ``task.parent``)
+
+Indexing a machine space returns the flat device id, so an index-mapping
+function has the signature the paper gives it:  iteration point -> processor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from . import ast as A
+from .errors import CompileError, ExecutionError
+from .machine import MachineError, MachineSpace
+
+
+@dataclass
+class TaskPoint:
+    """Stand-in for the runtime ``Task`` object inside mapping functions."""
+
+    ipoint: Tuple[int, ...]
+    ispace: Tuple[int, ...] = ()
+    name: str = ""
+    parent: Optional["TaskPoint"] = None
+    processor_id: int = 0
+
+    def processor(self, space: MachineSpace) -> Tuple[int, ...]:
+        """Paper idiom ``task.parent.processor(m_2d)`` -- coordinates of the
+        processor the (parent) task ran on, in view ``space``."""
+        flat = self.processor_id % space.num_procs()
+        coords = []
+        for extent in reversed(space.shape):
+            coords.append(flat % extent)
+            flat //= extent
+        return tuple(reversed(coords))
+
+
+def _broadcast(op, a, b):
+    if isinstance(a, tuple) and isinstance(b, tuple):
+        if len(a) != len(b):
+            raise ExecutionError(
+                f"tuple arity mismatch in mapping function: {a} vs {b}"
+            )
+        return tuple(op(x, y) for x, y in zip(a, b))
+    if isinstance(a, tuple):
+        return tuple(op(x, b) for x in a)
+    if isinstance(b, tuple):
+        return tuple(op(a, y) for y in b)
+    return op(a, b)
+
+
+def _div(x, y):
+    if y == 0:
+        raise ExecutionError("division by zero in mapping function")
+    return int(x) // int(y) if (isinstance(x, int) and isinstance(y, int)) else x / y
+
+
+_BINOPS = {
+    "+": lambda x, y: x + y,
+    "-": lambda x, y: x - y,
+    "*": lambda x, y: x * y,
+    "/": _div,
+    "%": lambda x, y: x % y,
+    "<": lambda x, y: int(x < y),
+    ">": lambda x, y: int(x > y),
+    "<=": lambda x, y: int(x <= y),
+    ">=": lambda x, y: int(x >= y),
+    "==": lambda x, y: int(x == y),
+    "!=": lambda x, y: int(x != y),
+}
+
+
+class Evaluator:
+    """Evaluates expressions/functions given global bindings."""
+
+    def __init__(self, machine_factory: Callable[[str], MachineSpace]):
+        self.machine_factory = machine_factory
+        self.globals: Dict[str, object] = {}
+        self.funcs: Dict[str, A.FuncDef] = {}
+
+    # -- expression evaluation ---------------------------------------------
+    def eval_expr(self, e: A.Expr, env: Dict[str, object]):
+        if isinstance(e, A.IntLit):
+            return e.value
+        if isinstance(e, A.Name):
+            if e.ident in env:
+                return env[e.ident]
+            if e.ident in self.globals:
+                return self.globals[e.ident]
+            raise CompileError(f"{e.ident} not found")
+        if isinstance(e, A.MachineExpr):
+            return self.machine_factory(e.proc)
+        if isinstance(e, A.TupleLit):
+            return tuple(self.eval_expr(x, env) for x in e.items)
+        if isinstance(e, A.Attr):
+            obj = self.eval_expr(e.obj, env)
+            return self._attr(obj, e.name)
+        if isinstance(e, A.Call):
+            return self._call(e, env)
+        if isinstance(e, A.Index):
+            obj = self.eval_expr(e.obj, env)
+            items = []
+            for it in e.items:
+                if isinstance(it, A.Splat):
+                    v = self.eval_expr(it.expr, env)
+                    if not isinstance(v, tuple):
+                        raise ExecutionError("splat of non-tuple in mapping function")
+                    items.extend(v)
+                else:
+                    items.append(self.eval_expr(it, env))
+            return self._index(obj, tuple(items))
+        if isinstance(e, A.Splat):
+            return self.eval_expr(e.expr, env)
+        if isinstance(e, A.BinOp):
+            lhs = self.eval_expr(e.lhs, env)
+            rhs = self.eval_expr(e.rhs, env)
+            try:
+                return _broadcast(_BINOPS[e.op], lhs, rhs)
+            except ZeroDivisionError:
+                raise ExecutionError("division by zero in mapping function")
+        if isinstance(e, A.Ternary):
+            cond = self.eval_expr(e.cond, env)
+            return self.eval_expr(e.then if cond else e.other, env)
+        raise CompileError(f"cannot evaluate expression node {type(e).__name__}")
+
+    def _attr(self, obj, name: str):
+        if isinstance(obj, MachineSpace):
+            if name == "size":
+                return obj.size
+            if name in ("split", "merge", "swap", "slice", "decompose",
+                        "linearized"):
+                return ("method", obj, name)
+            raise CompileError(f"machine space has no attribute {name!r}")
+        if isinstance(obj, TaskPoint):
+            if name == "ipoint":
+                return obj.ipoint
+            if name == "ispace":
+                return obj.ispace
+            if name == "parent":
+                return obj.parent if obj.parent is not None else obj
+            if name == "processor":
+                return ("method", obj, "processor")
+            raise CompileError(f"task has no attribute {name!r}")
+        if isinstance(obj, tuple) and name == "size":
+            return obj
+        raise CompileError(f"no attribute {name!r} on {type(obj).__name__}")
+
+    def _call(self, e: A.Call, env: Dict[str, object]):
+        fn = self.eval_expr(e.func, env)
+        args = [self.eval_expr(a, env) for a in e.args]
+        if isinstance(fn, tuple) and len(fn) == 3 and fn[0] == "method":
+            _, obj, name = fn
+            try:
+                return getattr(obj, name)(*args)
+            except MachineError as err:
+                raise ExecutionError(str(err))
+        if isinstance(fn, A.FuncDef):
+            return self.call_func(fn, args)
+        if callable(fn):
+            return fn(*args)
+        raise CompileError(f"attempt to call non-function {fn!r}")
+
+    def _index(self, obj, items: Tuple):
+        if isinstance(obj, MachineSpace):
+            try:
+                return obj.flat_index(tuple(int(i) for i in items))
+            except MachineError as err:
+                raise ExecutionError(f"Slice processor index out of bound: {err}")
+        if isinstance(obj, tuple):
+            if len(items) == 1:
+                idx = int(items[0])
+                if not (-len(obj) <= idx < len(obj)):
+                    raise ExecutionError(
+                        f"tuple index {idx} out of bounds for arity {len(obj)}"
+                    )
+                return obj[idx]
+            return tuple(obj[int(i)] for i in items)
+        raise CompileError(f"cannot index {type(obj).__name__}")
+
+    # -- function calls -------------------------------------------------------
+    def call_func(self, fn: A.FuncDef, args) -> object:
+        if len(args) != len(fn.params):
+            raise ExecutionError(
+                f"{fn.name} expects {len(fn.params)} args, got {len(args)}"
+            )
+        env: Dict[str, object] = dict(zip(fn.params, args))
+        env.update({f.name: f for f in self.funcs.values()})
+        for stmt in fn.body:
+            if isinstance(stmt, A.Assign):
+                env[stmt.target] = self.eval_expr(stmt.value, env)
+            elif isinstance(stmt, A.Return):
+                return self.eval_expr(stmt.value, env)
+        raise ExecutionError(f"{fn.name} has no return statement")
+
+    # -- program loading --------------------------------------------------------
+    def load(self, program: A.Program) -> None:
+        for stmt in program.statements:
+            if isinstance(stmt, A.FuncDef):
+                self.funcs[stmt.name] = stmt
+                self.globals[stmt.name] = stmt
+        for stmt in program.statements:
+            if isinstance(stmt, A.GlobalAssign):
+                self.globals[stmt.target] = self.eval_expr(stmt.value, {})
+
+    def make_index_map(self, func_name: str) -> Callable[[TaskPoint], int]:
+        if func_name not in self.funcs:
+            raise CompileError(f"IndexTaskMap's function undefined: {func_name}")
+        fn = self.funcs[func_name]
+
+        def mapper(task: TaskPoint) -> int:
+            if len(fn.params) == 1:
+                result = self.call_func(fn, [task])
+            elif len(fn.params) == 2:
+                result = self.call_func(fn, [task.ipoint, task.ispace])
+            else:
+                raise ExecutionError(
+                    f"{fn.name}: index mapping functions take (Task) or "
+                    f"(ipoint, ispace)"
+                )
+            if not isinstance(result, int):
+                raise ExecutionError(
+                    f"{fn.name} returned {type(result).__name__}, expected a "
+                    "processor (index a machine space, e.g. m[i, j])"
+                )
+            return result
+
+        return mapper

@@ -1,0 +1,74 @@
+"""Tokenizer for the mapping DSL."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List
+
+from .errors import LexError
+
+KEYWORDS = {
+    "Task", "Region", "Layout", "IndexTaskMap", "SingleTaskMap",
+    "InstanceLimit", "CollectMemory", "GarbageCollect", "Machine",
+    "def", "return",
+}
+
+# Two-char operators first.
+TWO_CHAR = ["==", "!=", "<=", ">="]
+ONE_CHAR = list(";{}()[],=.*%/+-?:<>")
+
+
+@dataclass(frozen=True)
+class Token:
+    kind: str  # NAME | INT | KW | OP | EOF
+    text: str
+    line: int
+
+
+def tokenize(src: str) -> List[Token]:
+    toks: List[Token] = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if c == "#":
+            while i < n and src[i] != "\n":
+                i += 1
+            continue
+        if src.startswith("//", i):
+            while i < n and src[i] != "\n":
+                i += 1
+            continue
+        if c.isdigit():
+            j = i
+            while j < n and src[j].isdigit():
+                j += 1
+            toks.append(Token("INT", src[i:j], line))
+            i = j
+            continue
+        if c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            word = src[i:j]
+            toks.append(Token("KW" if word in KEYWORDS else "NAME", word, line))
+            i = j
+            continue
+        two = src[i : i + 2]
+        if two in TWO_CHAR:
+            toks.append(Token("OP", two, line))
+            i += 2
+            continue
+        if c in ONE_CHAR:
+            toks.append(Token("OP", c, line))
+            i += 1
+            continue
+        raise LexError(f"Syntax error, unexpected character {c!r} at line {line}")
+    toks.append(Token("EOF", "", line))
+    return toks

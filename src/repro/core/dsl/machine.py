@@ -1,0 +1,256 @@
+"""Processor-space abstraction and invertible transformations.
+
+Implements the paper's ``Machine(PROC)`` processor space and its four
+transformation primitives (Appendix A.2):
+
+    split(i, d)        -- factor dimension i into (d, size[i]//d)
+    merge(p, q)        -- fuse dimensions p..q (p < q) into one
+    swap(p, q)         -- exchange two dimensions
+    slice(i, lo, hi)   -- restrict dimension i to [lo, hi]
+
+plus ``decompose(i, target_shape)`` (used by the paper's Appendix A.5
+mapping functions) which splits dimension i to align with an iteration
+space.
+
+Every transformed space retains an *invertible* mapping back to the flat
+device ids of the original machine: indexing a transformed space with an
+n-d point returns the concrete flat device id (or the original-space
+coordinates).  The paper proves split/merge are inverses; we property-test
+that in tests/test_machine_space.py.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence, Tuple
+
+
+class MachineError(Exception):
+    """Raised on illegal transformation or indexing of a machine space."""
+
+
+def _prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclass(frozen=True)
+class MachineSpace:
+    """An n-dimensional view of a set of processors.
+
+    ``shape``    -- extent per dimension of this view.
+    ``to_base``  -- maps an index tuple in this view to an index tuple in
+                    the *base* (original) machine space.
+    ``base_shape`` -- shape of the original machine (e.g. (nodes, chips)).
+    ``axis_names`` -- mesh axis names of the base machine, when the space
+                    is backed by a JAX mesh (e.g. ("data", "model")).
+    """
+
+    shape: Tuple[int, ...]
+    base_shape: Tuple[int, ...]
+    to_base: Callable[[Tuple[int, ...]], Tuple[int, ...]] = None  # type: ignore
+    axis_names: Tuple[str, ...] = ()
+    proc_kind: str = "TPU"
+
+    def __post_init__(self):
+        if self.to_base is None:
+            object.__setattr__(self, "to_base", lambda idx: idx)
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> Tuple[int, ...]:
+        # The DSL exposes ``m.size[i]`` and ``m.size`` as a tuple.
+        return self.shape
+
+    def num_procs(self) -> int:
+        return _prod(self.shape)
+
+    def _check_dim(self, i: int) -> None:
+        if not (0 <= i < self.ndim):
+            raise MachineError(
+                f"dimension {i} out of range for machine space of rank {self.ndim}"
+            )
+
+    def _check_point(self, idx: Tuple[int, ...]) -> Tuple[int, ...]:
+        if len(idx) != self.ndim:
+            raise MachineError(
+                f"machine space of rank {self.ndim} indexed with point of "
+                f"rank {len(idx)}: {idx}"
+            )
+        out = []
+        for d, (j, n) in enumerate(zip(idx, self.shape)):
+            j = int(j)
+            if not (0 <= j < n):
+                raise MachineError(
+                    f"Slice processor index out of bound: index {j} in dim {d} "
+                    f"(extent {n})"
+                )
+            out.append(j)
+        return tuple(out)
+
+    # -- indexing ----------------------------------------------------------
+    def base_index(self, idx: Sequence[int]) -> Tuple[int, ...]:
+        """Coordinates of ``idx`` in the original machine space."""
+        return self.to_base(self._check_point(tuple(int(i) for i in idx)))
+
+    def flat_index(self, idx: Sequence[int]) -> int:
+        """Flat (row-major over base_shape) device id for ``idx``."""
+        base = self.base_index(idx)
+        flat = 0
+        for j, n in zip(base, self.base_shape):
+            flat = flat * n + j
+        return flat
+
+    def __getitem__(self, idx) -> int:
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return self.flat_index(idx)
+
+    # -- transformations (paper Appendix A.2) ------------------------------
+    def split(self, i: int, d: int) -> "MachineSpace":
+        """Factor dim i of extent n into (d, n // d).
+
+        m'[a_0..a_i, a_{i+1}, ..] := m[.., a_i + a_{i+1} * d, ..]
+        """
+        self._check_dim(i)
+        n = self.shape[i]
+        if d <= 0 or n % d != 0:
+            raise MachineError(f"cannot split dim {i} of extent {n} by {d}")
+        new_shape = self.shape[:i] + (d, n // d) + self.shape[i + 1 :]
+        parent = self.to_base
+
+        def to_base(idx: Tuple[int, ...]) -> Tuple[int, ...]:
+            a_i, a_i1 = idx[i], idx[i + 1]
+            merged = a_i + a_i1 * d
+            return parent(idx[:i] + (merged,) + idx[i + 2 :])
+
+        return MachineSpace(new_shape, self.base_shape, to_base,
+                            self.axis_names, self.proc_kind)
+
+    def merge(self, p: int, q: int) -> "MachineSpace":
+        """Fuse dims p and q (p < q, adjacent or not; paper uses p<q).
+
+        Inverse of split for q == p + 1:
+        m'[.., a_p, ..] := m[.., a_p % n_p, .., a_p / n_p, ..]
+        """
+        self._check_dim(p)
+        self._check_dim(q)
+        if p >= q:
+            raise MachineError(f"merge requires p < q, got ({p}, {q})")
+        n_p, n_q = self.shape[p], self.shape[q]
+        fused = n_p * n_q
+        new_shape = (
+            self.shape[:p]
+            + (fused,)
+            + self.shape[p + 1 : q]
+            + self.shape[q + 1 :]
+        )
+        parent = self.to_base
+
+        def to_base(idx: Tuple[int, ...]) -> Tuple[int, ...]:
+            a = idx[p]
+            j_p = a % n_p
+            j_q = a // n_p
+            mid = idx[p + 1 : q]  # dims strictly between p and q (shifted by 0)
+            rest = idx[q:]  # dims after the removed q slot
+            full = idx[:p] + (j_p,) + mid + (j_q,) + rest
+            return parent(full)
+
+        return MachineSpace(new_shape, self.base_shape, to_base,
+                            self.axis_names, self.proc_kind)
+
+    def swap(self, p: int, q: int) -> "MachineSpace":
+        self._check_dim(p)
+        self._check_dim(q)
+        shp = list(self.shape)
+        shp[p], shp[q] = shp[q], shp[p]
+        parent = self.to_base
+
+        def to_base(idx: Tuple[int, ...]) -> Tuple[int, ...]:
+            lst = list(idx)
+            lst[p], lst[q] = lst[q], lst[p]
+            return parent(tuple(lst))
+
+        return MachineSpace(tuple(shp), self.base_shape, to_base,
+                            self.axis_names, self.proc_kind)
+
+    def slice(self, i: int, low: int, high: int) -> "MachineSpace":
+        self._check_dim(i)
+        if not (0 <= low <= high < self.shape[i]):
+            raise MachineError(
+                f"slice bounds [{low}, {high}] invalid for dim {i} of extent "
+                f"{self.shape[i]}"
+            )
+        new_shape = self.shape[:i] + (high - low + 1,) + self.shape[i + 1 :]
+        parent = self.to_base
+
+        def to_base(idx: Tuple[int, ...]) -> Tuple[int, ...]:
+            return parent(idx[:i] + (idx[i] + low,) + idx[i + 1 :])
+
+        return MachineSpace(new_shape, self.base_shape, to_base,
+                            self.axis_names, self.proc_kind)
+
+    def decompose(self, i: int, target: Sequence[int]) -> "MachineSpace":
+        """Split dim i into len(target) dims proportional to ``target``.
+
+        Used by the paper's hierarchical mapping functions (Appendix A.5):
+        the extent of dim i is factored as evenly as possible so the result
+        aligns with the rank of the iteration space.  Greedy factorization:
+        each new dim gets gcd-limited share of the remaining extent.
+        """
+        self._check_dim(i)
+        n = self.shape[i]
+        rank = len(tuple(target))
+        if rank <= 0:
+            raise MachineError("decompose target must be non-empty")
+        # Greedy: factor n into `rank` parts, preferring larger leading parts,
+        # each dividing the remaining extent.
+        parts = []
+        remaining = n
+        for k in range(rank - 1):
+            tgt = int(target[k]) if int(target[k]) > 0 else 1
+            f = math.gcd(remaining, tgt)
+            if f == 0:
+                f = 1
+            # pick the largest divisor of `remaining` that is <= max(tgt, 1)
+            best = 1
+            for cand in range(1, remaining + 1):
+                if remaining % cand == 0 and cand <= max(tgt, 1):
+                    best = cand
+            parts.append(best)
+            remaining //= best
+        parts.append(remaining)
+
+        space = self
+        # Apply successive splits: dim i into parts[0] x (rest), etc.
+        offset = i
+        for k in range(rank - 1):
+            d = parts[k]
+            space = space.split(offset, d)
+            offset += 1
+        return space
+
+    # -- misc ---------------------------------------------------------------
+    def linearized(self) -> "MachineSpace":
+        """Collapse to a 1-D view (merge all dims)."""
+        space = self
+        while space.ndim > 1:
+            space = space.merge(0, 1)
+        return space
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"MachineSpace(shape={self.shape}, base={self.base_shape})"
+
+
+def make_machine(proc_kind: str, shape: Sequence[int],
+                 axis_names: Sequence[str] = ()) -> MachineSpace:
+    shape = tuple(int(s) for s in shape)
+    return MachineSpace(shape, shape, lambda idx: idx, tuple(axis_names),
+                        proc_kind)

@@ -1,0 +1,374 @@
+"""Recursive-descent parser for the mapping DSL (grammar of paper Fig. A1).
+
+Accepted surface syntax (superset of the paper's examples):
+
+    Task <task|*> PROC(,PROC)* ;
+    Region <task|*> <region|*> <proc|*> MEM(,MEM)* ;
+    Layout <task|*> <region|*> <proc|*> CONSTRAINT+ ;
+    IndexTaskMap <task> <func> ;
+    SingleTaskMap <task> <func> ;
+    InstanceLimit <task> INT ;
+    CollectMemory|GarbageCollect <task> <region|*> ;
+    <name> = <expr> ;
+    def <name>([Type] param (, [Type] param)*) { <fstmt>* }
+    def <name>(...) :  <fstmt>* return <expr> ;      # colon form
+
+Function statements: ``name = expr ;`` and ``return expr ;``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from . import ast as A
+from .errors import ParseError
+from .lexer import Token, tokenize
+
+LAYOUT_FLAGS = {"SOA", "AOS", "C_order", "F_order", "No_Align",
+                "BF16", "F32", "Compact", "Exact"}
+
+PROC_NAMES = {"CPU", "GPU", "OMP", "TPU", "PY", "IO",
+              # TPU parallelism classes (this system's backend):
+              "DP", "TP", "EP", "SP", "PP", "INLINE", "ANY"}
+
+MEM_NAMES = {"SYSMEM", "FBMEM", "ZCMEM", "RDMA", "SOCKMEM",
+             # TPU placement classes:
+             "SHARD", "REPL", "REMAT", "HOST", "VMEM"}
+
+
+class Parser:
+    def __init__(self, toks: List[Token]):
+        self.toks = toks
+        self.pos = 0
+
+    # -- token helpers ------------------------------------------------------
+    def peek(self, k: int = 0) -> Token:
+        return self.toks[min(self.pos + k, len(self.toks) - 1)]
+
+    def next(self) -> Token:
+        t = self.toks[self.pos]
+        if t.kind != "EOF":
+            self.pos += 1
+        return t
+
+    def expect(self, kind: str, text: Optional[str] = None) -> Token:
+        t = self.peek()
+        if t.kind != kind or (text is not None and t.text != text):
+            want = text or kind
+            raise ParseError(
+                f"Syntax error, unexpected {t.text!r}, expecting {want!r} "
+                f"(line {t.line})"
+            )
+        return self.next()
+
+    def accept(self, kind: str, text: Optional[str] = None) -> Optional[Token]:
+        t = self.peek()
+        if t.kind == kind and (text is None or t.text == text):
+            return self.next()
+        return None
+
+    def name_or_star(self) -> str:
+        t = self.peek()
+        if t.kind == "NAME":
+            return self.next().text
+        if t.kind == "OP" and t.text == "*":
+            self.next()
+            return "*"
+        raise ParseError(
+            f"Syntax error, unexpected {t.text!r}, expecting name or '*' "
+            f"(line {t.line})"
+        )
+
+    # -- top level -----------------------------------------------------------
+    def parse_program(self) -> A.Program:
+        prog = A.Program()
+        while self.peek().kind != "EOF":
+            prog.statements.append(self.parse_statement())
+        return prog
+
+    def parse_statement(self) -> A.Statement:
+        t = self.peek()
+        if t.kind == "KW":
+            if t.text == "Task":
+                return self.parse_task()
+            if t.text == "Region":
+                return self.parse_region()
+            if t.text == "Layout":
+                return self.parse_layout()
+            if t.text in ("IndexTaskMap", "SingleTaskMap"):
+                return self.parse_taskmap(t.text)
+            if t.text == "InstanceLimit":
+                return self.parse_instance_limit()
+            if t.text in ("CollectMemory", "GarbageCollect"):
+                return self.parse_collect()
+            if t.text == "def":
+                return self.parse_funcdef()
+        if t.kind == "NAME" and self.peek(1).kind == "OP" and self.peek(1).text == "=":
+            return self.parse_global_assign()
+        raise ParseError(
+            f"Syntax error, unexpected {t.text!r} at line {t.line}, expecting "
+            "a statement (Task/Region/Layout/IndexTaskMap/def/assignment)"
+        )
+
+    def parse_task(self) -> A.TaskStmt:
+        line = self.expect("KW", "Task").line
+        task = self.name_or_star()
+        procs = [self.expect("NAME").text]
+        while self.accept("OP", ","):
+            procs.append(self.expect("NAME").text)
+        self.expect("OP", ";")
+        for p in procs:
+            if p not in PROC_NAMES and not p.startswith("PP"):
+                raise ParseError(
+                    f"unknown processor kind {p!r} in Task statement "
+                    f"(line {line}); known: {sorted(PROC_NAMES)}"
+                )
+        return A.TaskStmt(task, tuple(procs), line)
+
+    def parse_region(self) -> A.RegionStmt:
+        line = self.expect("KW", "Region").line
+        fields: List[str] = [self.name_or_star(), self.name_or_star()]
+        # Optional third positional (proc) then memory list.
+        rest: List[str] = []
+        while not self.accept("OP", ";"):
+            if self.accept("OP", ","):
+                continue
+            rest.append(self.name_or_star())
+        if not rest:
+            raise ParseError(f"Region statement missing memory (line {line})")
+        if len(rest) == 1:
+            proc, mems = None, rest
+        else:
+            proc, mems = rest[0], rest[1:]
+        mem = mems[0]  # primary target; extra entries are fallbacks
+        if mem not in MEM_NAMES:
+            raise ParseError(
+                f"unknown memory kind {mem!r} in Region statement (line {line})"
+            )
+        return A.RegionStmt(fields[0], fields[1], proc, mem, line)
+
+    def parse_layout(self) -> A.LayoutStmt:
+        line = self.expect("KW", "Layout").line
+        task = self.name_or_star()
+        region = self.name_or_star()
+        proc = self.name_or_star()
+        constraints: List[Tuple[str, Optional[int]]] = []
+        while not self.accept("OP", ";"):
+            t = self.peek()
+            if t.kind != "NAME":
+                raise ParseError(
+                    f"Syntax error, unexpected {t.text!r} in Layout constraint "
+                    f"(line {t.line})"
+                )
+            word = self.next().text
+            if word == "Align":
+                self.expect("OP", "==")
+                val = int(self.expect("INT").text)
+                constraints.append(("Align", val))
+            elif word in LAYOUT_FLAGS:
+                constraints.append((word, None))
+            else:
+                raise ParseError(
+                    f"unknown layout constraint {word!r} (line {line}); "
+                    f"known: {sorted(LAYOUT_FLAGS)} and Align==<int>"
+                )
+        if not constraints:
+            raise ParseError(f"Layout statement has no constraints (line {line})")
+        return A.LayoutStmt(task, region, proc, tuple(constraints), line)
+
+    def parse_taskmap(self, kw: str) -> A.Statement:
+        line = self.expect("KW", kw).line
+        task = self.name_or_star()
+        func = self.expect("NAME").text
+        self.expect("OP", ";")
+        if kw == "IndexTaskMap":
+            return A.IndexTaskMapStmt(task, func, line)
+        return A.SingleTaskMapStmt(task, func, line)
+
+    def parse_instance_limit(self) -> A.InstanceLimitStmt:
+        line = self.expect("KW", "InstanceLimit").line
+        task = self.name_or_star()
+        limit = int(self.expect("INT").text)
+        self.expect("OP", ";")
+        return A.InstanceLimitStmt(task, limit, line)
+
+    def parse_collect(self) -> A.CollectMemoryStmt:
+        line = self.next().line  # CollectMemory | GarbageCollect
+        task = self.name_or_star()
+        region = self.name_or_star()
+        self.expect("OP", ";")
+        return A.CollectMemoryStmt(task, region, line)
+
+    def parse_global_assign(self) -> A.GlobalAssign:
+        t = self.expect("NAME")
+        self.expect("OP", "=")
+        value = self.parse_expr()
+        self.expect("OP", ";")
+        return A.GlobalAssign(t.text, value, t.line)
+
+    # -- function definitions -------------------------------------------------
+    def parse_funcdef(self) -> A.FuncDef:
+        line = self.expect("KW", "def").line
+        name = self.expect("NAME").text
+        self.expect("OP", "(")
+        params: List[str] = []
+        ptypes: List[Optional[str]] = []
+        if not self.accept("OP", ")"):
+            while True:
+                t = self.peek()
+                if t.kind not in ("NAME", "KW"):
+                    raise ParseError(
+                        f"Syntax error, unexpected {t.text!r} in parameter "
+                        f"list (line {t.line})"
+                    )
+                first = self.next().text
+                if self.peek().kind == "NAME":
+                    ptypes.append(first)
+                    params.append(self.next().text)
+                else:
+                    ptypes.append(None)
+                    params.append(first)
+                if self.accept("OP", ")"):
+                    break
+                self.expect("OP", ",")
+        body: List[A.FuncStmt] = []
+        if self.accept("OP", "{"):
+            while not self.accept("OP", "}"):
+                body.append(self.parse_fstmt())
+        elif self.accept("OP", ":"):
+            # colon form: statements until (and including) the first return
+            while True:
+                stmt = self.parse_fstmt()
+                body.append(stmt)
+                if isinstance(stmt, A.Return):
+                    break
+        else:
+            t = self.peek()
+            raise ParseError(
+                f"Syntax error, unexpected {t.text!r}, expecting {{ "
+                f"(line {t.line})"
+            )
+        return A.FuncDef(name, tuple(params), tuple(ptypes), tuple(body), line)
+
+    def parse_fstmt(self) -> A.FuncStmt:
+        if self.accept("KW", "return"):
+            value = self.parse_expr()
+            self.expect("OP", ";")
+            return A.Return(value)
+        t = self.expect("NAME")
+        self.expect("OP", "=")
+        value = self.parse_expr()
+        self.expect("OP", ";")
+        return A.Assign(t.text, value)
+
+    # -- expressions ------------------------------------------------------------
+    def parse_expr(self) -> A.Expr:
+        return self.parse_ternary()
+
+    def parse_ternary(self) -> A.Expr:
+        cond = self.parse_compare()
+        if self.accept("OP", "?"):
+            then = self.parse_expr()
+            self.expect("OP", ":")
+            other = self.parse_expr()
+            return A.Ternary(cond, then, other)
+        return cond
+
+    def parse_compare(self) -> A.Expr:
+        lhs = self.parse_additive()
+        t = self.peek()
+        if t.kind == "OP" and t.text in ("<", ">", "<=", ">=", "==", "!="):
+            op = self.next().text
+            rhs = self.parse_additive()
+            return A.BinOp(op, lhs, rhs)
+        return lhs
+
+    def parse_additive(self) -> A.Expr:
+        lhs = self.parse_multiplicative()
+        while True:
+            t = self.peek()
+            if t.kind == "OP" and t.text in ("+", "-"):
+                op = self.next().text
+                rhs = self.parse_multiplicative()
+                lhs = A.BinOp(op, lhs, rhs)
+            else:
+                return lhs
+
+    def parse_multiplicative(self) -> A.Expr:
+        lhs = self.parse_unary()
+        while True:
+            t = self.peek()
+            if t.kind == "OP" and t.text in ("*", "/", "%"):
+                op = self.next().text
+                rhs = self.parse_unary()
+                lhs = A.BinOp(op, lhs, rhs)
+            else:
+                return lhs
+
+    def parse_unary(self) -> A.Expr:
+        if self.accept("OP", "*"):
+            return A.Splat(self.parse_unary())
+        if self.accept("OP", "-"):
+            inner = self.parse_unary()
+            return A.BinOp("-", A.IntLit(0), inner)
+        return self.parse_postfix()
+
+    def parse_postfix(self) -> A.Expr:
+        e = self.parse_atom()
+        while True:
+            if self.accept("OP", "."):
+                name = self.expect("NAME").text
+                e = A.Attr(e, name)
+            elif self.accept("OP", "("):
+                args: List[A.Expr] = []
+                if not self.accept("OP", ")"):
+                    while True:
+                        args.append(self.parse_expr())
+                        if self.accept("OP", ")"):
+                            break
+                        self.expect("OP", ",")
+                e = A.Call(e, tuple(args))
+            elif self.accept("OP", "["):
+                items: List[A.Expr] = []
+                while True:
+                    items.append(self.parse_expr())
+                    if self.accept("OP", "]"):
+                        break
+                    self.expect("OP", ",")
+                e = A.Index(e, tuple(items))
+            else:
+                return e
+
+    def parse_atom(self) -> A.Expr:
+        t = self.peek()
+        if t.kind == "INT":
+            return A.IntLit(int(self.next().text))
+        if t.kind == "KW" and t.text == "Machine":
+            self.next()
+            self.expect("OP", "(")
+            proc = self.expect("NAME").text
+            self.expect("OP", ")")
+            return A.MachineExpr(proc)
+        if t.kind == "NAME":
+            return A.Name(self.next().text)
+        if t.kind == "OP" and t.text == "(":
+            self.next()
+            first = self.parse_expr()
+            if self.accept("OP", ","):
+                items = [first]
+                if not self.accept("OP", ")"):
+                    while True:
+                        items.append(self.parse_expr())
+                        if self.accept("OP", ")"):
+                            break
+                        self.expect("OP", ",")
+                return A.TupleLit(tuple(items))
+            self.expect("OP", ")")
+            return first
+        raise ParseError(
+            f"Syntax error, unexpected {t.text!r} in expression (line {t.line})"
+        )
+
+
+def parse(src: str) -> A.Program:
+    return Parser(tokenize(src)).parse_program()

@@ -1,0 +1,95 @@
+"""Mapper evaluators: run a DSL mapper against a workload, return Feedback.
+
+``LMCellEvaluator`` is the production evaluator: compile the mapped step
+for an (arch x shape) cell on the production mesh (dry-run; deterministic,
+like the paper's controlled environment) and score it by the dominant
+roofline term.  Compile errors and HBM overflows map to the paper's
+Compile/Execution error feedback categories.
+
+``CallableEvaluator`` wraps any mapper -> seconds function (used by the
+scientific apps and matmul benchmarks, which measure wall time on host
+devices).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from .agent.feedback import Feedback, enhance, error_feedback, \
+    performance_feedback
+from .dsl.errors import DSLError, ExecutionError
+
+HBM_BYTES = 16 * (1 << 30)   # v5e: 16 GiB per chip
+
+
+@dataclass
+class LMCellEvaluator:
+    arch: str
+    shape: str
+    multi_pod: bool = False
+    hbm_limit: float = HBM_BYTES
+    cache: Dict[str, Feedback] = field(default_factory=dict)
+    reports: Dict[str, object] = field(default_factory=dict)
+    compile_count: int = 0
+
+    def __post_init__(self):
+        from ..launch.mesh import make_production_mesh
+        self._mesh = make_production_mesh(multi_pod=self.multi_pod)
+
+    def __call__(self, mapper_src: str) -> Feedback:
+        key = hashlib.sha1(mapper_src.encode()).hexdigest()
+        if key in self.cache:
+            return self.cache[key]
+        from ..launch.dryrun import lower_cell
+        try:
+            self.compile_count += 1
+            _, report = lower_cell(self.arch, self.shape,
+                                   multi_pod=self.multi_pod,
+                                   mapper_src=mapper_src, mesh=self._mesh,
+                                   verbose=False)
+            if isinstance(report, dict) and report.get("skipped"):
+                fb = enhance("Execution Error: " + report["skipped"])
+            elif (report.peak_memory_bytes or 0) > self.hbm_limit:
+                gib = report.peak_memory_bytes / (1 << 30)
+                fb = enhance(
+                    f"Execution Error: out of memory -- peak HBM "
+                    f"{gib:.1f} GiB exceeds HBM capacity 16 GiB per chip.")
+            else:
+                fb = performance_feedback(report)
+                self.reports[key] = report
+        except DSLError as e:
+            fb = error_feedback(e)
+        except Exception as e:  # sharding/lowering failures = execution
+            fb = error_feedback(ExecutionError(str(e)[:500]))
+        self.cache[key] = fb
+        return fb
+
+    def report_for(self, mapper_src: str):
+        key = hashlib.sha1(mapper_src.encode()).hexdigest()
+        return self.reports.get(key)
+
+
+@dataclass
+class CallableEvaluator:
+    """Wraps fn(mapper_src) -> seconds (raises DSLError on failure)."""
+
+    fn: Callable[[str], float]
+    metric_name: str = "Execution time"
+    cache: Dict[str, Feedback] = field(default_factory=dict)
+
+    def __call__(self, mapper_src: str) -> Feedback:
+        key = hashlib.sha1(mapper_src.encode()).hexdigest()
+        if key in self.cache:
+            return self.cache[key]
+        try:
+            t = self.fn(mapper_src)
+            fb = enhance(f"Performance Metric: {self.metric_name} is "
+                         f"{t:.4f}s.", score=t)
+        except DSLError as e:
+            fb = error_feedback(e)
+        except Exception as e:
+            fb = error_feedback(ExecutionError(str(e)[:500]))
+        self.cache[key] = fb
+        return fb

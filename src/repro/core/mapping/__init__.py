@@ -1,0 +1,3 @@
+from .plan import MappingPlan, Placement, LayoutSpec
+
+__all__ = ["MappingPlan", "Placement", "LayoutSpec"]

@@ -1,0 +1,131 @@
+"""Bridge: DSL MappingPlan -> AxisRules for LM training / serving.
+
+This is where the paper's four statement families bind to the TPU backend
+(DESIGN.md §2 table):
+
+* ``Task <stage> <ProcClass>`` -- parallelism class per stage.  TP on a
+  stage routes its wide axes (heads / ffn / experts / vocab) to the
+  "model" mesh axis; SP routes activation sequence to "model"; EP routes
+  experts; DP is batch -> ("pod", "data") and is always on.
+* ``Region <stage> <role> <proc> <mem>`` -- SHARD on weights = FSDP
+  (d_model -> "data"); REPL = replicated weights; REMAT on activations
+  selects the remat policy; HOST marks offload.
+* ``Layout`` -- KV-cache dim order (C/F), activation dtype, alignment.
+* ``IndexTaskMap experts <fn>`` -- expert->device placement permutation.
+* ``InstanceLimit step <n>`` -- n gradient-accumulation microbatches.
+
+Every knob changes the lowered HLO, so the agent's search is observable in
+the roofline terms.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ...parallel.sharding import AxisRules, MeshAxes
+from .plan import MappingPlan
+
+# Stage -> the logical axes that TP shards for that stage.
+STAGE_TP_AXES: Dict[str, tuple] = {
+    "attention": ("heads", "kv_heads"),
+    "mlp": ("ffn",),
+    "moe": ("experts", "expert_ffn"),
+    "rec": ("rnn",),
+    "ssm": ("rnn",),
+    "embed": ("vocab",),
+    "lm_head": ("vocab",),
+}
+
+ALL_STAGES = tuple(STAGE_TP_AXES)
+
+
+def rules_from_plan(plan: MappingPlan, mesh, step: str = "train",
+                    attn_impl: Optional[str] = None) -> AxisRules:
+    """Translate a compiled mapper into AxisRules for ``step`` in
+    {"train", "prefill", "decode"}."""
+    has_pod = "pod" in mesh.axis_names
+    data_axes = ("pod", "data") if has_pod else ("data",)
+
+    rules: Dict[str, MeshAxes] = {
+        "batch": data_axes,
+        "seq": None,
+        "layers": None,
+        "head_dim": None,
+        "conv": None,
+        "state": None,
+        "act_seq": None,
+        "act_d": None,
+    }
+
+    # ---- Task statements: parallelism class per stage -------------------
+    seq_parallel = False
+    for stage, tp_axes in STAGE_TP_AXES.items():
+        procs = plan.procs_for(stage)
+        if "TP" in procs or "ANY" in procs:
+            for ax in tp_axes:
+                rules[ax] = ("model",)
+        else:
+            for ax in tp_axes:
+                rules.setdefault(ax, None)
+        if "SP" in procs:
+            seq_parallel = True
+        if "INLINE" in procs:
+            # tiny stage: keep unsharded (fused into surrounding comp)
+            for ax in tp_axes:
+                rules[ax] = None
+    if seq_parallel:
+        rules["act_seq"] = ("model",)
+
+    # ---- Region statements: weight placement / FSDP / remat -------------
+    w = plan.placement_for("step", "weights", "TP")
+    if w.memory == "REPL":
+        rules["d_model"] = None
+        rules["d_model_out"] = None
+    else:
+        # SHARD (FBMEM) / HOST: FSDP-shard the weight contraction dims
+        rules["d_model"] = ("data",)
+        rules["d_model_out"] = ("data",)
+
+    remat = "none"
+    act = plan.placement_for("step", "activations", "TP")
+    if act.memory == "REMAT":
+        remat = "block"
+        lay = plan.layout_for("step", "activations")
+        if lay.soa is False:    # AOS layout on activations => coarser remat
+            remat = "full"
+        elif lay.order == "F":
+            remat = "dots"
+    elif act.memory == "HOST":
+        remat = "offload"
+    if step != "train":
+        remat = "none"
+
+    # ---- KV cache (serve) ------------------------------------------------
+    kv = plan.placement_for("decode", "kv_cache", "TP")
+    cache_layout = plan.layout_for("decode", "kv_cache")
+    if step in ("decode", "prefill"):
+        rules["cache_batch"] = data_axes
+        if kv.memory == "REPL":
+            rules["cache_seq"] = None
+        else:
+            rules["cache_seq"] = ("model",)
+
+    # ---- InstanceLimit: gradient-accumulation microbatches --------------
+    micro = plan.instance_limit_for("step") or 1
+
+    out = AxisRules(rules=rules, mesh=mesh, remat=remat,
+                    microbatches=int(micro))
+    out.layouts["kv_cache"] = cache_layout
+    out.placements["weights"] = w.memory
+    # attention implementation override (Layout on the attention stage)
+    attn_layout = plan.layout_for("attention", "scores")
+    if attn_impl is not None:
+        out.attn_impl = attn_impl
+    elif ("attention", "scores", "*") in plan.layouts \
+            or ("attention", "scores", "TP") in plan.layouts:
+        out.attn_impl = "chunked" if attn_layout.order == "C" else "naive"
+    return out
+
+
+def cache_order_from_plan(plan: MappingPlan) -> str:
+    return plan.layout_for("decode", "kv_cache").order

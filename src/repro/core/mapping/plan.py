@@ -1,0 +1,201 @@
+"""MappingPlan -- the compiled form of a DSL mapper.
+
+A plan answers, for the application being mapped:
+
+* ``procs_for(task)``          -- processor / parallelism classes, in
+                                  preference order (paper ``Task`` stmt)
+* ``placement_for(task, region)``-- (proc, memory-class) for a tensor role
+                                  (paper ``Region`` stmt)
+* ``layout_for(task, region, proc)`` -- layout constraints
+                                  (paper ``Layout`` stmt)
+* ``index_map_for(task)``      -- iteration-point -> flat device id callable
+                                  (paper ``IndexTaskMap`` stmt)
+* ``device_table(task, ispace)`` -- the materialized mapping for a whole
+                                  iteration space (used by shard_map grids)
+
+Wildcard resolution follows the paper's examples: more-specific statements
+override wildcard ones; among equally specific statements, the later one
+wins (Fig. A10 relies on this).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..dsl.errors import CompileError, ExecutionError
+from ..dsl.interp import Evaluator, TaskPoint
+
+# Legion memory kinds -> TPU placement classes.
+MEMORY_ALIASES = {
+    "FBMEM": "SHARD",   # fast, device-local, bounded -> partitioned HBM
+    "ZCMEM": "REPL",    # shared access -> replicated
+    "SYSMEM": "HOST",   # big + slow -> host offload
+    "SOCKMEM": "HOST",
+    "RDMA": "HOST",
+}
+
+PROC_ALIASES = {
+    "GPU": "TP",        # accelerator-parallel
+    "OMP": "DP",
+    "CPU": "INLINE",
+    "PY": "INLINE",
+    "IO": "INLINE",
+}
+
+
+@dataclass(frozen=True)
+class LayoutSpec:
+    order: str = "C"            # C | F
+    soa: bool = True            # SOA | AOS
+    align: Optional[int] = None  # bytes; None = compiler default
+    dtype: Optional[str] = None  # BF16 | F32 | None
+
+    @staticmethod
+    def from_constraints(cs: Sequence[Tuple[str, Optional[int]]]) -> "LayoutSpec":
+        order, soa, align, dtype = "C", True, None, None
+        for kind, arg in cs:
+            if kind == "C_order":
+                order = "C"
+            elif kind == "F_order":
+                order = "F"
+            elif kind == "SOA":
+                soa = True
+            elif kind == "AOS":
+                soa = False
+            elif kind == "Align":
+                align = arg
+            elif kind == "No_Align":
+                align = None
+            elif kind in ("BF16", "F32"):
+                dtype = kind
+            # Compact/Exact accepted but advisory
+        return LayoutSpec(order, soa, align, dtype)
+
+
+@dataclass(frozen=True)
+class Placement:
+    proc: Optional[str]     # normalized parallelism class or None
+    memory: str             # SHARD | REPL | REMAT | HOST | VMEM
+
+
+def _resolve(table: Dict, keys: List[Tuple]) -> Optional[object]:
+    """Return the match for the first key pattern that has an entry."""
+    for k in keys:
+        if k in table:
+            return table[k]
+    return None
+
+
+@dataclass
+class MappingPlan:
+    source: str
+    evaluator: Evaluator
+    task_procs: Dict[str, Tuple[str, ...]] = field(default_factory=dict)
+    # keyed (task, region, proc); proc == "*" when the Region stmt had none
+    placements: Dict[Tuple[str, str, str], Placement] = field(default_factory=dict)
+    layouts: Dict[Tuple[str, str, str], LayoutSpec] = field(default_factory=dict)
+    index_maps: Dict[str, str] = field(default_factory=dict)
+    single_maps: Dict[str, str] = field(default_factory=dict)
+    instance_limits: Dict[str, int] = field(default_factory=dict)
+    collects: List[Tuple[str, str]] = field(default_factory=list)
+
+    # -- queries -------------------------------------------------------------
+    def procs_for(self, task: str) -> Tuple[str, ...]:
+        procs = _resolve(self.task_procs, [(task,), ("*",)])
+        if procs is None:
+            return ("ANY",)
+        return tuple(PROC_ALIASES.get(p, p) for p in procs)
+
+    def placement_for(self, task: str, region: str,
+                      proc: str = "*") -> Placement:
+        """Placement of ``region`` of ``task`` when it executes on ``proc``.
+
+        Specificity: (task,region) > (task,*) > (*,region) > (*,*); within
+        each, a proc-specific statement beats a proc-wildcard one.
+        """
+        keys = []
+        for t, r in [(task, region), (task, "*"), ("*", region), ("*", "*")]:
+            keys.append((t, r, proc))
+            keys.append((t, r, "*"))
+        p = _resolve(self.placements, keys)
+        if p is None:
+            return Placement(None, "SHARD")
+        return p
+
+    def placement_lookup(self, task: str, region: str,
+                         proc: str = "*") -> Optional[Placement]:
+        """Like placement_for, but None when no statement matches (so the
+        backend can apply proc-dependent defaults, e.g. HOST for INLINE)."""
+        keys = []
+        for t, r in [(task, region), (task, "*"), ("*", region), ("*", "*")]:
+            keys.append((t, r, proc))
+            keys.append((t, r, "*"))
+        return _resolve(self.placements, keys)
+
+    def layout_for(self, task: str, region: str, proc: str = "*") -> LayoutSpec:
+        keys = [
+            (task, region, proc), (task, region, "*"),
+            (task, "*", proc), ("*", region, proc),
+            (task, "*", "*"), ("*", region, "*"), ("*", "*", proc),
+            ("*", "*", "*"),
+        ]
+        spec = _resolve(self.layouts, keys)
+        return spec if spec is not None else LayoutSpec()
+
+    def index_map_for(self, task: str) -> Optional[Callable[[TaskPoint], int]]:
+        name = _resolve(self.index_maps, [task, "*"])
+        if name is None:
+            return None
+        return self.evaluator.make_index_map(name)
+
+    def index_map_name(self, task: str) -> Optional[str]:
+        return _resolve(self.index_maps, [task, "*"])
+
+    def single_map_for(self, task: str) -> Optional[Callable[[TaskPoint], int]]:
+        name = _resolve(self.single_maps, [task, "*"])
+        if name is None:
+            return None
+        return self.evaluator.make_index_map(name)
+
+    def instance_limit_for(self, task: str) -> Optional[int]:
+        return _resolve(self.instance_limits, [task, "*"])
+
+    # -- materialization -------------------------------------------------------
+    def device_table(self, task: str, ispace: Sequence[int]) -> np.ndarray:
+        """Evaluate the task's index map over every point of ``ispace``.
+
+        Returns an int array of shape ``ispace`` whose entries are flat
+        device ids.  Raises ExecutionError if any point maps out of range.
+        """
+        fn = self.index_map_for(task)
+        if fn is None:
+            raise CompileError(f"no IndexTaskMap registered for task {task!r}")
+        ispace = tuple(int(s) for s in ispace)
+        table = np.zeros(ispace, dtype=np.int64)
+        for ipoint in np.ndindex(*ispace):
+            tp = TaskPoint(ipoint=tuple(int(i) for i in ipoint), ispace=ispace,
+                           name=task)
+            table[ipoint] = fn(tp)
+        nprocs = self.evaluator.machine_factory("TPU").num_procs()
+        if table.min() < 0 or table.max() >= nprocs:
+            raise ExecutionError(
+                f"Slice processor index out of bound: task {task!r} mapped to "
+                f"device {int(table.max())} of {nprocs}"
+            )
+        return table
+
+    # -- introspection -----------------------------------------------------------
+    def describe(self) -> str:
+        lines = []
+        for t, ps in self.task_procs.items():
+            lines.append(f"Task {t[0]} -> {','.join(ps)}")
+        for (t, r, pr), p in self.placements.items():
+            lines.append(f"Region {t} {r} @{pr} -> mem={p.memory}")
+        for k, v in self.layouts.items():
+            lines.append(f"Layout {k} -> {v}")
+        for t, f in self.index_maps.items():
+            lines.append(f"IndexTaskMap {t} -> {f}")
+        return "\n".join(lines)

@@ -1,0 +1,85 @@
+"""Expert-written DSL mappers (the paper's "expert mapper" baselines) and
+the random-mapper generator for the LM workloads.
+
+These are the LM analogues of the paper's Appendix A.9/A.10 mappers: a
+~15-line DSL program fully determines training/serving distribution.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+EXPERT_TRAIN_MAPPER = """
+# Expert train mapper: TP over model axis for every wide stage, FSDP
+# weight sharding over the data axis, block remat, chunked (flash-pattern)
+# attention, 8 gradient-accumulation microbatches.
+Task * TP;
+Task embed TP;
+Task lm_head TP;
+Region step weights TP FBMEM;
+Region step activations TP REMAT;
+Layout attention scores * C_order;
+Layout * kv_cache * C_order;
+InstanceLimit step 8;
+mtpu = Machine(TPU);
+mlin = mtpu.merge(0, 1);
+def experts_block(Tuple ipoint, Tuple ispace) {
+  idx = ipoint * mlin.size / ispace;
+  return mlin[*idx];
+}
+IndexTaskMap experts experts_block;
+"""
+
+EXPERT_SERVE_MAPPER = """
+# Expert serve mapper: TP everywhere, weights replicated across the data
+# axis (ZCMEM analogue: no per-layer gathers at decode), chunked attention,
+# batch-major KV cache sharded over model on seq.
+Task * TP;
+Region step weights TP ZCMEM;
+Region decode kv_cache TP FBMEM;
+Layout attention scores * C_order;
+Layout decode kv_cache * C_order;
+mtpu = Machine(TPU);
+"""
+
+# Per-arch expert overrides: heads %% 16 != 0 cannot TP-shard attention on
+# the 16-wide model axis -> the expert uses sequence parallelism there.
+_SP_ATTN = "Task attention SP;\n"
+
+EXPERT_TRAIN_BY_ARCH = {
+    "qwen3-14b": EXPERT_TRAIN_MAPPER + _SP_ATTN,        # 40 heads
+    "granite-moe-3b-a800m": EXPERT_TRAIN_MAPPER + _SP_ATTN,  # 24 heads
+    "recurrentgemma-2b": EXPERT_TRAIN_MAPPER + _SP_ATTN,     # 10 heads
+}
+
+EXPERT_SERVE_BY_ARCH = {}
+
+
+def expert_mapper(arch: str, step: str) -> str:
+    if step == "train":
+        return EXPERT_TRAIN_BY_ARCH.get(arch, EXPERT_TRAIN_MAPPER)
+    return EXPERT_SERVE_BY_ARCH.get(arch, EXPERT_SERVE_MAPPER)
+
+_STAGES = ("attention", "mlp", "moe", "embed", "lm_head", "rec", "ssm")
+_PROCS = ("TP", "DP", "INLINE", "SP")
+_MEMS = ("FBMEM", "ZCMEM", "SYSMEM")
+_ORDERS = ("C_order", "F_order")
+
+
+def random_mapper(seed: int, step: str = "train") -> str:
+    """The paper's random-mapper baseline: uniform choices over the same
+    statement space the agent searches."""
+    rng = random.Random(seed)
+    lines = []
+    for s in _STAGES:
+        lines.append(f"Task {s} {rng.choice(_PROCS)};")
+    lines.append(f"Region step weights TP {rng.choice(_MEMS)};")
+    act_mem = rng.choice(("FBMEM", "REMAT", "SYSMEM"))
+    lines.append(f"Region step activations TP {act_mem};")
+    lines.append(f"Region decode kv_cache TP {rng.choice(('FBMEM', 'ZCMEM'))};")
+    lines.append(f"Layout decode kv_cache * {rng.choice(_ORDERS)};")
+    if step == "train":
+        lines.append(f"InstanceLimit step {rng.choice((1, 1, 2, 4, 8, 16))};")
+    lines.append("mtpu = Machine(TPU);")
+    return "\n".join(lines)

@@ -1,0 +1,89 @@
+"""The discrete mapper search space Theta (paper §4.2).
+
+Decision axes for the LM workloads (each a Bundle of the MapperAgent):
+
+  task_decision        per-stage processor class in {TP, DP, SP, INLINE}
+  region_decision      weights in {FBMEM, ZCMEM}; activations in
+                       {FBMEM, REMAT, SYSMEM}; kv_cache in {FBMEM, ZCMEM}
+  layout_decision      kv_cache order {C, F}; attention scores layout
+                       (chunked vs naive); remat flavor via activations
+                       layout
+  instance_limit       microbatches in {1, 2, 4, 8, 16}
+  index_task_map       expert placement in {block, cyclic}
+
+|Theta| for a 7-stage model: 4^7 * 2 * 3 * 2 * 2 * 2 * 2 * 5 * 2 ~ 2^24 --
+the same order as the paper's scientific-app spaces (2^14..2^38).
+
+The matmul/scientific-app spaces live with their apps (apps/, parallel/).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, Tuple
+
+STAGES = ("attention", "mlp", "moe", "embed", "lm_head", "rec", "ssm")
+PROC_CHOICES = ("TP", "DP", "SP", "INLINE")
+WEIGHT_MEM = ("FBMEM", "ZCMEM")
+ACT_MEM = ("FBMEM", "REMAT", "SYSMEM")
+KV_MEM = ("FBMEM", "ZCMEM")
+ORDERS = ("C_order", "F_order")
+SCORES_LAYOUT = ("default", "chunked", "naive")
+MICRO = (1, 2, 4, 8, 16)
+EXPERT_MAPS = ("block", "cyclic")
+
+
+def default_decisions() -> Dict[str, Dict]:
+    """The expert-mapper starting point (paper: agents start from a shared
+    runnable template)."""
+    return {
+        "task_decision": {s: "TP" for s in STAGES},
+        "region_decision": {"weights": "FBMEM", "activations": "REMAT",
+                            "kv_cache": "FBMEM"},
+        "layout_decision": {"kv_order": "C_order", "scores": "default",
+                            "act_order": "SOA"},
+        "instance_limit_decision": {"microbatches": 1},
+        "index_task_map_decision": {"experts": "block"},
+    }
+
+
+def random_decisions(seed: int) -> Dict[str, Dict]:
+    rng = random.Random(seed)
+    return {
+        "task_decision": {s: rng.choice(PROC_CHOICES) for s in STAGES},
+        "region_decision": {
+            "weights": rng.choice(WEIGHT_MEM),
+            "activations": rng.choice(ACT_MEM),
+            "kv_cache": rng.choice(KV_MEM),
+        },
+        "layout_decision": {
+            "kv_order": rng.choice(ORDERS),
+            "scores": rng.choice(SCORES_LAYOUT),
+            "act_order": rng.choice(("SOA", "AOS")),
+        },
+        "instance_limit_decision": {"microbatches": rng.choice(MICRO)},
+        "index_task_map_decision": {"experts": rng.choice(EXPERT_MAPS)},
+    }
+
+
+def neighbors(decisions: Dict[str, Dict], rng: random.Random,
+              k: int = 1) -> Dict[str, Dict]:
+    """Mutate k uniformly-chosen single decisions (annealing moves)."""
+    import copy
+    out = copy.deepcopy(decisions)
+    axes = []
+    for s in STAGES:
+        axes.append(("task_decision", s, PROC_CHOICES))
+    axes += [
+        ("region_decision", "weights", WEIGHT_MEM),
+        ("region_decision", "activations", ACT_MEM),
+        ("region_decision", "kv_cache", KV_MEM),
+        ("layout_decision", "kv_order", ORDERS),
+        ("layout_decision", "scores", SCORES_LAYOUT),
+        ("instance_limit_decision", "microbatches", MICRO),
+        ("index_task_map_decision", "experts", EXPERT_MAPS),
+    ]
+    for _ in range(k):
+        mod, key, choices = rng.choice(axes)
+        out[mod][key] = rng.choice(choices)
+    return out

@@ -1,0 +1,50 @@
+"""Elastic scaling: re-derive the distribution plan for a new world size
+and reshard a checkpoint onto it.
+
+Plans are pure functions of (DSL mapper, mesh): on world-size change the
+launcher rebuilds the mesh, recompiles the mapper against it, and restores
+the checkpoint with the new shardings -- no state beyond the checkpoint
+survives the resize.  ``resume_on_mesh`` packages that sequence.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..checkpoint import checkpoint as ckpt
+from ..core.dsl.compiler import compile_mapper
+from ..core.mapping.lm_bridge import rules_from_plan
+from ..launch.mesh import machine_factory_for_mesh
+from ..models.registry import Model
+from ..parallel.sharding import param_shardings
+from ..train.optim import adamw_init
+
+
+def plan_for_mesh(mapper_src: str, mesh, step: str = "train"):
+    plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
+    return plan, rules_from_plan(plan, mesh, step)
+
+
+def resume_on_mesh(ckpt_dir: str, model: Model, mapper_src: str, mesh,
+                   step_kind: str = "train"):
+    """Restore the latest checkpoint resharded for ``mesh``.
+
+    Returns (params, opt_state, step, rules).  Works across topology
+    changes because shardings are rebuilt from the mapper + new mesh.
+    """
+    plan, rules = plan_for_mesh(mapper_src, mesh, step_kind)
+    abstract = model.abstract_params()
+    axes = model.param_axes()
+    p_sh = param_shardings(axes, rules, abstract)
+    opt_abstract = jax.eval_shape(adamw_init, abstract)
+    m_sh = param_shardings(axes, rules, opt_abstract.m)
+    from ..train.optim import AdamWState
+    opt_sh = AdamWState(step=None, m=m_sh, v=m_sh)
+
+    state_like = {"params": abstract, "opt": opt_abstract}
+    state_sh = {"params": p_sh, "opt": opt_sh}
+    restored, step, extra = ckpt.restore(ckpt_dir, state_like,
+                                         shardings=state_sh)
+    return restored["params"], restored["opt"], step, rules

@@ -1,0 +1,46 @@
+"""Straggler mitigation: step-time watchdog + deterministic-reissue hooks.
+
+On real pods stragglers appear as step-time outliers on specific hosts.
+The watchdog keeps an EMA of step time; a step slower than
+``threshold x EMA`` triggers the callback (default: log + count).  The
+data pipeline is deterministic per (step, host) so the launcher can
+reissue a slow host's work elsewhere without data-path coordination;
+checkpoint + elastic restore covers hard failures.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class StepWatchdog:
+    threshold: float = 2.5          # x EMA counts as straggling
+    ema_decay: float = 0.9
+    warmup_steps: int = 3           # compile steps excluded
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    ema: float = 0.0
+    steps_seen: int = 0
+    straggler_steps: List[int] = field(default_factory=list)
+    _t0: float = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        if exc[0] is not None:
+            return False
+        dt = time.perf_counter() - self._t0
+        self.steps_seen += 1
+        if self.steps_seen <= self.warmup_steps:
+            self.ema = dt
+            return False
+        if self.ema > 0 and dt > self.threshold * self.ema:
+            self.straggler_steps.append(self.steps_seen)
+            if self.on_straggler:
+                self.on_straggler(self.steps_seen, dt, self.ema)
+        self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
+        return False

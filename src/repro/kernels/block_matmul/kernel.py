@@ -1,0 +1,53 @@
+"""Blocked matmul Pallas TPU kernel: the per-device tile kernel under the
+distributed matmul algorithms (parallel/mm_algorithms.py).
+
+Grid (M/bm, N/bn, K/bk), K innermost/sequential, f32 accumulator in VMEM.
+Block defaults 128x128x128 = MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr, *, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def block_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                 bn: int = 128, bk: int = 128,
+                 interpret: bool = True) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    kernel = functools.partial(_mm_kernel, nk=k // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the blocked matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import block_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool = True):
+    return block_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)

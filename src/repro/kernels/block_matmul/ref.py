@@ -1,0 +1,8 @@
+"""Oracle for the blocked matmul kernel."""
+
+import jax.numpy as jnp
+
+
+def reference_matmul(a, b):
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,122 @@
+"""Flash-attention Pallas TPU kernel.
+
+Blocked online-softmax attention: grid (batch*q_heads, S/bq, T/bk), the KV
+axis innermost and sequential ("arbitrary"), with the running max / sum /
+accumulator carried in VMEM scratch across KV steps.  GQA is handled in
+the K/V BlockSpec index maps (query head h reads KV head h // group).
+
+TPU mapping notes:
+  * block shapes default to (128, head_dim): MXU-aligned on the q/kv tile
+    dims; head_dim of the assigned archs is 64..256 (lane-dim multiples
+    of 64; pad to 128 on real hardware for full MXU utilization).
+  * masks (causal / sliding window / kv_len) are built from
+    broadcasted_iota over absolute row/col indices -- no mask tensors
+    travel through HBM.
+  * softcap (gemma2) applied pre-mask in f32.
+
+Validated in interpret mode against ref.reference_attention (CPU), see
+tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  kv_len: Optional[int], softcap: Optional[float],
+                  bq: int, bk: int, nk: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, d]
+    k = k_ref[0].astype(jnp.float32)          # [bk, d]
+    v = v_ref[0]                              # [bk, d]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    if kv_len is not None:
+        ok &= cols < kv_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                        # [bq, 1]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+    p = jnp.exp(s - m_new)                     # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)             # [bq, 1]
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)[:, None]
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-37)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           group: int = 1, causal: bool = True,
+                           window: Optional[int] = None,
+                           kv_len: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: [BH, S, D] (BH = batch * q_heads); k, v: [BK, T, D] with
+    BK = batch * kv_heads and q row bh reading kv row bh // group."""
+    bh, s_len, d = q.shape
+    _, t_len, _ = k.shape
+    bq = min(block_q, s_len)
+    bk = min(block_k, t_len)
+    assert s_len % bq == 0 and t_len % bk == 0, (s_len, t_len, bq, bk)
+    nq = s_len // bq
+    nk = t_len // bk
+    grid = (bh, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=d ** -0.5, causal=causal, window=window,
+        kv_len=kv_len, softcap=softcap, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, d), q.dtype),
+        scratch_shapes=[
+            # m, l: [bq, 1]; acc: [bq, d] -- f32 VMEM carries
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,37 @@
+"""Jit'd wrapper: model-layout attention -> flash kernel layout.
+
+``flash_attention`` accepts the model's [B, S, K, G, D] / [B, T, K, D]
+layout (see models/attention.py) and dispatches to the Pallas kernel.
+Positions must be the canonical contiguous ranges (training / prefill /
+encoder); the jnp chunked path covers ring-buffer decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_pos=None, kv_pos=None, causal: bool = True,
+                    window: Optional[int] = None, softcap=None,
+                    kv_len=None, interpret: bool = True) -> jax.Array:
+    """q: [B, S, K, G, D]; k, v: [B, T, K, D] -> [B, S, K, G, D]."""
+    b, s, kh, g, d = q.shape
+    t = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kh * g, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, t, d)
+    out = flash_attention_kernel(
+        qf, kf, vf, group=g, causal=causal, window=window,
+        kv_len=None if kv_len is None else int(kv_len)
+        if isinstance(kv_len, int) else None,
+        softcap=softcap, interpret=interpret)
+    return out.reshape(b, kh, g, s, d).transpose(0, 3, 1, 2, 4)

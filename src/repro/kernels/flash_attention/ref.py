@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        group: int = 1, causal: bool = True,
+                        window: Optional[int] = None,
+                        kv_len: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jax.Array:
+    """q: [BH, S, D]; k, v: [BK, T, D]; q row bh uses kv row bh // group."""
+    bh, s_len, d = q.shape
+    idx = jnp.arange(bh) // group
+    kk = k[idx]                                # [BH, T, D]
+    vv = v[idx]
+    s = jnp.einsum("hsd,htd->hst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (d ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(s_len)[:, None]
+    cols = jnp.arange(kk.shape[1])[None, :]
+    ok = jnp.ones((s_len, kk.shape[1]), bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    if kv_len is not None:
+        ok &= cols < kv_len
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p.astype(vv.dtype), vv).astype(q.dtype)

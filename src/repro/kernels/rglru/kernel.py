@@ -1,0 +1,61 @@
+"""RG-LRU (Griffin) gated linear recurrence Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the RNN width R.
+
+TPU mapping: the sequence is blocked; grid (batch, S/blk) with the block
+axis sequential and the hidden state [1, R] carried in VMEM scratch.
+Inside a block the recurrence runs as a fori_loop of vector ops over the
+R lanes (the VPU's native shape); there is no cross-lane communication,
+so no warp-shuffle analogue is needed -- the CUDA kernel's intra-warp
+scan becomes simple lane-parallel vector ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, blk: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)   # [blk, R]
+    b = b_ref[0].astype(jnp.float32)   # [blk, R]
+
+    def body(i, h):
+        h = a[i] * h + b[i]
+        pl.store(o_ref, (0, pl.dslice(i, 1), slice(None)),
+                 h[None, None, :].astype(o_ref.dtype)[0])
+        return h
+
+    h = jax.lax.fori_loop(0, blk, body, h_scr[0])
+    h_scr[...] = h[None]
+
+
+def rglru_scan_kernel(a: jax.Array, b: jax.Array, *, block: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """a, b: [B, S, R] -> h: [B, S, R] with h_t = a_t h_{t-1} + b_t."""
+    bt, s, r = a.shape
+    blk = min(block, s)
+    assert s % blk == 0, (s, blk)
+    kernel = functools.partial(_rglru_kernel, blk=blk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bt, s // blk),
+        in_specs=[
+            pl.BlockSpec((1, blk, r), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, blk, r), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, s, r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, r), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

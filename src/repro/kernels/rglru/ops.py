@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rglru_scan(a, b, block: int = 256, interpret: bool = True):
+    return rglru_scan_kernel(a, b, block=block, interpret=interpret)

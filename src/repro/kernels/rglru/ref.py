@@ -1,0 +1,11 @@
+"""Oracle for the RG-LRU scan kernel: models.rglru.rglru_scan
+(associative scan) -- itself tested against a python loop."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference_scan(a, b):
+    from ...models.rglru import rglru_scan
+    return rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32))

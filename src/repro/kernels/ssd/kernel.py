@@ -1,0 +1,94 @@
+"""Mamba-2 SSD (state-space duality) Pallas TPU kernel.
+
+TPU-native rethink of the CUDA SSD kernel: instead of warp-level
+parallel scans, the chunk axis is a *sequential grid dimension* and the
+inter-chunk recurrent state [H, N, P] lives in VMEM scratch across grid
+steps.  Per chunk (length Q), the intra-chunk term is a pair of
+MXU matmuls (C B^T over the state dim; masked-decay weighted contraction
+over the chunk), exactly the quadratic/linear split of arXiv:2405.21060.
+
+Grid: (batch, n_chunks) with n_chunks sequential ("arbitrary").
+Block shapes: x [Q, H, P], dt [Q, H], B/C [Q, G, N]; scratch [H, N, P] f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_scr, *,
+                rep: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, H, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q, H]
+    a = a_ref[...].astype(jnp.float32)      # [H]
+    bm = b_ref[0].astype(jnp.float32)       # [Q, G, N]
+    cm = c_ref[0].astype(jnp.float32)       # [Q, G, N]
+    q = x.shape[0]
+
+    dA = dt * a[None, :]                    # [Q, H] (<= 0)
+    cum = jnp.cumsum(dA, axis=0)
+    cum_last = cum[-1:, :]                  # [1, H]
+
+    # intra-chunk quadratic term
+    scores = jnp.einsum("ign,jgn->gij", cm, bm)          # [G, Q, Q]
+    scores = jnp.repeat(scores, rep, axis=0)             # [H, Q, Q]
+    decay = jnp.exp(jnp.clip(cum.T[:, :, None] - cum.T[:, None, :],
+                             a_max=0.0))                 # [H, Qi, Qj]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(mask[None], scores * decay, 0.0)
+    m = m * dt.T[:, None, :]                             # weight dt_j
+    y_intra = jnp.einsum("hij,jhp->ihp", m, x)
+
+    # inter-chunk term from carried state
+    ch = jnp.repeat(cm, rep, axis=1)                     # [Q, H, N]
+    state = state_scr[...]
+    y_inter = jnp.einsum("qhn,hnp->qhp", ch, state) * \
+        jnp.exp(cum)[:, :, None]
+
+    o_ref[0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+    # state update: S <- exp(sum dA) S + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    bh = jnp.repeat(bm, rep, axis=1)                     # [Q, H, N]
+    w = jnp.exp(jnp.clip(cum_last - cum, a_max=0.0)) * dt
+    new_state = jnp.einsum("qhn,qh,qhp->hnp", bh, w, x)
+    state_scr[...] = state * jnp.exp(cum_last[0])[:, None, None] + new_state
+
+
+def ssd_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+               c: jax.Array, *, chunk: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """x: [Bt, S, H, P]; dt: [Bt, S, H]; a: [H]; b, c: [Bt, S, G, N]."""
+    bt, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+    kernel = functools.partial(_ssd_kernel, rep=rep, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(bt, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((h,), lambda i, j: (0,)),
+            pl.BlockSpec((1, chunk, g, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, chunk, g, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, h, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the SSD kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, chunk: int = 128, interpret: bool = True):
+    return ssd_kernel(x, dt, a, b, c, chunk=chunk, interpret=interpret)

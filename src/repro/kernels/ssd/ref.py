@@ -1,0 +1,38 @@
+"""Oracle for the SSD kernel: the models/ssm.py chunked scan (which is
+itself validated against per-step recurrence in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(x, dt, a, b, c, chunk: int = 128):
+    from ...models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x, dt, a, b, c, chunk)
+    return y
+
+
+def reference_ssd_sequential(x, dt, a, b, c):
+    """Exact per-step recurrence (slow; ground truth for both)."""
+    bt, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt_, ct_ = t
+        decay = jnp.exp(dtt * a)[:, :, None, None]       # [Bt,H,1,1]
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dtt, bt_, xt)
+        state = state * decay + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ct_, state)
+        return state, y
+
+    init = jnp.zeros((bt, h, n, p), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

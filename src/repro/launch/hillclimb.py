@@ -1,0 +1,116 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Performance hillclimbing on an LM cell (the §Perf loop): the paper's
+agent + feedback machinery applied to the production-mesh dry-run.
+
+Each iteration logs: decisions -> mapper -> roofline terms -> feedback,
+giving the hypothesis -> change -> before/after -> confirmed/refuted
+record that EXPERIMENTS.md §Perf reports.
+
+    python -m repro.launch.hillclimb --arch olmoe-1b-7b --shape train_4k \
+        [--algo trace|opro|annealing] [--iters 12] [--out log.md]
+"""
+
+import argparse
+import json
+import sys
+
+from ..configs import ARCH_IDS, SHAPES
+from ..core.agent import MapperAgent, SEARCHES
+from ..core.evaluator import LMCellEvaluator
+from ..core.mapping import space
+
+
+def run(arch: str, shape: str, algo: str = "trace", iters: int = 12,
+        seed: int = 0, multi_pod: bool = False, out=None,
+        start: str = "expert"):
+    ev = LMCellEvaluator(arch, shape, multi_pod=multi_pod)
+    if start == "expert":
+        # the per-arch expert mapper's decisions (the §Perf baseline)
+        decisions = space.default_decisions()
+        if SHAPES[shape].step == "train":
+            decisions["instance_limit_decision"]["microbatches"] = 8
+        decisions["layout_decision"]["scores"] = "chunked"
+        if arch in ("qwen3-14b", "granite-moe-3b-a800m",
+                    "recurrentgemma-2b"):
+            decisions["task_decision"]["attention"] = "SP"
+    else:
+        decisions = space.random_decisions(seed)
+    agent = MapperAgent(decisions)
+    search = SEARCHES[algo](seed=seed)
+
+    lines = [f"# Hillclimb: {arch} x {shape} ({algo}, seed {seed})", ""]
+
+    def log(msg):
+        print(msg, flush=True)
+        lines.append(msg)
+
+    graph = None
+    res = None
+    # run the loop manually so every iteration is logged
+    from ..core.agent.trace_lite import TraceGraph, TraceRecord
+    graph = TraceGraph()
+    best = None
+    seen = set()
+    for it in range(iters):
+        if it > 0:
+            proposal = search.propose(agent, graph)
+            for _ in range(8):
+                agent.set_decisions(proposal)
+                if agent.mapper_text() not in seen:
+                    break
+                proposal = search.neighbor_fn(proposal, search.rng, k=1)
+            agent.set_decisions(proposal)
+        mapper = agent.mapper_text()
+        seen.add(mapper)
+        fb = ev(mapper)
+        rec = TraceRecord(values=agent.decisions(),
+                          outputs=agent.generate_mapper(), mapper=mapper,
+                          score=fb.score, feedback=fb.render("full"))
+        graph.add(rec)
+        report = ev.report_for(mapper)
+        log(f"\n## iter {it}")
+        log("decisions: " + json.dumps(
+            {k: v for k, v in rec.values.items()
+             if k != 'index_task_map_decision'}, default=str))
+        if report is not None:
+            log(f"terms: compute={report.compute_s*1e3:.1f}ms "
+                f"memory={report.memory_s*1e3:.1f}ms "
+                f"collective={report.collective_s*1e3:.1f}ms "
+                f"bottleneck={report.bottleneck} "
+                f"peak_hbm={(report.peak_memory_bytes or 0)/2**30:.1f}GiB "
+                f"roofline_frac={report.roofline_fraction:.4f}")
+        log("feedback: " + fb.render("full").replace("\n", " | "))
+        if fb.score is not None and (best is None or fb.score < best[0]):
+            best = (fb.score, mapper, report)
+    if best:
+        log(f"\n## best: {best[0]*1e3:.1f} ms/step")
+        log("```\n" + best[1] + "\n```")
+        if best[2] is not None:
+            log(f"roofline_fraction={best[2].roofline_fraction:.4f} "
+                f"bottleneck={best[2].bottleneck}")
+    log(f"\ncompiles: {ev.compile_count}")
+    if out:
+        with open(out, "w") as f:
+            f.write("\n".join(lines))
+    return best, graph
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=tuple(SHAPES), required=True)
+    ap.add_argument("--algo", default="trace", choices=tuple(SEARCHES))
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--start", default="expert", choices=("expert", "random"))
+    ap.add_argument("--out")
+    args = ap.parse_args(argv)
+    run(args.arch, args.shape, args.algo, args.iters, args.seed,
+        args.multi_pod, args.out, args.start)
+
+
+if __name__ == "__main__":
+    main()

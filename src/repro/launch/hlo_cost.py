@@ -1,0 +1,358 @@
+"""Text-based HLO cost model with call-graph rollup.
+
+XLA's built-in ``compiled.cost_analysis()`` counts every computation ONCE --
+``while`` bodies (i.e. ``lax.scan`` over layers, KV chunks, microbatches)
+are not multiplied by their trip counts, which understates FLOPs by ~the
+layer count.  This module re-derives:
+
+    flops            dot/convolution FLOPs, trip-count aware
+    traffic_bytes    an HBM-traffic proxy: for each *materializing* op
+                     (fusion / dot / copy / dus / collective / unfused
+                     compute op), output bytes + operand bytes
+    collective_bytes data moved per device by collective ops (with the
+                     ring-algorithm factors of launch.roofline)
+
+by parsing ``compiled.as_text()``: per-computation symbol tables give
+operand shapes; ``while`` trip counts come from the loop-condition
+constant; fusion/call/while/conditional edges are rolled up bottom-up.
+
+Exact for dot FLOPs (the dominant term); elementwise/transcendental FLOPs
+are ignored (<2% for these workloads).  Validated in
+tests/test_hlo_cost.py against analytically-known programs.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-get-and-update-state",
+}
+
+_SHAPE_PART = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_TRIP_CFG = re.compile(r"known_trip_count[\"':{ ]+n[\"': ]+(\d+)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONSTANT_INT = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_PART.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, shape in shapes:
+        total += _DTYPE_BYTES[dt] * int(math.prod(shape)) if shape else \
+            _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(
+        default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(COLLECTIVE_FACTORS.get(k, 1.0) * v
+                   for k, v in self.coll.items())
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1))
+                # parameters shapes from the header signature
+                params = m.group(2)
+                for i, part in enumerate(params.split(", ")):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        cur.shapes[pname.strip().lstrip("%")] = \
+                            _parse_shapes(ptype)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, type_text, opcode, rest = m.groups()
+        out_shapes = _parse_shapes(type_text)
+        operands = _OPERAND.findall(rest.split(")", 1)[0]) if ")" in rest \
+            else _OPERAND.findall(rest)
+        op = OpInfo(name, opcode, out_shapes, operands, rest,
+                    is_root=line.lstrip().startswith("ROOT"))
+        cur.ops.append(op)
+        cur.shapes[name] = out_shapes
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _dot_flops(comp: Computation, op: OpInfo) -> float:
+    out_elems = sum(math.prod(s) for _, s in op.out_shapes)
+    m = _LHS_CDIMS.search(op.attrs)
+    k = 1
+    if m and op.operands:
+        lhs_shapes = comp.shapes.get(op.operands[0])
+        if lhs_shapes:
+            lhs = lhs_shapes[0][1]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs):
+                    k *= lhs[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Computation, op: OpInfo) -> float:
+    out_elems = sum(math.prod(s) for _, s in op.out_shapes)
+    k = 1
+    if len(op.operands) >= 2:
+        rhs_shapes = comp.shapes.get(op.operands[1])
+        if rhs_shapes:
+            rhs = rhs_shapes[0][1]
+            # kernel: spatial... x in_ch x out_ch (last dim = out features)
+            k = math.prod(rhs[:-1]) if len(rhs) > 1 else 1
+    return 2.0 * out_elems * k
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        for m in _CONSTANT_INT.finditer(op.attrs):
+            best = max(best, int(m.group(1)))
+        if op.opcode == "constant":
+            m = _CONSTANT_INT.search("constant(" + op.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_bytes(comp: Computation, op: OpInfo) -> int:
+    total = 0
+    for o in op.operands:
+        shapes = comp.shapes.get(o)
+        if shapes:
+            total += _bytes_of(shapes)
+    return total
+
+
+def analyze_text(text: str, entry: Optional[str] = None) -> Cost:
+    comps = parse_module(text)
+    if not comps:
+        return Cost()
+    # find entry: the ENTRY line loses its marker in our parse; detect by
+    # picking the computation that no one calls, preferring names with 'main'.
+    called = set()
+    for c in comps.values():
+        for op in c.ops:
+            for pat in (_CALLS, _TO_APPLY, _BODY, _COND):
+                m = pat.search(op.attrs)
+                if m:
+                    called.add(m.group(1))
+            mb = _BRANCHES.search(op.attrs)
+            if mb:
+                for nm in mb.group(1).split(","):
+                    called.add(nm.strip().lstrip("%"))
+    roots = [n for n in comps if n not in called]
+    if entry is None:
+        mains = [n for n in roots if "main" in n] or roots or list(comps)
+        entry = mains[0]
+
+    memo: Dict[str, Cost] = {}
+
+    # Consumers that force their operands to materialize in HBM on TPU
+    # (everything else is assumed fused into its consumer).
+    _MAT = {"dot", "convolution", "while", "conditional", "call",
+            "custom-call", "dynamic-update-slice", "scatter", "sort",
+            "reduce", "reduce-window", "gather",
+            "async-start"} | set(COLLECTIVE_OPS)
+    # Ops whose own output is always HBM traffic (reads of sliced buffers).
+    _SELF = _MAT | {"dynamic-slice"}
+
+    def cost_of(name: str, depth: int = 0) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        c = Cost()
+        if comp is None or depth > 64:
+            memo[name] = c
+            return c
+        memo[name] = c  # guard cycles
+        # consumer map: does op output feed a materializing consumer?
+        materializes: Dict[str, bool] = {}
+        for op in comp.ops:
+            if op.opcode in _MAT:
+                for o in op.operands:
+                    materializes[o] = True
+            if op.is_root or op.opcode == "tuple":
+                for o in op.operands:
+                    materializes[o] = True
+        for op in comp.ops:
+            if op.opcode in _SKIP_OPS:
+                continue
+            if op.opcode == "dot":
+                c.flops += _dot_flops(comp, op)
+                c.traffic += _bytes_of(op.out_shapes) + _operand_bytes(comp, op)
+            elif op.opcode == "convolution":
+                c.flops += _conv_flops(comp, op)
+                c.traffic += _bytes_of(op.out_shapes) + _operand_bytes(comp, op)
+            elif op.opcode == "fusion":
+                child = _CALLS.search(op.attrs)
+                if child:
+                    sub = cost_of(child.group(1), depth + 1)
+                    c.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        c.coll[k] = c.coll.get(k, 0.0) + v
+                # TPU-fusion granularity: a fusion's output only pays HBM
+                # traffic when a materializing consumer reads it.
+                if materializes.get(op.name):
+                    c.traffic += _bytes_of(op.out_shapes)
+            elif op.opcode == "while":
+                body = _BODY.search(op.attrs)
+                cond = _COND.search(op.attrs)
+                mcfg = _TRIP_CFG.search(op.attrs)
+                if mcfg:
+                    trip = int(mcfg.group(1))
+                else:
+                    trip = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    c.add(cost_of(body.group(1), depth + 1), mult=trip)
+            elif op.opcode == "conditional":
+                mb = _BRANCHES.search(op.attrs)
+                if mb:
+                    branches = [b.strip().lstrip("%")
+                                for b in mb.group(1).split(",")]
+                    subs = [cost_of(b, depth + 1) for b in branches]
+                    if subs:
+                        # worst-case branch
+                        worst = max(subs, key=lambda s: s.flops + s.traffic)
+                        c.add(worst)
+            elif op.opcode == "call" or op.opcode == "async-start":
+                child = _TO_APPLY.search(op.attrs) or _CALLS.search(op.attrs)
+                if child:
+                    c.add(cost_of(child.group(1), depth + 1))
+            elif any(op.opcode.startswith(k) for k in COLLECTIVE_OPS):
+                if op.opcode.endswith("-done"):
+                    continue
+                kind = next(k for k in COLLECTIVE_OPS
+                            if op.opcode.startswith(k))
+                b = _bytes_of(op.out_shapes)
+                # CPU artifact: bf16 dots are computed in f32 and their
+                # partial-sum reductions "promoted" to f32; TPU reduces the
+                # native bf16 dot output -- count at bf16 width.
+                if "_promoted" in op.attrs and all(
+                        dt == "f32" for dt, _ in op.out_shapes):
+                    b //= 2
+                c.coll[kind] = c.coll.get(kind, 0.0) + b
+                c.traffic += b
+            else:
+                # unfused compute op (reduce, transpose, copy, dus, ...):
+                # output write only, and only if a materializing consumer
+                # (or the root) reads it -- elementwise chains fuse on TPU.
+                if op.opcode in _SELF or materializes.get(op.name):
+                    c.traffic += _bytes_of(op.out_shapes)
+        memo[name] = c
+        return c
+
+    return cost_of(entry)
+
+
+# ---------------------------------------------------------------------------
+# CPU-backend correction: XLA CPU upcasts bf16 dot operands to f32 (no
+# native bf16 matmul) and hoists the converts out of loops, so
+# memory_analysis() counts an extra f32 copy of every bf16 weight/cache
+# that feeds a dot.  TPU consumes bf16 natively -- subtract those copies
+# to estimate the TPU-real peak.  (Documented in EXPERIMENTS.md §Dry-run.)
+_CONVERT_RE = re.compile(
+    r"\(param[\w.]*: bf16\[([\d,]+)\]\) -> f32\[\1\]")
+
+
+def cpu_upcast_bytes(text: str, min_bytes: int = 1 << 25) -> int:
+    """Total bytes of distinct hoisted bf16->f32 dot-input copies."""
+    seen = set()
+    total = 0
+    for m in _CONVERT_RE.finditer(text):
+        dims = m.group(1)
+        if dims in seen:
+            continue
+        seen.add(dims)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * 4
+        if b >= min_bytes:
+            total += b
+    return total

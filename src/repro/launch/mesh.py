@@ -1,0 +1,69 @@
+"""Production mesh construction + the DSL's view of it.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real (1-device) topology.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.dsl.machine import MachineSpace, make_machine
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: Tuple[int, ...] = None,
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    import jax
+    n = len(jax.devices())
+    if shape is None:
+        # squarest 2-D factorization of n
+        a = int(np.floor(np.sqrt(n)))
+        while n % a:
+            a -= 1
+        shape = (a, n // a)
+    return jax.make_mesh(shape, axes)
+
+
+def machine_factory_for_mesh(mesh):
+    """The ``Machine(PROC)`` the DSL sees: the mesh as a MachineSpace.
+
+    A (pod, data, model) mesh is exposed 2-D as (pod*data, model) so the
+    paper's (nodes, procs-per-node) mapping functions apply unchanged.
+    """
+    shape = tuple(mesh.devices.shape)
+    names = tuple(mesh.axis_names)
+    if len(shape) == 3:
+        shape2 = (shape[0] * shape[1], shape[2])
+    else:
+        shape2 = shape
+
+    def factory(proc_kind: str) -> MachineSpace:
+        return make_machine(proc_kind, shape2, names)
+
+    return factory
+
+
+def machine_factory_flat(n_devices: int, shape: Optional[Tuple[int, ...]] = None):
+    """Mesh-less factory (unit tests for the DSL itself)."""
+    if shape is None:
+        a = int(np.floor(np.sqrt(n_devices)))
+        while n_devices % a:
+            a -= 1
+        shape = (a, n_devices // a)
+
+    def factory(proc_kind: str) -> MachineSpace:
+        return make_machine(proc_kind, shape)
+
+    return factory

@@ -1,0 +1,230 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh) cell, all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` supplies FLOPs/bytes for the per-device partitioned
+module.  Collective bytes are parsed from the compiled HLO text: we sum
+data-moved estimates for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (ring-algorithm approximations, see
+_COLLECTIVE_FACTORS).
+
+Hardware constants: TPU v5e-like -- 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (1-link conservative model)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# Estimated data moved per device, as a multiple of the parsed tensor bytes
+# (ring algorithms; factor-of-(g-1)/g refinements are ~1 for g >= 8).
+_COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "all-gather": 1.0,          # of the (gathered) output
+    "reduce-scatter": 1.0,      # of the (full) input == output * g, see note
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|ragged-all-to-all)(?:-start|-done)?\(",
+)
+
+
+def _bytes_of_shape_text(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_weighted_bytes(self) -> float:
+        return sum(_COLLECTIVE_FACTORS.get(k, 1.0) * v
+                   for k, v in self.bytes_by_kind.items())
+
+    @property
+    def total_raw_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective tensor bytes from (compiled or stable-HLO) text."""
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_shape_text, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # paired with -start; avoid double counting
+        b = _bytes_of_shape_text(out_shape_text)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    step: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    peak_memory_bytes: Optional[float] = None
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    step_time_s: float = 0.0
+    roofline_fraction: float = 0.0
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self))
+
+
+def model_flops_for(cfg, shape_spec, step: str, n_layers_tokens=None) -> float:
+    """MODEL_FLOPS = 6·N·D (train, dense) / 6·N_active·D (MoE) / 2·N·D
+    per forward-only token for inference steps."""
+    n_active = cfg.active_param_count()
+    if step == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = shape_spec.global_batch * (
+                shape_spec.seq_len + cfg.max_target_len)
+        return 6.0 * n_active * tokens
+    if step == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = shape_spec.global_batch * (
+                shape_spec.seq_len + cfg.max_target_len)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_spec.global_batch
+
+
+def analyze(compiled, *, hlo_text: str, cfg, shape_spec, step: str,
+            arch: str, mesh_desc: str, n_devices: int,
+            min_bytes_per_dev: float = 0.0) -> RooflineReport:
+    """Roofline terms from the compiled per-device partitioned module.
+
+    FLOPs / traffic / collective bytes come from launch.hlo_cost (trip-count
+    aware; XLA's cost_analysis() counts while bodies once, understating a
+    scanned-layer model by ~num_layers -- see tests/test_hlo_cost.py).
+    """
+    from .hlo_cost import analyze_text
+    cost = analyze_text(hlo_text)
+    flops = float(cost.flops)
+    byts = float(cost.traffic)
+    coll_bytes = float(cost.collective_bytes)
+
+    class _CollShim:
+        bytes_by_kind = {k: int(v) for k, v in cost.coll.items()}
+        count_by_kind = {k: 0 for k in cost.coll}
+    coll = _CollShim()
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mf = model_flops_for(cfg, shape_spec, step)
+    global_flops = flops * n_devices
+    ratio = mf / global_flops if global_flops else 0.0
+
+    peak_mem = None
+    try:
+        from .hlo_cost import cpu_upcast_bytes
+        ma = compiled.memory_analysis()
+        raw = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes
+                    + ma.generated_code_size_in_bytes)
+        # subtract CPU-only hoisted bf16->f32 dot-input copies (TPU dots
+        # consume bf16 natively; see hlo_cost.cpu_upcast_bytes)
+        peak_mem = max(raw - cpu_upcast_bytes(hlo_text), 0.0)
+    except Exception:
+        pass
+
+    step_time = max(compute_s, memory_s, collective_s)
+    # Ideal step time: compute roofline OR the unavoidable HBM reads
+    # (params + caches per device) -- whichever binds.  Decode steps are
+    # memory-roofline by construction.
+    ideal = max(mf / (n_devices * PEAK_FLOPS), min_bytes_per_dev / HBM_BW)
+    frac = ideal / step_time if step_time > 0 else 0.0
+
+    return RooflineReport(
+        arch=arch, shape=shape_spec.name, mesh=mesh_desc, step=step,
+        n_devices=n_devices, flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes=coll_bytes, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck, model_flops=mf,
+        useful_flops_ratio=ratio, peak_memory_bytes=peak_mem,
+        collective_counts=coll.count_by_kind,
+        collective_bytes_by_kind=coll.bytes_by_kind,
+        step_time_s=step_time, roofline_fraction=frac,
+    )
+
+
+def format_report(r: RooflineReport) -> str:
+    gb = 1 << 30
+    lines = [
+        f"[{r.arch} x {r.shape} @ {r.mesh}] step={r.step}",
+        f"  compute   {r.compute_s*1e3:10.3f} ms   "
+        f"({r.flops_per_device/1e12:.2f} TFLOP/dev)",
+        f"  memory    {r.memory_s*1e3:10.3f} ms   "
+        f"({r.bytes_per_device/gb:.2f} GiB/dev)",
+        f"  collect.  {r.collective_s*1e3:10.3f} ms   "
+        f"({r.collective_bytes/gb:.3f} GiB moved/dev) {r.collective_counts}",
+        f"  bottleneck={r.bottleneck}  "
+        f"useful_flops_ratio={r.useful_flops_ratio:.3f}  "
+        f"roofline_fraction={r.roofline_fraction:.3f}",
+    ]
+    if r.peak_memory_bytes:
+        lines.append(f"  peak_hbm  {r.peak_memory_bytes/gb:10.2f} GiB/dev")
+    if r.note:
+        lines.append(f"  note: {r.note}")
+    return "\n".join(lines)

@@ -1,0 +1,181 @@
+"""Step-function builders: train_step / prefill_step / serve_step with
+shardings derived from a MappingPlan (or explicit AxisRules).
+
+These are the functions the dry-run lowers and the trainers execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.mapping.lm_bridge import rules_from_plan, cache_order_from_plan
+from ..models.config import ModelConfig
+from ..models.moe import expert_permutation
+from ..models.registry import Model
+from ..parallel.sharding import AxisRules, axis_rules, param_shardings
+from ..train.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+# -- sharding helpers -----------------------------------------------------------
+def batch_shardings(rules: AxisRules, abstract_batch):
+    def shard_one(a):
+        if a.ndim >= 2:
+            axes = ("batch",) + (None,) * (a.ndim - 1)
+        elif a.ndim == 1:
+            axes = ("batch",)
+        else:
+            axes = ()
+        return rules.sharding(axes, a.shape)
+    return jax.tree.map(shard_one, abstract_batch)
+
+
+_CACHE_AXES_BY_NAME = {
+    # name -> axes chooser given ndim and order
+    "k": lambda nd, order: (("layers",) if nd == 5 else ()) + (
+        ("cache_seq", "cache_batch", "kv_heads", None) if order == "F"
+        else ("cache_batch", "cache_seq", "kv_heads", None)),
+    "state": lambda nd, order: (("layers",) if nd >= 4 else ()) + (
+        ("cache_batch", "rnn", None, None) if nd >= 4
+        else ("cache_batch", "rnn")),
+    "conv": lambda nd, order: (("layers",) if nd == 4 else ()) + (
+        "cache_batch", None, "rnn"),
+}
+_CACHE_AXES_BY_NAME["v"] = _CACHE_AXES_BY_NAME["k"]
+
+
+def cache_axes_for(path_name: str, ndim: int, order: str):
+    fn = _CACHE_AXES_BY_NAME.get(path_name)
+    if fn is None:
+        return (None,) * ndim
+    axes = fn(ndim, order)
+    if len(axes) != ndim:
+        # rglru state [L, B, R] vs mamba [L, B, H, N, P] handled above;
+        # fall back to replicated if mismatched.
+        if path_name == "state" and ndim == 3:
+            axes = ("layers", "cache_batch", "rnn")
+        else:
+            axes = (None,) * ndim
+    return axes
+
+
+def cache_shardings(rules: AxisRules, abstract_caches, order: str = "C"):
+    def shard_one(path, a):
+        name = None
+        for part in reversed(path):
+            if hasattr(part, "key"):
+                name = part.key
+                break
+        axes = cache_axes_for(name, a.ndim, order)
+        return rules.sharding(axes, a.shape)
+    return jax.tree_util.tree_map_with_path(shard_one, abstract_caches)
+
+
+def replicated(rules: AxisRules):
+    return NamedSharding(rules.mesh, P())
+
+
+# -- train step ---------------------------------------------------------------------
+def make_train_step(model: Model, rules: AxisRules,
+                    opt_cfg: Optional[AdamWConfig] = None,
+                    moe_perm=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    n_micro = max(1, int(rules.microbatches))
+
+    def loss_fn(params, batch):
+        with axis_rules(rules):
+            loss, _ = model.loss(params, batch, moe_perm=moe_perm)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            def resplit(x):
+                b = x.shape[0]
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+            micro = jax.tree.map(resplit, batch)
+
+            def acc_fn(grads_acc, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(jnp.add, grads_acc, g)
+                return grads_acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(acc_fn, zeros, micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, rules: AxisRules, order: str = "C",
+                      moe_perm=None):
+    def prefill_step(params, batch, caches):
+        with axis_rules(rules):
+            logits, caches = model.prefill(params, batch, caches,
+                                           moe_perm=moe_perm, order=order)
+        return logits, caches
+    return prefill_step
+
+
+def make_serve_step(model: Model, rules: AxisRules, order: str = "C",
+                    moe_perm=None):
+    """One greedy decode step: (params, tokens [B,1], caches, index) ->
+    (next_tokens [B,1], logits, caches)."""
+    def serve_step(params, tokens, caches, index):
+        with axis_rules(rules):
+            logits, caches = model.decode_step(params, tokens, caches, index,
+                                               moe_perm=moe_perm, order=order)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, caches
+    return serve_step
+
+
+# -- bundled builder (dryrun / trainers) ------------------------------------------------
+def build_cell(model: Model, plan, mesh, step_kind: str,
+               opt_cfg: Optional[AdamWConfig] = None):
+    """Resolve everything a cell needs: rules, step fn, shardings.
+
+    step_kind: "train" | "prefill" | "decode".
+    Returns dict with fn/in_shardings/out_shardings factories.
+    """
+    rules = rules_from_plan(plan, mesh, step_kind)
+    order = cache_order_from_plan(plan)
+    cfg = model.cfg
+    perm = None
+    if cfg.num_experts:
+        perm = expert_permutation(plan, cfg.num_experts,
+                                  mesh.devices.size)
+    abstract = model.abstract_params()
+    axes = model.param_axes()
+    p_sh = param_shardings(axes, rules, abstract)
+    out = {
+        "rules": rules,
+        "order": order,
+        "param_shardings": p_sh,
+        "abstract_params": abstract,
+        "moe_perm": perm,
+    }
+    if step_kind == "train":
+        opt_abstract = jax.eval_shape(adamw_init, abstract)
+        m_sh = param_shardings(axes, rules, opt_abstract.m)
+        opt_sh = AdamWState(step=replicated(rules), m=m_sh, v=m_sh)
+        out["abstract_opt"] = opt_abstract
+        out["opt_shardings"] = opt_sh
+        out["fn"] = make_train_step(model, rules, opt_cfg, moe_perm=perm)
+    elif step_kind == "prefill":
+        out["fn"] = make_prefill_step(model, rules, order, moe_perm=perm)
+    else:
+        out["fn"] = make_serve_step(model, rules, order, moe_perm=perm)
+    return out

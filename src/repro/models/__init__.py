@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .registry import Model, get_model, build_param_specs
+
+__all__ = ["ModelConfig", "Model", "get_model", "build_param_specs"]

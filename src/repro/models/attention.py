@@ -1,0 +1,324 @@
+"""Grouped-query attention with the option set covering every assigned arch:
+
+* GQA / MQA / MHA (num_kv_heads <= num_heads)
+* causal, bidirectional (encoder), sliding-window ("local") masks
+* logit soft-capping (gemma2), qk-norm (qwen3 / chameleon), RoPE
+* cross-attention (whisper decoder)
+* three implementations: ``naive`` (materialized scores), ``chunked``
+  (online-softmax scan over KV blocks -- the flash-attention algorithm in
+  pure jnp; O(S * chunk) memory, used for long context), ``pallas`` (the
+  TPU kernel in kernels/flash_attention)
+* decode step against a full KV cache or a ring-buffer (local layers)
+
+The KV-cache dim order is a DSL ``Layout`` decision: "C" = [B, S, K, D]
+(batch-major), "F" = [S, B, K, D] (sequence-major).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import current_rules, logical_constraint
+from .config import ModelConfig
+from .layers import rope
+from .params import spec
+
+NEG_INF = -2.3819763e38  # bf16-safe large negative
+
+CHUNKED_THRESHOLD = 4096  # use online-softmax scan above this KV length
+
+
+# -- specs --------------------------------------------------------------------
+def attn_specs(cfg: ModelConfig, kind: str = "attn", cross: bool = False):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if kind == "local" and cfg.name.startswith("recurrentgemma"):
+        K = cfg.num_kv_heads
+    dt = cfg.dtype
+    out = {
+        "wq": spec((d, H, hd), ("d_model", "heads", "head_dim"), dt),
+        "wk": spec((d, K, hd), ("d_model", "kv_heads", "head_dim"), dt),
+        "wv": spec((d, K, hd), ("d_model", "kv_heads", "head_dim"), dt),
+        "wo": spec((H, hd, d), ("heads", "head_dim", "d_model_out"), dt),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = spec((hd,), ("head_dim",), "float32", init="ones")
+        out["k_norm"] = spec((hd,), ("head_dim",), "float32", init="ones")
+    return out
+
+
+def _split_gqa(q, num_kv: int):
+    """[B,S,H,D] -> [B,S,K,G,D]"""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _qk_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+# -- score path helpers ---------------------------------------------------------
+def _mask_bias(q_pos, kv_pos, causal: bool, window: Optional[int],
+               kv_len: Optional[jax.Array] = None):
+    """Boolean allowed-mask [..., S, T] from position vectors."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if kv_len is not None:
+        ok &= kp < kv_len
+    return ok
+
+
+def _naive_attn(q, k, v, *, q_pos, kv_pos, causal, window, softcap, kv_len=None):
+    """q: [B,S,K,G,D]; k,v: [B,T,K,D] -> [B,S,K,G,D]"""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = _mask_bias(q_pos, kv_pos, causal, window, kv_len)  # [B?,S,T]
+    while ok.ndim < s.ndim:
+        ok = ok[:, None] if ok.ndim > 2 else ok[None]
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out
+
+
+def _chunked_attn(q, k, v, *, q_pos, kv_pos, causal, window, softcap,
+                  chunk: int = 1024, kv_len=None):
+    """Online-softmax scan over KV chunks (flash-attention algorithm).
+
+    Memory is O(B*S*chunk) rather than O(B*S*T).  Identical numerics to
+    _naive_attn up to fp associativity; tested against it.
+    """
+    b, s_len, kh, g, d = q.shape
+    t = k.shape[1]
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, [(0, 0)] * (kv_pos.ndim - 1) + [(0, pad)],
+                         constant_values=2**30)
+    scale = d ** -0.5
+    kc = k.reshape(b, nc, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(kv_pos.shape[:-1] + (nc, chunk))
+    pc = jnp.moveaxis(pc, -2, 0)
+
+    m0 = jnp.full((b, kh, g, s_len), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s_len), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, s_len, d), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kcc, vcc, pcc = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", q, kcc).astype(jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = _mask_bias(q_pos, pcc, causal, window, kv_len)
+        while ok.ndim < s.ndim:
+            ok = ok[:, None] if ok.ndim > 2 else ok[None]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vcc.dtype), vcc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    # [B,K,G,S,D] -> [B,S,K,G,D]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def _run_attention_core(cfg, q, k, v, *, q_pos, kv_pos, causal, window,
+                        kv_len=None, impl: Optional[str] = None):
+    softcap = cfg.attn_softcap
+    t = k.shape[1]
+    if impl is None:
+        r = current_rules()
+        impl = getattr(r, "attn_impl", None) if r is not None else None
+    if q.shape[1] <= 16:
+        # decode: scores are [*, q<=16, T] -- tiny, and the naive einsum
+        # partitions along a sharded KV/seq axis under GSPMD (the chunked
+        # scan cannot be partitioned along its scanned axis).
+        impl = "naive"
+    if impl is None or impl == "auto":
+        impl = "chunked" if t > CHUNKED_THRESHOLD else "naive"
+    if impl == "pallas":
+        from ..kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            window=window, softcap=softcap, kv_len=kv_len)
+    if impl == "chunked":
+        return _chunked_attn(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                             causal=causal, window=window, softcap=softcap,
+                             kv_len=kv_len)
+    return _naive_attn(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                       window=window, softcap=softcap, kv_len=kv_len)
+
+
+# -- cache ---------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+               order: str = "C", dtype=None):
+    """KV cache for one layer.  ``kind``: "attn" (full) | "local" (ring)."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    dtype = dtype or cfg.dtype
+    length = max_len
+    if kind == "local" and cfg.local_window:
+        length = min(max_len, cfg.local_window)
+    if order == "F":
+        shape = (length, batch, K, hd)
+    else:
+        shape = (batch, length, K, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def _cache_seq_axis(order: str) -> int:
+    return 0 if order == "F" else 1
+
+
+def _cache_read(cache, order):
+    k, v = cache["k"], cache["v"]
+    if order == "F":
+        k = jnp.swapaxes(k, 0, 1)
+        v = jnp.swapaxes(v, 0, 1)
+    return k, v
+
+
+def _cache_write(cache, k_new, v_new, index, order, ring_len=None):
+    """k_new/v_new: [B, S_new, K, D]; index = absolute position of first new
+    token.  Ring-buffer writes wrap modulo ring_len."""
+    axis = _cache_seq_axis(order)
+    if order == "F":
+        k_new = jnp.swapaxes(k_new, 0, 1)
+        v_new = jnp.swapaxes(v_new, 0, 1)
+    length = cache["k"].shape[axis]
+    pos = index % length if ring_len else index
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis)
+    return {"k": k, "v": v}
+
+
+# -- public entry points -----------------------------------------------------------
+def attention(cfg: ModelConfig, p, x, *, positions, kind: str = "attn",
+              causal: bool = True, kv_x=None, impl: Optional[str] = None,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder).
+
+    kind: "attn" = global; "local" = sliding window of cfg.local_window.
+    kv_x: cross-attention source (bidirectional over kv_x positions).
+    return_kv: also return the (k, v) tensors (prefill cache population).
+    """
+    window = cfg.local_window if kind == "local" else None
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+        is_causal = causal
+    else:
+        kv_pos = jnp.arange(src.shape[1])[None]
+        is_causal = False
+    q = logical_constraint(q, ("batch", "act_seq", "heads", "head_dim"))
+    qg = _split_gqa(q, k.shape[2])
+    out = _run_attention_core(cfg, qg, k, v, q_pos=positions, kv_pos=kv_pos,
+                              causal=is_causal, window=window, impl=impl)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.num_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = logical_constraint(y, ("batch", "act_seq", "act_d"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def prefill_cache_write(cfg: ModelConfig, cache, k, v, *, kind: str,
+                        order: str = "C"):
+    """Write full-sequence K/V (from prefill) into a decode cache.
+
+    Full caches: write at position 0.  Ring caches (local layers): write
+    the trailing window, rolled so slot p % window holds position p.
+    """
+    s = k.shape[1]
+    window = cfg.local_window if kind == "local" else None
+    axis = _cache_seq_axis(order)
+    length = cache["k"].shape[axis]
+    if window and length <= window:
+        take = min(s, length)
+        kw, vw = k[:, -take:], v[:, -take:]
+        if s >= length:
+            shift = s % length
+            kw = jnp.roll(kw, shift, axis=1)
+            vw = jnp.roll(vw, shift, axis=1)
+            return _cache_write(cache, kw, vw, 0, order)
+        return _cache_write(cache, kw, vw, 0, order)
+    return _cache_write(cache, k, v, 0, order)
+
+
+def decode_attention(cfg: ModelConfig, p, x, cache, *, index,
+                     kind: str = "attn", order: str = "C", cross: bool = False,
+                     impl: Optional[str] = None):
+    """One-token decode.  x: [B, 1, D]; index: scalar current position.
+
+    Returns (y, new_cache).  For ``cross=True`` the cache holds the
+    precomputed encoder K/V and is not updated.
+    """
+    window = cfg.local_window if kind == "local" else None
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+        v_new = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+        if cfg.qk_norm:
+            k_new = _qk_norm(k_new, p["k_norm"], cfg.norm_eps)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        ring = window if kind == "local" else None
+        cache = _cache_write(cache, k_new, v_new, index, order, ring_len=ring)
+    k, v = _cache_read(cache, order)
+    length = k.shape[1]
+    if cross:
+        kv_pos = jnp.arange(length)[None]
+        causal, win, kv_len = False, None, None
+    elif kind == "local" and cfg.local_window and length <= cfg.local_window:
+        # ring buffer: slot s holds absolute position derived from index
+        slots = jnp.arange(length)
+        wrap = (index // length) * length
+        kv_pos = jnp.where(slots <= index % length, wrap + slots,
+                           wrap - length + slots)
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)[None]  # unwritten slots
+        causal, win, kv_len = True, window, None
+    else:
+        kv_pos = jnp.arange(length)[None]
+        causal, win, kv_len = True, window, index + 1
+    qg = _split_gqa(q, k.shape[2])
+    out = _run_attention_core(cfg, qg, k, v, q_pos=positions, kv_pos=kv_pos,
+                              causal=causal, window=win, kv_len=kv_len,
+                              impl=impl)
+    out = out.reshape(x.shape[0], 1, cfg.num_heads, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache

@@ -1,0 +1,105 @@
+"""Model configuration covering every assigned architecture family."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    local_window: Optional[int] = None       # window for "local" layers
+    # per-layer block kinds, cycled over depth:
+    #   "attn" (global), "local" (sliding window), "rec" (RG-LRU), "ssm"
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    use_post_norms: bool = False             # gemma2 sandwich norms
+
+    # ffn
+    d_ff: int = 0
+    mlp_act: str = "silu_glu"                # silu_glu | gelu_glu | gelu
+
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+
+    # rg-lru (griffin / recurrentgemma)
+    rnn_width: int = 0
+    rnn_conv: int = 4
+    rnn_blocks: int = 0                      # block-diagonal gate blocks
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    max_target_len: int = 448
+
+    # frontends (audio / vlm): stubbed -- input_specs yields embeddings/ids
+    frontend: Optional[str] = None           # "audio_frames" | "vq_tokens" | None
+
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False           # gemma-style sqrt(d) scaling
+    dtype: str = "bfloat16"
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_headdim
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == "ssm" for k in self.layer_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when no block uses full (global) attention."""
+        return all(k in ("ssm", "rec", "local") for k in self.layer_pattern)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        from .params import count_params
+        from .registry import build_param_specs
+        return count_params(build_param_specs(self))
+
+    def active_param_count(self) -> int:
+        """MoE-aware active parameters per token."""
+        from .params import count_params
+        from .registry import build_param_specs
+        total = count_params(build_param_specs(self))
+        if self.num_experts and self.top_k:
+            # Subtract the non-active expert weights.
+            expert = 3 * self.d_model * self.d_ff * self.num_experts \
+                * self.num_layers
+            active = expert * self.top_k / self.num_experts
+            return int(total - expert + active)
+        return total

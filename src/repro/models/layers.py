@@ -1,0 +1,120 @@
+"""Shared layers: norms, MLPs, rotary embeddings, embedding tables."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .params import spec
+
+
+# -- norms -------------------------------------------------------------------
+def rmsnorm_spec(d: int):
+    return spec((d,), ("d_model",), dtype="float32", init="ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int):
+    return {"scale": spec((d,), ("d_model",), dtype="float32", init="ones"),
+            "bias": spec((d,), ("d_model",), dtype="float32", init="zeros")}
+
+
+def layernorm(x, p, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"] + p["bias"]).astype(dt)
+
+
+# -- MLP -----------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.dtype
+    if cfg.mlp_act.endswith("_glu"):
+        return {
+            "w_gate": spec((d, f), ("d_model", "ffn"), dt),
+            "w_up": spec((d, f), ("d_model", "ffn"), dt),
+            "w_down": spec((f, d), ("ffn", "d_model_out"), dt),
+        }
+    return {
+        "w_up": spec((d, f), ("d_model", "ffn"), dt),
+        "b_up": spec((f,), ("ffn",), dt, init="zeros"),
+        "w_down": spec((f, d), ("ffn", "d_model_out"), dt),
+        "b_down": spec((d,), ("d_model",), dt, init="zeros"),
+    }
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_act.endswith("_glu"):
+        act = jax.nn.silu if cfg.mlp_act.startswith("silu") else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+            jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"],
+            approximate=True,
+        )
+    h = logical_constraint(h, ("batch", "act_seq", "ffn"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return logical_constraint(out, ("batch", "act_seq", "act_d"))
+
+
+# -- rotary --------------------------------------------------------------------
+def rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = 1.0 / (theta ** (freq / half))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, half]
+    ang = ang[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- embeddings ------------------------------------------------------------------
+def embed_specs(cfg: ModelConfig):
+    out = {"embedding": spec((cfg.vocab_size, cfg.d_model),
+                             ("vocab", "d_model"), cfg.dtype, init="small")}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = spec((cfg.d_model, cfg.vocab_size),
+                              ("d_model", "vocab"), cfg.dtype, init="small")
+    return out
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return logical_constraint(x, ("batch", "act_seq", "act_d"))
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    if cfg.final_softcap:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logical_constraint(logits, ("batch", "act_seq", "vocab"))

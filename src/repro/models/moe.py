@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded
+scatter dispatch (TPU-idiomatic; no [T, E, C] one-hot einsum blow-up).
+
+Dispatch path:
+  1. router logits -> top-k experts + gates per token
+  2. position-in-expert via cumulative sum of assignment one-hots
+  3. scatter tokens into an [E, C, D] buffer (sharded on the experts axis
+     => expert parallelism); tokens over capacity are dropped (standard
+     capacity-factor semantics)
+  4. dense per-expert GLU matmuls (einsum over the E-sharded buffer)
+  5. gather back + gate-weighted combine
+
+The expert->device layout is a DSL ``IndexTaskMap experts <fn>;`` decision:
+`expert_permutation(plan, num_experts, mesh)` materializes the chosen
+placement as a permutation applied to the expert axis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .params import spec
+
+
+def moe_specs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.dtype
+    return {
+        "router": spec((d, e), ("d_model", None), "float32"),
+        "w_gate": spec((e, d, f), ("experts", "d_model", "expert_ffn"), dt),
+        "w_up": spec((e, d, f), ("experts", "d_model", "expert_ffn"), dt),
+        "w_down": spec((e, f, d), ("experts", "expert_ffn", "d_model_out"), dt),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(np.ceil(tokens * cfg.top_k * cfg.moe_capacity_factor
+                    / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def _dispatch_shards(batch: int, num_experts: int) -> int:
+    """Per-shard dispatch: tokens are dispatched within their data shard
+    (per-device capacity).  Used when the expert axis CANNOT shard over
+    the model axis (e.g. 40 experts on a 16-wide mesh): the capacity
+    buffer then gains a data-shardable dimension instead of replicating.
+    When experts shard cleanly, global dispatch keeps the scatter aligned
+    with the expert placement (cheaper all-to-all)."""
+    from ..parallel.sharding import current_rules
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return 1
+    spec = r.resolve(("experts",), (num_experts,))
+    if spec and spec[0] is not None:
+        return 1  # experts shard over the mesh: global dispatch
+    axes = r.rules.get("batch")
+    if not axes:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        if a in r.mesh.axis_names:
+            n *= r.mesh.shape[a]
+    return n if n > 0 and batch % n == 0 else 1
+
+
+def moe_ffn(cfg: ModelConfig, p, x, expert_perm: Optional[jax.Array] = None):
+    """x: [B, S, D] -> [B, S, D].  Also returns aux losses dict.
+
+    Dispatch is per-data-shard: each of the ``g`` batch shards fills its
+    own capacity slice of the [E, g, C, D] buffer, so the buffer shards
+    over (experts x data) even when E doesn't divide the model axis."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    # explicit expert-parallel path (shard_map; see moe_ep.py) when the
+    # mesh and expert count allow it -- avoids GSPMD's replicated dispatch
+    from .moe_ep import ep_applicable, moe_ffn_ep
+    ep = ep_applicable(cfg)
+    if ep is not None:
+        mesh, batch_axes, model_axis = ep
+        nb = 1
+        for a in batch_axes:
+            nb *= mesh.shape[a]
+        if b % nb == 0:
+            return moe_ffn_ep(cfg, p, x, mesh, batch_axes, model_axis,
+                              expert_perm)
+    g = _dispatch_shards(b, e)
+    t = b * s
+    tl = t // g                                             # tokens/shard
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if expert_perm is not None:
+        expert_idx = expert_perm[expert_idx]
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                            # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+
+    cap = _capacity(cfg, tl)
+    flat_expert = expert_idx.reshape(g, tl * k)             # per shard
+    flat_gate = gate_vals.reshape(g, tl * k)
+
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # [g,TLk,E]
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot             # within shard
+    pos = jnp.take_along_axis(pos_all, flat_expert[..., None],
+                              axis=2)[..., 0]                 # [g, TLk]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0)
+    safe_expert = jnp.where(keep, flat_expert, 0)
+
+    tok_rep = jnp.repeat(xf.reshape(g, tl, d), k, axis=1)   # [g, TLk, D]
+    contrib = jnp.where(keep[..., None], tok_rep, 0).astype(xf.dtype)
+    shard_ids = jnp.broadcast_to(jnp.arange(g)[:, None], pos.shape)
+    buf = jnp.zeros((e, g, cap, d), xf.dtype)
+    buf = buf.at[safe_expert, shard_ids, pos].add(contrib, mode="drop")
+    buf = logical_constraint(buf, ("experts", "batch", None, "act_d"))
+
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", buf, p["w_gate"])) * \
+        jnp.einsum("egcd,edf->egcf", buf, p["w_up"])
+    h = logical_constraint(h, ("experts", "batch", None, "expert_ffn"))
+    out_buf = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    out_buf = logical_constraint(out_buf, ("experts", "batch", None, "act_d"))
+
+    picked = out_buf[safe_expert, shard_ids, pos]            # [g, TLk, D]
+    picked = picked * (flat_gate * keep)[..., None].astype(picked.dtype)
+    y = picked.reshape(g, tl, k, d).sum(axis=2).reshape(b, s, d)
+    y = logical_constraint(y, ("batch", "act_seq", "act_d"))
+    return y, {"moe_aux_loss": aux_loss}
+
+
+def expert_permutation(plan, num_experts: int, num_devices: int):
+    """Materialize the DSL's ``IndexTaskMap experts <fn>`` as an expert-axis
+    permutation: expert i is *stored* on the device its index map picks.
+
+    With experts sharded contiguously over the model axis, reordering the
+    expert axis realizes any device assignment the mapping function
+    produces.  Returns None if the plan has no expert index map.
+    """
+    name = plan.index_map_name("experts") if plan is not None else None
+    if name is None:
+        return None
+    table = plan.device_table("experts", (num_experts,))  # expert -> device
+    # Stable sort experts by assigned device => permutation of the axis.
+    order = np.argsort(table, kind="stable")
+    inv = np.empty_like(order)
+    inv[order] = np.arange(num_experts)
+    return jnp.asarray(inv, jnp.int32)

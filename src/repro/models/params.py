@@ -1,0 +1,98 @@
+"""Parameter-spec trees: single source of truth for shapes, dtypes, logical
+axes and initializers.
+
+A *spec tree* is a nested dict whose leaves are :class:`ParamSpec`.  From it
+we derive: real initialized parameters (smoke tests / training), abstract
+``ShapeDtypeStruct`` trees (dry-run lowering), and logical-axes trees
+(sharding resolution)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"         # normal | zeros | ones | lecun | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tmap(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_params(spec_tree):
+    return _tmap(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), spec_tree
+    )
+
+
+def logical_axes(spec_tree):
+    return _tmap(lambda s: s.axes, spec_tree)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) for s in leaves))
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))
+
+
+def init_params(spec_tree, rng: jax.Array):
+    """Materialize real parameters.  Deterministic per-leaf fold-in."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    out = []
+    for i, s in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        dt = jnp.dtype(s.dtype)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dt)
+        elif s.init in ("normal", "lecun", "small"):
+            fan_in = s.shape[0] if s.shape else 1
+            if s.init == "lecun" and len(s.shape) >= 2:
+                fan_in = math.prod(s.shape[:-1])
+            std = s.scale / math.sqrt(max(fan_in, 1))
+            if s.init == "small":
+                std = 0.02 * s.scale
+            v = (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dt)
+        else:
+            raise ValueError(f"unknown init {s.init!r}")
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec(shape, axes, dtype="bfloat16", init="normal", scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(int(x) for x in shape), tuple(axes), dtype, init,
+                     scale)
+
+
+def stacked(n: int, s: ParamSpec) -> ParamSpec:
+    """Prepend the scan/layers dimension to a spec."""
+    return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init,
+                     s.scale)
+
+
+def tree_stacked(n: int, tree):
+    return _tmap(lambda s: stacked(n, s), tree)

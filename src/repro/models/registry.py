@@ -1,0 +1,218 @@
+"""Model assembly: spec trees, forward / loss / prefill / decode functions
+for every architecture family, plus the serve-cache constructors."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import logical_constraint
+from .attention import init_cache
+from .config import ModelConfig
+from .layers import embed, embed_specs, rmsnorm, rmsnorm_spec, unembed
+from .params import abstract_params, init_params, logical_axes, spec
+from .rglru import init_rglru_cache
+from .ssm import init_mamba_cache
+from .transformer import (_norm, _norm_spec, stack_apply, stack_specs,
+                          _pattern_layout)
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def build_param_specs(cfg: ModelConfig):
+    specs: Dict = {}
+    specs.update(embed_specs(cfg))
+    specs["final_norm"] = _norm_spec(cfg)
+    if cfg.is_encoder_decoder:
+        specs["encoder"] = stack_specs(cfg, pattern=("enc",),
+                                       num_layers=cfg.num_encoder_layers)
+        specs["encoder_norm"] = _norm_spec(cfg)
+        specs["decoder"] = stack_specs(cfg, pattern=("xattn",),
+                                       num_layers=cfg.num_layers)
+    else:
+        specs["decoder"] = stack_specs(cfg)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _decoder_positions(tokens):
+    return jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32)[None], tokens.shape)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Encoder stack over precomputed frame/patch embeddings [B, S, D]."""
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None],
+        frames.shape[:2])
+    x = logical_constraint(frames.astype(cfg.dtype),
+                           ("batch", "act_seq", "act_d"))
+    x, _, _ = stack_apply(cfg, params["encoder"], x, positions=positions,
+                          pattern=("enc",))
+    return _norm(cfg, params["encoder_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, batch, moe_perm=None):
+    """Full forward -> (logits, aux).  batch: {"tokens": [B,S]} plus
+    {"frames": [B,S_enc,D]} for enc-dec models."""
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _decoder_positions(tokens)
+    x = embed(cfg, params, tokens)
+    encoder_out = None
+    pattern = None
+    if cfg.is_encoder_decoder:
+        encoder_out = encode(cfg, params, batch["frames"])
+        pattern = ("xattn",)
+    x, _, aux = stack_apply(cfg, params["decoder"], x, positions=positions,
+                            pattern=pattern, encoder_out=encoder_out,
+                            moe_perm=moe_perm)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, moe_perm=None):
+    """Next-token cross entropy.  batch["tokens"] supplies inputs;
+    labels are tokens shifted left (last position dropped)."""
+    logits, aux = forward(cfg, params, batch, moe_perm=moe_perm)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(ll)
+    if "mask" in batch:
+        mask = batch["mask"].astype(jnp.float32)
+    else:
+        mask = mask.at[:, -1].set(0.0)
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if "moe_aux_loss" in aux and cfg.num_experts:
+        loss = loss + 0.01 * aux["moe_aux_loss"] / max(cfg.num_layers, 1)
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                 order: str, enc_len: int = 0):
+    if kind in ("attn", "moe"):
+        return {"self": init_cache(cfg, batch, max_len, "attn", order)}
+    if kind == "local":
+        return {"self": init_cache(cfg, batch, max_len, "local", order)}
+    if kind == "xattn":
+        return {"self": init_cache(cfg, batch, max_len, "attn", order),
+                "cross": init_cache(cfg, batch, enc_len, "attn", order)}
+    if kind == "rec":
+        return {"rec": init_rglru_cache(cfg, batch)}
+    if kind == "ssm":
+        return {"ssm": init_mamba_cache(cfg, batch)}
+    raise ValueError(kind)
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      order: str = "C", enc_len: int = 0,
+                      pattern: Optional[Tuple[str, ...]] = None):
+    """Stacked cache tree matching the stack's scan structure."""
+    pattern = pattern or (("xattn",) if cfg.is_encoder_decoder
+                          else cfg.layer_pattern)
+    n_layers = cfg.num_layers
+    n_super = n_layers // len(pattern)
+    rem = n_layers - n_super * len(pattern)
+    blocks = {}
+    for i, kind in enumerate(pattern):
+        one = _block_cache(cfg, kind, batch, max_len, order, enc_len)
+        blocks[f"pos{i}"] = jax.tree.map(
+            lambda v: jnp.zeros((n_super,) + v.shape, v.dtype), one)
+    out = {"blocks": blocks}
+    if rem:
+        out["rem"] = {
+            f"layer{j}": _block_cache(cfg, pattern[j % len(pattern)], batch,
+                                      max_len, order, enc_len)
+            for j in range(rem)
+        }
+    return out
+
+
+def prefill(cfg: ModelConfig, params, batch, caches, moe_perm=None,
+            order: str = "C"):
+    """Run the prompt through the stack, filling caches.
+    Returns (last_token_logits, caches)."""
+    tokens = batch["tokens"]
+    positions = _decoder_positions(tokens)
+    x = embed(cfg, params, tokens)
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        encoder_out = encode(cfg, params, batch["frames"])
+    pattern = ("xattn",) if cfg.is_encoder_decoder else None
+    x, caches, _ = stack_apply(cfg, params["decoder"], x,
+                               positions=positions, pattern=pattern,
+                               caches=caches, encoder_out=encoder_out,
+                               moe_perm=moe_perm, order=order)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, caches, index,
+                moe_perm=None, order: str = "C"):
+    """One decode step.  tokens: [B, 1] current token ids; index: scalar
+    absolute position.  Returns (next_logits [B, V], new_caches)."""
+    positions = jnp.full((tokens.shape[0], 1), index, jnp.int32)
+    x = embed(cfg, params, tokens)
+    pattern = ("xattn",) if cfg.is_encoder_decoder else None
+    x, caches, _ = stack_apply(cfg, params["decoder"], x,
+                               positions=positions, pattern=pattern,
+                               caches=caches, index=index, decode=True,
+                               moe_perm=moe_perm, order=order)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Model bundle
+# ---------------------------------------------------------------------------
+class Model:
+    """Thin functional bundle tying a config to its spec tree and fns."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs = build_param_specs(cfg)
+
+    def init(self, rng) -> Dict:
+        return init_params(self.specs, rng)
+
+    def abstract_params(self):
+        return abstract_params(self.specs)
+
+    def param_axes(self):
+        return logical_axes(self.specs)
+
+    def forward(self, params, batch, **kw):
+        return forward(self.cfg, params, batch, **kw)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(self.cfg, params, batch, **kw)
+
+    def prefill(self, params, batch, caches, **kw):
+        return prefill(self.cfg, params, batch, caches, **kw)
+
+    def decode_step(self, params, tokens, caches, index, **kw):
+        return decode_step(self.cfg, params, tokens, caches, index, **kw)
+
+    def init_serve_caches(self, batch, max_len, **kw):
+        return init_serve_caches(self.cfg, batch, max_len, **kw)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

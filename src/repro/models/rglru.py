@@ -1,0 +1,134 @@
+"""Griffin / RecurrentGemma recurrent block: RG-LRU gated linear recurrence
+with a short depthwise causal conv and a gated output branch
+(arXiv:2402.19427).
+
+Recurrence (elementwise over the RNN width):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate, block-diagonal)
+    log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Computed with an associative scan (log-depth); kernels/rglru holds the
+blocked Pallas version, this module is its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .params import spec
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig):
+    d, r = cfg.d_model, cfg.rnn_width or cfg.d_model
+    nb = cfg.rnn_blocks or cfg.num_heads or 1
+    bs = r // nb
+    dt = cfg.dtype
+    return {
+        "w_x": spec((d, r), ("d_model", "rnn"), dt),
+        "w_y": spec((d, r), ("d_model", "rnn"), dt),
+        "conv_w": spec((cfg.rnn_conv, r), ("conv", "rnn"), dt),
+        "conv_b": spec((r,), ("rnn",), dt, init="zeros"),
+        "gate_a_w": spec((nb, bs, bs), ("rnn", None, None), dt),
+        "gate_a_b": spec((nb, bs), ("rnn", None), dt, init="zeros"),
+        "gate_x_w": spec((nb, bs, bs), ("rnn", None, None), dt),
+        "gate_x_b": spec((nb, bs), ("rnn", None), dt, init="zeros"),
+        "lam": spec((r,), ("rnn",), "float32", init="normal", scale=1.0),
+        "w_out": spec((r, d), ("rnn", "d_model_out"), dt),
+    }
+
+
+def _block_linear(x, w, b):
+    """x: [..., R]; w: [nb, bs, bs] block-diagonal."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...ni,nij->...nj", xs, w) + b
+    return y.reshape(x.shape)
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(_block_linear(x, p["gate_a_w"], p["gate_a_b"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(x, p["gate_x_w"], p["gate_x_b"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    # sqrt(1 - a^2) = sqrt(1 - exp(2 log a)); stable via expm1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a) + 1e-12)
+    return a, beta * gated_x
+
+
+def _causal_conv(x, w, b, cache=None):
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    return y + b, xp[:, -(width - 1):, :]
+
+
+def rglru_scan(a, bx, h0=None):
+    """h_t = a_t h_{t-1} + bx_t over axis 1.  a, bx: [B, S, R] (f32)."""
+    if h0 is not None:
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        bx = jnp.concatenate([h0[:, None].astype(bx.dtype), bx], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h
+
+
+def rglru_forward(cfg: ModelConfig, p, x, cache: Optional[dict] = None):
+    """x: [B, S, D] -> (y, new_cache)."""
+    b, s, d = x.shape
+    xb = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_y"]), approximate=True)
+    conv_cache = cache.get("conv") if cache else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_cache)
+    xb = logical_constraint(xb, ("batch", "act_seq", "rnn"))
+    a, bx = _gates(p, xb)
+    h0 = cache.get("state") if cache else None
+    h = rglru_scan(a, bx, h0)
+    out = (h.astype(x.dtype) * yb)
+    y = jnp.einsum("bsr,rd->bsd", out, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": h[:, -1], "conv": new_conv}
+    return logical_constraint(y, ("batch", "act_seq", "act_d")), new_cache
+
+
+def rglru_decode(cfg: ModelConfig, p, x, cache: dict):
+    """One-token step.  x: [B, 1, D]."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_y"]), approximate=True)
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], cache["conv"])
+    a, bx = _gates(p, xb)
+    h = a[:, 0] * cache["state"] + bx[:, 0]
+    y = jnp.einsum("bsr,rd->bsd", (h[:, None].astype(x.dtype) * yb),
+                   p["w_out"])
+    return y, {"state": h, "conv": new_conv}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int):
+    r = cfg.rnn_width or cfg.d_model
+    return {
+        "state": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rnn_conv - 1, r), jnp.float32),
+    }

@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD, state-space duality) block in pure JAX.
+
+The chunked algorithm (paper arXiv:2405.21060 §6): intra-chunk quadratic
+attention-like term (MXU-friendly) + inter-chunk linear recurrence carried
+with an associative scan.  The Pallas kernel in kernels/ssd implements the
+same decomposition with VMEM-resident chunk state; this module is also its
+oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import logical_constraint
+from .config import ModelConfig
+from .layers import rmsnorm
+from .params import spec
+
+
+def mamba2_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = din + 2 * g * n
+    dp = 2 * din + 2 * g * n + h
+    dt = cfg.dtype
+    return {
+        "in_proj": spec((d, dp), ("d_model", "rnn"), dt),
+        "conv_w": spec((cfg.ssm_conv, conv_dim), ("conv", "rnn"), dt),
+        "conv_b": spec((conv_dim,), ("rnn",), dt, init="zeros"),
+        "A_log": spec((h,), (None,), "float32", init="zeros"),
+        "D": spec((h,), (None,), "float32", init="ones"),
+        "dt_bias": spec((h,), (None,), "float32", init="zeros"),
+        "norm": spec((din,), ("rnn",), "float32", init="ones"),
+        "out_proj": spec((din, d), ("rnn", "d_model_out"), dt),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [W, C].
+
+    cache: [B, W-1, C] trailing context (decode); returns (y, new_cache).
+    """
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    y = jax.nn.silu(y + b)
+    new_cache = xp[:, -(width - 1):, :]
+    return y, new_cache
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  [Bt, S, H, P]   inputs (already dt-weighted *not* applied; we apply)
+    dt: [Bt, S, H]      softplus'd step sizes
+    A:  [H]             negative decay rates
+    B:  [Bt, S, G, N]   input projections
+    C:  [Bt, S, G, N]   output projections
+    Returns (y [Bt,S,H,P], final_state [Bt,H,N,P]).
+    """
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q = chunk
+    xc = x.reshape(bt, nc, q, h, p)
+    dtc = dt.reshape(bt, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(bt, nc, q, g, n)
+    Cc = C.reshape(bt, nc, q, g, n)
+
+    dA = dtc * A[None, None, None, :]                     # [Bt,nc,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                          # inclusive
+    cum_last = cum[:, :, -1:, :]                          # [Bt,nc,1,H]
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))           # [Bt,nc,G,Q,Q]
+    scores = jnp.repeat(scores, rep, axis=2)              # [Bt,nc,H,Q,Q]
+    decay = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                 - cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3),
+                 max=0.0))                              # [Bt,nc,H,Q(i),Q(j)]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    m = m * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]   # weight by dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", m, xc.astype(jnp.float32))
+
+    # ---- per-chunk terminal states ----
+    decay_to_end = jnp.exp(jnp.clip(cum_last - cum, max=0.0))
+    w = (decay_to_end * dtc)                              # [Bt,nc,Q,H]
+    Bh = jnp.repeat(Bc.astype(jnp.float32), rep, axis=3)  # [Bt,nc,Q,H,N]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp",
+                        Bh, w, xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence (associative scan over chunks) ----
+    chunk_decay = jnp.exp(cum_last[:, :, 0, :])           # [Bt,nc,H]
+
+    def combine(a, b):
+        a_d, a_s = a
+        b_d, b_s = b
+        return a_d * b_d, a_s * b_d[..., None, None] + b_s
+
+    if init_state is not None:
+        states = jnp.concatenate(
+            [init_state[:, None].astype(jnp.float32), states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((bt, 1, h), jnp.float32), chunk_decay], axis=1)
+        run_d, run_s = jax.lax.associative_scan(
+            combine, (chunk_decay, states), axis=1)
+        prev = run_s[:, :-1]                              # state before chunk c
+        final_state = run_s[:, -1]
+    else:
+        run_d, run_s = jax.lax.associative_scan(
+            combine, (chunk_decay, states), axis=1)
+        prev = jnp.concatenate(
+            [jnp.zeros_like(run_s[:, :1]), run_s[:, :-1]], axis=1)
+        final_state = run_s[:, -1]
+
+    Ch = jnp.repeat(Cc.astype(jnp.float32), rep, axis=3)  # [Bt,nc,Q,H,N]
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp", Ch, prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bt, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_forward(cfg: ModelConfig, p, x, cache: Optional[dict] = None,
+                   index=None):
+    """Full-sequence (train/prefill) Mamba-2 block.  x: [B, S, D].
+
+    Returns (y, new_cache) where cache = {"state": [B,H,N,P],
+    "conv": [B,W-1,conv_dim]} when a cache dict is passed in (prefill →
+    decode handoff), else new_cache is None.
+    """
+    b, s, d = x.shape
+    din, g, n, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    ph = cfg.ssm_headdim
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xBC, dt_raw = jnp.split(proj, [din, 2 * din + 2 * g * n], axis=-1)
+    conv_cache = cache.get("conv") if cache else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_cache)
+    xs, B, C = jnp.split(xBC, [din, din + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, ph)
+    B = B.reshape(b, s, g, n)
+    C = C.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    init_state = cache.get("state") if cache else None
+    y, final_state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk, init_state)
+    y = y + (p["D"][None, None, :, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsr,rd->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": final_state, "conv": new_conv}
+    return logical_constraint(out, ("batch", "act_seq", "act_d")), new_cache
+
+
+def mamba2_decode(cfg: ModelConfig, p, x, cache: dict):
+    """Single-token recurrent step.  x: [B, 1, D]."""
+    b, _, d = x.shape
+    din, g, n, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    ph = cfg.ssm_headdim
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xBC, dt_raw = jnp.split(proj, [din, 2 * din + 2 * g * n], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], cache["conv"])
+    xs, B, C = jnp.split(xBC[:, 0], [din, din + g * n], axis=-1)
+    xs = xs.reshape(b, h, ph).astype(jnp.float32)
+    B = B.reshape(b, g, n).astype(jnp.float32)
+    C = C.reshape(b, g, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                       # [B,H,N]
+    Ch = jnp.repeat(C, rep, axis=1)
+    state = cache["state"].astype(jnp.float32)            # [B,H,N,P]
+    decay = jnp.exp(dt * A[None, :])                      # [B,H]
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, xs)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + p["D"][None, :, None] * xs
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsr,rd->bsd", y, p["out_proj"])
+    return out, {"state": state, "conv": new_conv}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    din, g, n, h = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = din + 2 * g * n
+    return {
+        "state": jnp.zeros((batch, h, n, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+    }

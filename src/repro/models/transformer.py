@@ -1,0 +1,276 @@
+"""Composable decoder / encoder-decoder stacks over heterogeneous blocks.
+
+A model is a cycled ``layer_pattern`` of block kinds:
+
+    "attn"  global attention + dense MLP
+    "local" sliding-window attention + dense MLP
+    "moe"   global attention + mixture-of-experts FFN
+    "rec"   RG-LRU recurrent block + dense MLP
+    "ssm"   Mamba-2 (SSD) block (no separate MLP)
+    "enc"   bidirectional attention + dense MLP (encoder)
+    "xattn" causal self-attn + cross-attn + MLP (enc-dec decoder)
+
+The stack scans over `num_layers // len(pattern)` super-blocks (one scan
+step applies the whole pattern, preserving interleaving order); remainder
+layers are applied unrolled.  Remat policy and sharding come from the
+installed AxisRules (i.e. from the DSL mapping plan).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import current_rules, logical_constraint
+from .attention import (attn_specs, attention, decode_attention, init_cache,
+                        prefill_cache_write)
+from .config import ModelConfig
+from .layers import (embed, embed_specs, layernorm, layernorm_spec, mlp,
+                     mlp_specs, rmsnorm, rmsnorm_spec, unembed)
+from .moe import moe_ffn, moe_specs
+from .params import spec, tree_stacked
+from .rglru import (init_rglru_cache, rglru_decode, rglru_forward,
+                    rglru_specs)
+from .ssm import (init_mamba_cache, mamba2_decode, mamba2_forward,
+                  mamba2_specs)
+
+
+# -- norms (rms vs layernorm chosen per config) ---------------------------------
+def _norm_spec(cfg: ModelConfig):
+    if getattr(cfg, "norm_type", "rms") == "ln" or cfg.mlp_act == "gelu":
+        return layernorm_spec(cfg.d_model)
+    return rmsnorm_spec(cfg.d_model)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if isinstance(p, dict):
+        return layernorm(x, p, cfg.norm_eps)
+    return rmsnorm(x, p, cfg.norm_eps)
+
+
+# -- per-block specs ----------------------------------------------------------
+def block_specs(cfg: ModelConfig, kind: str):
+    out: Dict = {}
+    if kind in ("attn", "local", "moe", "enc"):
+        out["attn"] = attn_specs(cfg, kind)
+        out["pre_attn_norm"] = _norm_spec(cfg)
+    if kind == "xattn":
+        out["attn"] = attn_specs(cfg, "attn")
+        out["cross"] = attn_specs(cfg, "attn", cross=True)
+        out["pre_attn_norm"] = _norm_spec(cfg)
+        out["pre_cross_norm"] = _norm_spec(cfg)
+    if kind == "rec":
+        out["rec"] = rglru_specs(cfg)
+        out["pre_rec_norm"] = _norm_spec(cfg)
+    if kind == "ssm":
+        out["ssm"] = mamba2_specs(cfg)
+        out["pre_norm"] = _norm_spec(cfg)
+    if kind in ("attn", "local", "rec", "enc", "xattn"):
+        out["mlp"] = mlp_specs(cfg)
+        out["pre_mlp_norm"] = _norm_spec(cfg)
+    if kind == "moe":
+        out["moe"] = moe_specs(cfg)
+        out["pre_mlp_norm"] = _norm_spec(cfg)
+    if cfg.use_post_norms:
+        if "attn" in out:
+            out["post_attn_norm"] = _norm_spec(cfg)
+        if "mlp" in out or "moe" in out:
+            out["post_mlp_norm"] = _norm_spec(cfg)
+    return out
+
+
+def _pattern_layout(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pattern = cfg.layer_pattern
+    n_super = cfg.num_layers // len(pattern)
+    rem = cfg.num_layers - n_super * len(pattern)
+    return n_super, pattern[:rem]
+
+
+def stack_specs(cfg: ModelConfig, pattern: Optional[Tuple[str, ...]] = None,
+                num_layers: Optional[int] = None):
+    pattern = pattern or cfg.layer_pattern
+    num_layers = num_layers or cfg.num_layers
+    n_super = num_layers // len(pattern)
+    rem = num_layers - n_super * len(pattern)
+    out = {
+        "blocks": {
+            f"pos{i}": tree_stacked(n_super, block_specs(cfg, kind))
+            for i, kind in enumerate(pattern)
+        },
+    }
+    if rem:
+        out["rem"] = {
+            f"layer{j}": block_specs(cfg, pattern[j % len(pattern)])
+            for j in range(rem)
+        }
+    return out
+
+
+# -- block application -----------------------------------------------------------
+def block_apply(cfg: ModelConfig, kind: str, p, x, *, positions,
+                cache=None, index=None, decode=False, encoder_out=None,
+                moe_perm=None, order: str = "C"):
+    """Apply one block.  Returns (x, new_cache, aux)."""
+    aux = {}
+    new_cache = None
+    if kind in ("attn", "local", "moe", "enc", "xattn"):
+        h = _norm(cfg, p["pre_attn_norm"], x)
+        if decode:
+            a, self_c = decode_attention(
+                cfg, p["attn"], h, cache["self"], index=index,
+                kind="local" if kind == "local" else "attn", order=order)
+            new_cache = {"self": self_c}
+        else:
+            akind = "local" if kind == "local" else "attn"
+            if cache is not None:
+                a, (k_new, v_new) = attention(
+                    cfg, p["attn"], h, positions=positions, kind=akind,
+                    causal=kind != "enc", return_kv=True)
+                new_cache = {"self": prefill_cache_write(
+                    cfg, cache["self"], k_new, v_new, kind=akind,
+                    order=order)}
+            else:
+                a = attention(cfg, p["attn"], h, positions=positions,
+                              kind=akind, causal=kind != "enc")
+        if cfg.use_post_norms:
+            a = _norm(cfg, p["post_attn_norm"], a)
+        x = x + a
+        if kind == "xattn":
+            h = _norm(cfg, p["pre_cross_norm"], x)
+            if decode:
+                c, _ = decode_attention(cfg, p["cross"], h, cache["cross"],
+                                        index=index, cross=True, order=order)
+            else:
+                if cache is not None:
+                    c, (xk, xv) = attention(
+                        cfg, p["cross"], h, positions=positions,
+                        kv_x=encoder_out, causal=False, return_kv=True)
+                    new_cache["cross"] = prefill_cache_write(
+                        cfg, cache["cross"], xk, xv, kind="attn", order=order)
+                else:
+                    c = attention(cfg, p["cross"], h, positions=positions,
+                                  kv_x=encoder_out, causal=False)
+            x = x + c
+        h = _norm(cfg, p["pre_mlp_norm"], x)
+        if kind == "moe":
+            f, moe_aux = moe_ffn(cfg, p["moe"], h, moe_perm)
+            aux.update(moe_aux)
+        else:
+            f = mlp(cfg, p["mlp"], h)
+        if cfg.use_post_norms:
+            f = _norm(cfg, p["post_mlp_norm"], f)
+        x = x + f
+        if kind == "xattn" and decode and new_cache is not None:
+            new_cache["cross"] = cache["cross"]
+    elif kind == "rec":
+        h = _norm(cfg, p["pre_rec_norm"], x)
+        if decode:
+            r, new_c = rglru_decode(cfg, p["rec"], h, cache["rec"])
+        else:
+            r, new_c = rglru_forward(cfg, p["rec"], h,
+                                     cache["rec"] if cache else None)
+        x = x + r
+        h = _norm(cfg, p["pre_mlp_norm"], x)
+        x = x + mlp(cfg, p["mlp"], h)
+        new_cache = {"rec": new_c} if new_c is not None else None
+    elif kind == "ssm":
+        h = _norm(cfg, p["pre_norm"], x)
+        if decode:
+            s, new_c = mamba2_decode(cfg, p["ssm"], h, cache["ssm"])
+        else:
+            s, new_c = mamba2_forward(cfg, p["ssm"], h,
+                                      cache["ssm"] if cache else None)
+        x = x + s
+        new_cache = {"ssm": new_c} if new_c is not None else None
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    x = logical_constraint(x, ("batch", "act_seq", "act_d"))
+    return x, new_cache, aux
+
+
+# -- stack application ---------------------------------------------------------------
+def _remat_wrap(fn):
+    r = current_rules()
+    mode = r.remat if r is not None else "block"
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if mode == "offload":
+        policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=[],
+            offload_src="device", offload_dst="pinned_host")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "block": save only block boundaries
+
+
+def stack_apply(cfg: ModelConfig, params, x, *, positions,
+                pattern: Optional[Tuple[str, ...]] = None,
+                caches=None, index=None, decode=False, encoder_out=None,
+                moe_perm=None, order: str = "C"):
+    """Run the full stack.  Returns (x, new_caches, aux)."""
+    pattern = pattern or cfg.layer_pattern
+    aux_acc = {"moe_aux_loss": jnp.zeros((), jnp.float32)}
+    has_cache = caches is not None
+
+    def super_block(carry_x, xs):
+        layer_p, layer_cache = xs
+        new_caches = {}
+        aux_l = jnp.zeros((), jnp.float32)
+        cx = carry_x
+        for i, kind in enumerate(pattern):
+            c_i = layer_cache[f"pos{i}"] if has_cache else None
+            cx, nc, aux = block_apply(
+                cfg, kind, layer_p[f"pos{i}"], cx, positions=positions,
+                cache=c_i, index=index, decode=decode,
+                encoder_out=encoder_out, moe_perm=moe_perm, order=order)
+            if has_cache:
+                new_caches[f"pos{i}"] = nc
+            if "moe_aux_loss" in aux:
+                aux_l = aux_l + aux["moe_aux_loss"]
+        return cx, (new_caches if has_cache else None, aux_l)
+
+    body = _remat_wrap(super_block) if not decode else super_block
+    scan_xs = (params["blocks"],
+               caches["blocks"] if has_cache else
+               jax.tree.map(lambda _: None, params["blocks"],
+                            is_leaf=lambda v: v is None))
+    # jax.lax.scan needs concrete xs; when no cache, pass params only.
+    if has_cache:
+        x, (new_block_caches, aux_ls) = jax.lax.scan(
+            body, x, (params["blocks"], caches["blocks"]))
+    else:
+        def body_nc(carry_x, layer_p):
+            cx, (nc, al) = body(carry_x, (layer_p, None))
+            return cx, al
+        x, aux_ls = jax.lax.scan(body_nc, x, params["blocks"])
+        new_block_caches = None
+    aux_acc["moe_aux_loss"] = jnp.sum(aux_ls)
+
+    new_rem_caches = {}
+    if "rem" in params:
+        n_main = len(pattern) * (cfg.num_layers // len(pattern))
+        for j, name in enumerate(sorted(params["rem"])):
+            kind = pattern[j % len(pattern)]
+            c_j = caches["rem"][name] if has_cache else None
+            fn = functools.partial(
+                block_apply, cfg, kind, params["rem"][name],
+                positions=positions, cache=c_j, index=index, decode=decode,
+                encoder_out=encoder_out, moe_perm=moe_perm, order=order)
+            x, nc, aux = fn(x)
+            if has_cache:
+                new_rem_caches[name] = nc
+            if "moe_aux_loss" in aux:
+                aux_acc["moe_aux_loss"] = aux_acc["moe_aux_loss"] + \
+                    aux["moe_aux_loss"]
+    new_caches = None
+    if has_cache:
+        new_caches = {"blocks": new_block_caches}
+        if "rem" in params:
+            new_caches["rem"] = new_rem_caches
+    return x, new_caches, aux_acc

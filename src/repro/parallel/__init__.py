@@ -1,0 +1,9 @@
+from .sharding import (
+    AxisRules, axis_rules, current_rules, logical_constraint,
+    logical_to_pspec, param_shardings, DEFAULT_TRAIN_RULES,
+)
+
+__all__ = [
+    "AxisRules", "axis_rules", "current_rules", "logical_constraint",
+    "logical_to_pspec", "param_shardings", "DEFAULT_TRAIN_RULES",
+]

@@ -1,0 +1,432 @@
+"""Distributed matrix-multiplication algorithms (paper §5.3) as shard_map
+programs, plus the communication model the mapper search optimizes.
+
+Algorithms (all numerically validated against jnp.dot in tests):
+
+  cannon      2D systolic: skew + p shift/multiply rounds  (Cannon 1969)
+  summa       2D: gather row-of-A / col-of-B, local k-loop (vdG & Watts 97)
+  pumma       2D: ring-pipelined column broadcasts          (Choi et al. 94)
+  johnson     3D: one matmul + reduce over the k axis       (Agarwal 95)
+  solomonik   2.5D: c stacked Cannon replicas on K/c slices (Solomonik 11)
+  cosma       grid-optimal generic (gm, gn, gk) decomposition minimizing
+              per-device communication under a memory budget (COSMA 19)
+
+The *index mapping* (DSL ``IndexTaskMap``) decides which tile lands on
+which physical chip.  ``comm_model`` scores a (algorithm, mapping) pair by
+bytes x torus-hops -- the deterministic objective the paper's agent
+optimizes ("the optimized mapping reduces inter-GPU communication").
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+# ---------------------------------------------------------------------------
+# shard_map implementations
+# ---------------------------------------------------------------------------
+def _mesh2(mesh: Mesh) -> Tuple[str, str]:
+    return mesh.axis_names[-2], mesh.axis_names[-1]
+
+
+def cannon_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
+    """Cannon's algorithm on a square (p, p) mesh."""
+    ax, ay = _mesh2(mesh)
+    px, py = mesh.shape[ax], mesh.shape[ay]
+    assert px == py, "Cannon requires a square grid"
+    p = px
+
+    def kernel(a, b):
+        # initial skew: A_ij <- A_i,(j+i);  B_ij <- B_(i+j),j
+        # (coordinate-dependent shift = full-grid permutation)
+        def skew(x, by_row: bool):
+            perm = []
+            for i0 in range(p):
+                for j0 in range(p):
+                    if by_row:      # shift row i left by i
+                        src = (i0, (j0 + i0) % p)
+                    else:           # shift col j up by j
+                        src = ((i0 + j0) % p, j0)
+                    perm.append((src[0] * p + src[1], i0 * p + j0))
+            return jax.lax.ppermute(x, (ax, ay), perm)
+
+        a = skew(a, True)
+        b = skew(b, False)
+        c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        c = jax.lax.pcast(c, (ax, ay), to='varying')
+
+        shift_a = [((i0 * p + (j0 + 1) % p), i0 * p + j0)
+                   for i0 in range(p) for j0 in range(p)]
+        shift_b = [((((i0 + 1) % p) * p + j0), i0 * p + j0)
+                   for i0 in range(p) for j0 in range(p)]
+
+        def body(step, carry):
+            a, b, c = carry
+            c = c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+            a = jax.lax.ppermute(a, (ax, ay), shift_a)
+            b = jax.lax.ppermute(b, (ax, ay), shift_b)
+            return a, b, c
+
+        a, b, c = jax.lax.fori_loop(0, p, body, (a, b, c))
+        return c.astype(A.dtype)
+
+    return shard_map(kernel, mesh=mesh,
+                     in_specs=(P(ax, ay), P(ax, ay)),
+                     out_specs=P(ax, ay))(A, B)
+
+
+def summa_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
+    """SUMMA: gather the A-row / B-column panels, loop over k blocks."""
+    ax, ay = _mesh2(mesh)
+    py = mesh.shape[ay]
+    px = mesh.shape[ax]
+
+    def kernel(a, b):
+        a_row = jax.lax.all_gather(a, ay, axis=1, tiled=True)  # [mb, K]
+        b_col = jax.lax.all_gather(b, ax, axis=0, tiled=True)  # [K, nb]
+        kb = a_row.shape[1] // (px * py)
+        c = jnp.zeros((a_row.shape[0], b_col.shape[1]), jnp.float32)
+        c = jax.lax.pcast(c, (ax, ay), to='varying')
+
+        def body(k, c):
+            ak = jax.lax.dynamic_slice_in_dim(a_row, k * kb, kb, 1)
+            bk = jax.lax.dynamic_slice_in_dim(b_col, k * kb, kb, 0)
+            return c + jnp.dot(ak, bk, preferred_element_type=jnp.float32)
+
+        c = jax.lax.fori_loop(0, px * py, body, c)
+        return c.astype(A.dtype)
+
+    return shard_map(kernel, mesh=mesh,
+                     in_specs=(P(ax, ay), P(ax, ay)),
+                     out_specs=P(ax, ay))(A, B)
+
+
+def pumma_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
+    """PUMMA-style: ring-pipelined panel rotation instead of gathers.
+
+    Each of the py rounds rotates the local A panel along the row ring and
+    the local B panel along the column ring, accumulating the aligned
+    products (block-cyclic pipelining of SUMMA's broadcasts).
+    """
+    ax, ay = _mesh2(mesh)
+    px, py = mesh.shape[ax], mesh.shape[ay]
+    assert px == py, "pumma (this schedule) requires a square grid"
+    p = px
+
+    def kernel(a, b):
+        i = jax.lax.axis_index(ax)
+        j = jax.lax.axis_index(ay)
+        # Pre-align like Cannon so round r multiplies A_{i,i+j+r} B_{i+j+r,j}
+        def skew(x, by_row: bool):
+            perm = []
+            for i0 in range(p):
+                for j0 in range(p):
+                    src = ((i0, (j0 + i0) % p) if by_row
+                           else ((i0 + j0) % p, j0))
+                    perm.append((src[0] * p + src[1], i0 * p + j0))
+            return jax.lax.ppermute(x, (ax, ay), perm)
+
+        a = skew(a, True)
+        b = skew(b, False)
+        ring_a = [((i0 * p + (j0 + 1) % p), i0 * p + j0)
+                  for i0 in range(p) for j0 in range(p)]
+        ring_b = [((((i0 + 1) % p) * p + j0), i0 * p + j0)
+                  for i0 in range(p) for j0 in range(p)]
+        c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        c = jax.lax.pcast(c, (ax, ay), to='varying')
+
+        def body(step, carry):
+            a, b, c = carry
+            c = c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+            # pipelined: rotate panels one hop per round (double-buffered
+            # on real hardware; the volume is what the model scores)
+            a = jax.lax.ppermute(a, (ax, ay), ring_a)
+            b = jax.lax.ppermute(b, (ax, ay), ring_b)
+            return a, b, c
+
+        _, _, c = jax.lax.fori_loop(0, p, body, (a, b, c))
+        return c.astype(A.dtype)
+
+    return shard_map(kernel, mesh=mesh,
+                     in_specs=(P(ax, ay), P(ax, ay)),
+                     out_specs=P(ax, ay))(A, B)
+
+
+def grid_mm(A: jax.Array, B: jax.Array, mesh3: Mesh) -> jax.Array:
+    """Generic (gm, gn, gk) grid algorithm: local matmul + reduce over k.
+
+    Johnson's 3D algorithm is grid (p^1/3, p^1/3, p^1/3); COSMA picks the
+    comm-optimal grid for the given shapes; Solomonik's uses (p, p, c) with
+    a Cannon schedule inside each k-slice.
+    """
+    am, an, ak = mesh3.axis_names
+
+    def kernel(a, b):
+        c = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        c = jax.lax.psum(c, ak)
+        return c.astype(A.dtype)
+
+    return shard_map(kernel, mesh=mesh3,
+                     in_specs=(P(am, ak), P(ak, an)),
+                     out_specs=P(am, an))(A, B)
+
+
+def johnson_mm(A, B, mesh3: Mesh):
+    gm = mesh3.shape[mesh3.axis_names[0]]
+    gn = mesh3.shape[mesh3.axis_names[1]]
+    gk = mesh3.shape[mesh3.axis_names[2]]
+    assert gm == gn == gk, "Johnson's 3D algorithm needs a cubic grid"
+    return grid_mm(A, B, mesh3)
+
+
+def solomonik_mm(A: jax.Array, B: jax.Array, mesh3: Mesh) -> jax.Array:
+    """2.5D: c replicas each run Cannon on a K/c slice, then reduce."""
+    ac, ax, ay = mesh3.axis_names
+    p = mesh3.shape[ax]
+    assert mesh3.shape[ax] == mesh3.shape[ay]
+
+    def kernel(a, b):
+        # within this k-slice: Cannon over the (ax, ay) square
+        def skew(x, by_row: bool):
+            perm = []
+            for i0 in range(p):
+                for j0 in range(p):
+                    src = ((i0, (j0 + i0) % p) if by_row
+                           else ((i0 + j0) % p, j0))
+                    perm.append((src[0] * p + src[1], i0 * p + j0))
+            return jax.lax.ppermute(x, (ax, ay), perm)
+
+        a = skew(a, True)
+        b = skew(b, False)
+        ring_a = [((i0 * p + (j0 + 1) % p), i0 * p + j0)
+                  for i0 in range(p) for j0 in range(p)]
+        ring_b = [((((i0 + 1) % p) * p + j0), i0 * p + j0)
+                  for i0 in range(p) for j0 in range(p)]
+        c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+        c = jax.lax.pcast(c, (ac, ax, ay), to='varying')
+
+        def body(step, carry):
+            a, b, c = carry
+            c = c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+            a = jax.lax.ppermute(a, (ax, ay), ring_a)
+            b = jax.lax.ppermute(b, (ax, ay), ring_b)
+            return a, b, c
+
+        _, _, c = jax.lax.fori_loop(0, p, body, (a, b, c))
+        c = jax.lax.psum(c, ac)
+        return c.astype(A.dtype)
+
+    return shard_map(kernel, mesh=mesh3,
+                     in_specs=(P(ax, (ac, ay)), P((ac, ax), ay)),
+                     out_specs=P(ax, ay))(A, B)
+
+
+def cosma_grid(P_: int, M: int, N: int, K: int,
+               mem_tiles: float = 3.0) -> Tuple[int, int, int]:
+    """COSMA-style grid choice: minimize per-device comm volume
+    V(g) = MK/(gm gk) + KN/(gk gn) + MN/(gm gn) over divisor grids of P."""
+    best, best_v = (P_, 1, 1), float("inf")
+    for gm in range(1, P_ + 1):
+        if P_ % gm:
+            continue
+        rest = P_ // gm
+        for gn in range(1, rest + 1):
+            if rest % gn:
+                continue
+            gk = rest // gn
+            v = M * K / (gm * gk) + K * N / (gk * gn) + M * N / (gm * gn)
+            # memory: replicas of A and B tiles must fit mem_tiles x ideal
+            mem = M * K / (gm * gk) + K * N / (gk * gn) + M * N / (gm * gn)
+            if mem > mem_tiles * (M * K + K * N + M * N) / P_:
+                continue
+            if v < best_v:
+                best, best_v = (gm, gn, gk), v
+    return best
+
+
+ALGORITHMS = ("cannon", "summa", "pumma", "johnson", "solomonik", "cosma")
+
+
+def run_algorithm(name: str, A, B, devices=None,
+                  grid: Optional[Tuple[int, ...]] = None):
+    """Dispatch: build the right mesh over ``devices`` and run."""
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    darr = np.array(devices)
+    if name in ("cannon", "summa", "pumma"):
+        p = int(math.isqrt(n))
+        if name != "summa":
+            assert p * p == n, f"{name} needs a square device count"
+        if p * p != n:
+            px = int(math.isqrt(n))
+            while n % px:
+                px -= 1
+            mesh = Mesh(darr[: px * (n // px)].reshape(px, n // px), ("x", "y"))
+        else:
+            mesh = Mesh(darr.reshape(p, p), ("x", "y"))
+        fn = {"cannon": cannon_mm, "summa": summa_mm, "pumma": pumma_mm}[name]
+        return fn(A, B, mesh)
+    if name == "johnson":
+        g = round(n ** (1 / 3))
+        assert g ** 3 == n, "johnson needs a cubic device count"
+        mesh = Mesh(darr.reshape(g, g, g), ("gm", "gn", "gk"))
+        return johnson_mm(A, B, mesh)
+    if name == "solomonik":
+        # (c, p, p) with c = n / p^2 for largest square p^2 | n
+        p = int(math.isqrt(n))
+        while n % (p * p):
+            p -= 1
+        c = n // (p * p)
+        mesh = Mesh(darr.reshape(c, p, p), ("c", "x", "y"))
+        return solomonik_mm(A, B, mesh)
+    if name == "cosma":
+        M, K = A.shape
+        N = B.shape[1]
+        gm, gn, gk = grid or cosma_grid(n, M, N, K)
+        mesh = Mesh(darr.reshape(gm, gn, gk), ("gm", "gn", "gk"))
+        return grid_mm(A, B, mesh)
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Communication model: bytes x torus hops under a tile->device mapping
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TorusTopo:
+    shape: Tuple[int, int]        # physical (nodes, chips) torus
+
+    def coords(self, flat: int) -> Tuple[int, int]:
+        return flat // self.shape[1], flat % self.shape[1]
+
+    def hops(self, a: int, b: int) -> int:
+        if a == b:
+            return 0
+        (ax, ay), (bx, by) = self.coords(a), self.coords(b)
+        dx = abs(ax - bx)
+        dx = min(dx, self.shape[0] - dx)
+        dy = abs(ay - by)
+        dy = min(dy, self.shape[1] - dy)
+        # inter-node hop is the expensive link; weight it 4x
+        return 4 * dx + dy
+
+
+def _transfers(alg: str, p: int, grid: Tuple[int, int, int] = None):
+    """Yield (src_tile, dst_tile, tile_kind) logical transfer events for
+    one full run, in tile coordinates of the algorithm's grid."""
+    events = []
+    if alg in ("cannon", "pumma", "solomonik"):
+        for i in range(p):
+            for j in range(p):
+                # skew + p ring steps for both A and B
+                events.append(((i, (j + i) % p), (i, j), "A"))
+                events.append((((i + j) % p, j), (i, j), "B"))
+                for _ in range(p - 1):
+                    events.append(((i, (j + 1) % p), (i, j), "A"))
+                    events.append((((i + 1) % p, j), (i, j), "B"))
+    elif alg == "summa":
+        for i in range(p):
+            for j in range(p):
+                for k in range(p):
+                    if k != j:
+                        events.append(((i, k), (i, j), "A"))
+                    if k != i:
+                        events.append(((k, j), (i, j), "B"))
+    elif alg in ("johnson", "cosma"):
+        gm, gn, gk = grid
+        # replication of A over gn, B over gm, reduction over gk.  An input
+        # tile's initial owner is the iteration point with the zero
+        # coordinate on the replicated axis (canonical 3D placement).
+        for im in range(gm):
+            for jn in range(gn):
+                for kk in range(gk):
+                    events.append(((im, 0, kk), (im, jn, kk), "A"))
+                    events.append(((0, jn, kk), (im, jn, kk), "B"))
+                    if kk:
+                        events.append(((im, jn, kk), (im, jn, 0), "C"))
+    return events
+
+
+def comm_model(alg: str, M: int, N: int, K: int, n_devices: int,
+               tile_to_device: Callable[[Tuple[int, ...]], int],
+               topo: TorusTopo, dtype_bytes: int = 2,
+               flops_per_s: float = 197e12, bw: float = 50e9) -> Dict:
+    """Estimated execution time of (algorithm, index-mapping) on the torus.
+
+    tile_to_device maps a tile coordinate (the algorithm's iteration space)
+    to a physical flat device id -- this is exactly what the DSL's
+    IndexTaskMap chooses, and the searchable quantity of paper §5.3.
+    """
+    if alg in ("cannon", "summa", "pumma"):
+        p = int(math.isqrt(n_devices))
+        grid = (p, p, 1)
+        tile_bytes = {"A": M * K // (p * p) * dtype_bytes,
+                      "B": K * N // (p * p) * dtype_bytes,
+                      "C": M * N // (p * p) * dtype_bytes}
+        events = _transfers(alg, p)
+    elif alg == "solomonik":
+        p = int(math.isqrt(n_devices))
+        while n_devices % (p * p):
+            p -= 1
+        grid = (p, p, n_devices // (p * p))
+        tile_bytes = {"A": M * K // (p * p * grid[2]) * dtype_bytes,
+                      "B": K * N // (p * p * grid[2]) * dtype_bytes,
+                      "C": M * N // (p * p) * dtype_bytes}
+        events = _transfers("solomonik", p)
+    else:
+        if alg == "johnson":
+            g = round(n_devices ** (1 / 3))
+            grid = (g, g, g)
+        else:
+            grid = cosma_grid(n_devices, M, N, K)
+        gm, gn, gk = grid
+        tile_bytes = {"A": M * K // (gm * gk) * dtype_bytes,
+                      "B": K * N // (gk * gn) * dtype_bytes,
+                      "C": M * N // (gm * gn) * dtype_bytes}
+        events = _transfers(alg, 0, grid)
+
+    total_cost = 0.0
+    per_dev: Dict[int, float] = {}
+    tiles_on: Dict[int, int] = {}
+    seen_tiles = set()
+    for src_tile, dst_tile, kind in events:
+        s = tile_to_device(src_tile)
+        d = tile_to_device(dst_tile)
+        if dst_tile not in seen_tiles:
+            seen_tiles.add(dst_tile)
+            tiles_on[d] = tiles_on.get(d, 0) + 1
+        h = topo.hops(s % n_devices, d % n_devices)
+        cost = tile_bytes[kind] * h
+        total_cost += cost
+        per_dev[d] = per_dev.get(d, 0.0) + cost
+    max_dev_cost = max(per_dev.values()) if per_dev else 0.0
+
+    # compute time follows the actual tile->device assignment: a device
+    # executing t tiles serializes them (degenerate all-on-one mappings
+    # pay full serialization, not free parallelism).
+    n_tiles = len(seen_tiles) if seen_tiles else 1
+    gm, gn, gk = grid
+    if alg in ("cannon", "summa", "pumma", "solomonik"):
+        flops_tile = 2.0 * M * N * K / (gm * gn)       # each tile runs full K
+        if alg == "solomonik":
+            flops_tile = 2.0 * M * N * K / (gm * gn * gk)
+    else:
+        flops_tile = 2.0 * M * N * K / (gm * gn * gk)
+    max_tiles = max(tiles_on.values()) if tiles_on else 1
+    compute_s = max_tiles * flops_tile / flops_per_s
+    comm_s = max_dev_cost / bw
+    return {
+        "compute_s": compute_s,
+        "comm_s": comm_s,
+        "time_s": max(compute_s, comm_s) + 0.2 * min(compute_s, comm_s),
+        "total_bytes_hops": total_cost,
+        "grid": grid,
+    }

@@ -1,0 +1,186 @@
+"""Logical-axis sharding: the bridge between MappingPlans and pjit.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "seq", "heads", "ffn", "experts", ...).  An :class:`AxisRules`
+object -- produced by compiling a DSL mapper, or by the expert default --
+maps each logical axis to zero or more *mesh* axes.  Everything else
+(`PartitionSpec` construction, constraint application, conflict checking)
+lives here.
+
+Rules are installed with the ``axis_rules(rules)`` context manager; model
+code calls ``logical_constraint(x, ("batch", "seq", "d_model"))`` without
+knowing the mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# The expert-written default rules (= the "expert mapper" baseline for LMs):
+# FSDP over the data axis + tensor parallelism over the model axis.
+DEFAULT_TRAIN_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "d_model": ("data",),        # FSDP shard of the weight "reduction" dim
+    "d_model_out": ("data",),
+    "act_d": None,               # activation feature dim: replicated
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ffn": ("model",),
+    "experts": ("model",),
+    "expert_ffn": ("model",),
+    "vocab": ("model",),
+    "state": None,
+    "conv": None,
+    "rnn": ("model",),
+    "layers": None,
+    "act_seq": None,             # sequence sharding of activations (SP)
+    "cache_batch": ("data",),
+    "cache_seq": ("model",),     # decode-time context parallelism
+    "cache_heads": None,
+}
+
+
+@dataclass
+class AxisRules:
+    """logical axis -> mesh axes, plus global knobs the plan controls."""
+
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+    # Remat policy for the layer scan: "none" | "block" | "full"
+    remat: str = "block"
+    # Microbatch count for gradient accumulation (1 = no accumulation).
+    microbatches: int = 1
+    # Layout choices (from DSL Layout stmts), keyed by tensor role.
+    layouts: Dict[str, object] = field(default_factory=dict)
+    # Placement overrides, keyed by tensor role: SHARD | REPL | REMAT | HOST
+    placements: Dict[str, str] = field(default_factory=dict)
+
+    def _axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    def resolve(self, axes: Sequence[Optional[str]],
+                shape: Optional[Sequence[int]] = None) -> P:
+        """Logical axes tuple -> PartitionSpec.
+
+        Drops unknown axes, de-duplicates mesh axes (first occurrence wins)
+        and -- when ``shape`` is given -- drops mesh axes that do not divide
+        the dimension (e.g. 8 KV heads cannot shard over model=16: the KV
+        tensors fall back to replication, the GQA semantics on TPU)."""
+        used = set()
+        parts = []
+        for d, ax in enumerate(axes):
+            if ax is None:
+                parts.append(None)
+                continue
+            tgt = self.rules.get(ax)
+            if tgt is None:
+                parts.append(None)
+                continue
+            if isinstance(tgt, str):
+                tgt = (tgt,)
+            tgt = tuple(t for t in tgt if t not in used
+                        and (self.mesh is None or t in self.mesh.axis_names))
+            if shape is not None and tgt:
+                kept = []
+                prod = 1
+                for t in tgt:
+                    n = self._axis_size(t) * prod
+                    if shape[d] % n == 0:
+                        kept.append(t)
+                        prod = n
+                tgt = tuple(kept)
+            used.update(tgt)
+            if not tgt:
+                parts.append(None)
+            elif len(tgt) == 1:
+                parts.append(tgt[0])
+            else:
+                parts.append(tuple(tgt))
+        return P(*parts)
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.resolve(axes, shape))
+
+    def with_updates(self, **updates) -> "AxisRules":
+        new_rules = dict(self.rules)
+        new_rules.update(updates.pop("rules", {}))
+        out = AxisRules(rules=new_rules, mesh=updates.pop("mesh", self.mesh),
+                        remat=updates.pop("remat", self.remat),
+                        microbatches=updates.pop("microbatches",
+                                                 self.microbatches),
+                        layouts=dict(self.layouts), placements=dict(self.placements))
+        for k, v in updates.items():
+            setattr(out, k, v)
+        return out
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_constraint(x, axes: Sequence[Optional[str]]):
+    """Apply a sharding constraint expressed in logical axes (no-op when no
+    rules/mesh are installed, so models run unmodified on one device)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    aval = jax.eval_shape(lambda v: v, x)
+    if aval.ndim != len(axes):  # defensive
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(axes, aval.shape))
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     rules: Optional[AxisRules] = None,
+                     shape: Optional[Sequence[int]] = None) -> P:
+    r = rules or current_rules()
+    if r is None:
+        return P()
+    return r.resolve(axes, shape)
+
+
+def _is_axes_leaf(v) -> bool:
+    return isinstance(v, tuple) and all(
+        isinstance(a, (str, type(None))) for a in v)
+
+
+def param_shardings(axes_tree, rules: AxisRules, abstract_tree=None):
+    """Map a pytree of logical-axes tuples to NamedShardings.
+
+    With ``abstract_tree`` (matching ShapeDtypeStructs), per-dim
+    divisibility is enforced."""
+    if abstract_tree is None:
+        return jax.tree.map(lambda axes: rules.sharding(axes), axes_tree,
+                            is_leaf=_is_axes_leaf)
+    return jax.tree.map(
+        lambda axes, a: rules.sharding(axes, a.shape),
+        axes_tree, abstract_tree, is_leaf=_is_axes_leaf)

@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill + greedy decode under a mapping plan."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dsl.compiler import compile_mapper
+from ..core.mapping.lm_bridge import cache_order_from_plan, rules_from_plan
+from ..launch.mesh import machine_factory_for_mesh
+from ..launch.steps import make_prefill_step, make_serve_step
+from ..models.registry import Model
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    max_len: int = 512
+
+
+class Engine:
+    def __init__(self, model: Model, mesh, mapper_src: str,
+                 cfg: Optional[ServeConfig] = None):
+        self.model = model
+        self.mesh = mesh
+        self.cfg = cfg or ServeConfig()
+        plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
+        self.rules = rules_from_plan(plan, mesh, "decode")
+        self.order = cache_order_from_plan(plan)
+        self.prefill_step = jax.jit(
+            make_prefill_step(model, self.rules, self.order))
+        self.serve_step = jax.jit(
+            make_serve_step(model, self.rules, self.order))
+
+    def generate(self, tokens, enc_frames=None) -> Dict:
+        """tokens: [B, S_prompt] int32.  Returns generated ids [B, N]."""
+        b, s = tokens.shape
+        caches = self.model.init_serve_caches(
+            b, self.cfg.max_len, order=self.order,
+            enc_len=0 if enc_frames is None else enc_frames.shape[1])
+        batch = {"tokens": jnp.asarray(tokens)}
+        if enc_frames is not None:
+            batch["frames"] = jnp.asarray(enc_frames)
+        with self.mesh:
+            logits, caches = self.prefill_step(self._params, batch,
+                                               caches)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out: List = [tok]
+            for i in range(self.cfg.max_new_tokens - 1):
+                tok, _, caches = self.serve_step(self._params, tok, caches,
+                                                 jnp.int32(s + i))
+                out.append(tok)
+        return {"tokens": jnp.concatenate(out, axis=1)}
+
+    def load_params(self, params):
+        self._params = params
+        return self

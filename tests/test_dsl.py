@@ -1,0 +1,190 @@
+"""DSL lexer / parser / compiler tests, incl. the paper's own programs."""
+
+import pytest
+
+from repro.core.dsl import (CompileError, ExecutionError, ParseError,
+                            compile_mapper, make_machine, parse)
+from repro.core.dsl.interp import TaskPoint
+
+FACTORY = lambda proc: make_machine(proc, (2, 4))
+
+
+# -- paper programs ---------------------------------------------------------
+PAPER_FIG3A = """
+Task task0 GPU;
+Region ghost_region GPU ZCMEM;
+Layout * * * C_order SOA Align==64;
+mgpu = Machine(GPU);
+def cyclic(Task task) {
+  ip = task.ipoint;
+  node_idx = ip[0] % mgpu.size[0];
+  gpu_idx = ip[0] % mgpu.size[1];
+  return mgpu[node_idx, gpu_idx];
+}
+IndexTaskMap task4 cyclic;
+"""
+
+PAPER_A8_CIRCUIT = """
+Task * GPU, OMP, CPU;
+Task calculate_new_currents GPU;
+Task update_voltages GPU;
+Region * * GPU FBMEM;
+Layout * * * C_order AOS Align==128;
+mgpu = Machine(GPU);
+m_2d = Machine(GPU);
+def same_point(Task task) {
+  return m_2d[*task.parent.processor(m_2d)];
+}
+"""
+
+PAPER_A9_STRATEGY10 = """
+Task * GPU,CPU;
+Region * * GPU FBMEM;
+Region * * CPU SYSMEM;
+mcpu = Machine(CPU);
+mgpu = Machine(GPU);
+def cyclic1d(Task task) {
+  ip = task.ipoint;
+  return mgpu[ip[0] % mgpu.size[0], ip[0] % mgpu.size[1]];
+}
+IndexTaskMap calculate_new_currents cyclic1d;
+IndexTaskMap distribute_charge cyclic1d;
+IndexTaskMap update_voltages cyclic1d;
+"""
+
+
+@pytest.mark.parametrize("src", [PAPER_FIG3A, PAPER_A8_CIRCUIT,
+                                 PAPER_A9_STRATEGY10])
+def test_paper_programs_compile(src):
+    plan = compile_mapper(src, FACTORY)
+    assert plan.procs_for("anything")
+
+
+def test_fig3a_cyclic_mapping():
+    plan = compile_mapper(PAPER_FIG3A, FACTORY)
+    table = plan.device_table("task4", (8,))
+    m = FACTORY("GPU")
+    expected = [m.flat_index((i % 2, i % 4)) for i in range(8)]
+    assert list(table) == expected
+
+
+def test_layout_resolution():
+    plan = compile_mapper(PAPER_FIG3A, FACTORY)
+    spec = plan.layout_for("task0", "whatever")
+    assert spec.order == "C" and spec.soa and spec.align == 64
+
+
+def test_region_proc_conditional():
+    plan = compile_mapper(PAPER_A9_STRATEGY10, FACTORY)
+    assert plan.placement_for("t", "r", "TP").memory == "SHARD"
+    assert plan.placement_for("t", "r", "INLINE").memory == "HOST"
+
+
+def test_task_preference_order():
+    plan = compile_mapper(PAPER_A8_CIRCUIT, FACTORY)
+    assert plan.procs_for("calculate_new_currents") == ("TP",)
+    assert plan.procs_for("unknown_task") == ("TP", "DP", "INLINE")
+
+
+# -- errors (the paper's feedback categories) --------------------------------
+def test_syntax_error_colon_function():
+    # colon-form body is allowed, but a stray colon is a syntax error
+    with pytest.raises(ParseError):
+        parse("Task : GPU;")
+
+
+def test_undefined_index_function():
+    with pytest.raises(CompileError, match="function undefined"):
+        compile_mapper("IndexTaskMap t missing_fn;", FACTORY)
+
+
+def test_machine_not_found():
+    src = """
+def f(Task task) {
+  return mmissing[0, 0];
+}
+IndexTaskMap t f;
+"""
+    plan = compile_mapper(src, FACTORY)
+    with pytest.raises(CompileError, match="not found"):
+        plan.device_table("t", (4,))
+
+
+def test_index_out_of_bound():
+    src = """
+mgpu = Machine(GPU);
+def bad(Task task) {
+  ip = task.ipoint;
+  return mgpu[ip[0], 0];
+}
+IndexTaskMap t bad;
+"""
+    plan = compile_mapper(src, FACTORY)
+    with pytest.raises(ExecutionError, match="out of bound"):
+        plan.device_table("t", (8,))
+
+
+def test_unknown_processor_kind():
+    with pytest.raises(ParseError, match="unknown processor"):
+        parse("Task t QPU;")
+
+
+def test_unknown_memory_kind():
+    with pytest.raises(ParseError, match="unknown memory"):
+        parse("Region t r GPU WARPMEM;")
+
+
+# -- expression semantics ------------------------------------------------------
+def test_colon_form_and_ternary():
+    src = """
+mgpu = Machine(GPU);
+def pick(Tuple ipoint, Tuple ispace):
+  g = ispace[0] > ispace[1] ? ispace[0] : ispace[1];
+  lin = ipoint[0] + ipoint[1] * g;
+  return mgpu[lin % mgpu.size[0], (lin / mgpu.size[0]) % mgpu.size[1]];
+IndexTaskMap t pick;
+"""
+    plan = compile_mapper(src, FACTORY)
+    tbl = plan.device_table("t", (4, 2))
+    assert tbl.shape == (4, 2)
+    assert tbl.min() >= 0 and tbl.max() < 8
+
+
+def test_machine_transform_in_dsl():
+    src = """
+mgpu = Machine(GPU);
+mlin = mgpu.merge(0, 1);
+def lin(Tuple ipoint, Tuple ispace) {
+  idx = ipoint * mlin.size / ispace;
+  return mlin[*idx];
+}
+IndexTaskMap experts lin;
+"""
+    plan = compile_mapper(src, FACTORY)
+    tbl = plan.device_table("experts", (8,))
+    assert sorted(tbl) == list(range(8))  # block map covers all devices
+
+
+def test_elementwise_tuple_arith():
+    src = """
+mgpu = Machine(GPU);
+def f(Tuple ipoint, Tuple ispace) {
+  idx = ipoint * mgpu.size / ispace % mgpu.size;
+  return mgpu[*idx];
+}
+IndexTaskMap t f;
+"""
+    plan = compile_mapper(src, FACTORY)
+    tbl = plan.device_table("t", (2, 4))
+    assert tbl.shape == (2, 4)
+
+
+def test_instance_limit_and_collect():
+    src = """
+InstanceLimit heavy 4;
+CollectMemory heavy scratch;
+Task heavy GPU;
+"""
+    plan = compile_mapper(src, FACTORY)
+    assert plan.instance_limit_for("heavy") == 4
+    assert ("heavy", "scratch") in plan.collects

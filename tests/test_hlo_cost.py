@@ -1,0 +1,90 @@
+"""HLO text cost model: trip-count-aware FLOPs vs analytically known
+programs (the thing XLA's cost_analysis gets wrong for scans)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_text
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_exact():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    cost = analyze_text(_compile(f, x, w).as_text())
+    assert cost.flops == pytest.approx(10 * 2 * 128 ** 3)
+
+
+def test_grad_scan_flops():
+    def g(params, xs):
+        def layer(h, p):
+            return jnp.tanh(h @ p), ()
+
+        def loss(params):
+            h, _ = jax.lax.scan(layer, xs, params)
+            return jnp.sum(h ** 2)
+
+        return jax.grad(loss)(params)
+
+    p = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = analyze_text(_compile(g, p, xs).as_text())
+    # fwd 6 + bwd 2 per layer = 18 matmuls
+    assert cost.flops == pytest.approx(18 * 2 * 64 ** 3, rel=0.05)
+
+
+def test_xla_cost_analysis_undercounts():
+    """Document why we parse ourselves: XLA counts scan bodies once."""
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((20, 64, 64), jnp.float32)
+    compiled = _compile(f, x, w)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ours = analyze_text(compiled.as_text()).flops
+    assert ours == pytest.approx(20 * 2 * 64 ** 3)
+    assert ca.get("flops", 0) < ours / 5
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, ()
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, ()
+        y, _ = jax.lax.scan(outer, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 5, 32, 32), jnp.float32)
+    cost = analyze_text(_compile(f, x, w).as_text())
+    assert cost.flops == pytest.approx(20 * 2 * 32 ** 3)
+
+
+def test_traffic_positive_and_scaled():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = analyze_text(_compile(f, a, b).as_text())
+    # at least read a, b and write out once
+    assert cost.traffic >= 3 * 256 * 256 * 4

@@ -1,0 +1,102 @@
+"""Property tests for the processor-space transformations (paper A.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsl.machine import MachineError, make_machine
+
+
+def all_points(space):
+    return list(np.ndindex(*space.shape))
+
+
+shapes = st.sampled_from([(2, 4), (4, 4), (8, 8), (2, 16), (16, 16),
+                          (2, 2, 2), (6,), (12, 2)])
+
+
+@given(shapes)
+@settings(max_examples=30, deadline=None)
+def test_identity_bijection(shape):
+    m = make_machine("TPU", shape)
+    flats = sorted(m.flat_index(p) for p in all_points(m))
+    assert flats == list(range(m.num_procs()))
+
+
+@given(shapes, st.integers(0, 3), st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_split_merge_inverse(shape, dim, d):
+    m = make_machine("TPU", shape)
+    dim = dim % m.ndim
+    if m.shape[dim] % d != 0:
+        with pytest.raises(MachineError):
+            m.split(dim, d)
+        return
+    m2 = m.split(dim, d).merge(dim, dim + 1)
+    assert m2.shape == m.shape
+    for p in all_points(m):
+        assert m2.flat_index(p) == m.flat_index(p)
+
+
+@given(shapes)
+@settings(max_examples=30, deadline=None)
+def test_swap_involution(shape):
+    m = make_machine("TPU", shape)
+    if m.ndim < 2:
+        return
+    m2 = m.swap(0, 1).swap(0, 1)
+    for p in all_points(m):
+        assert m2.flat_index(p) == m.flat_index(p)
+
+
+@given(shapes)
+@settings(max_examples=30, deadline=None)
+def test_transform_preserves_device_set(shape):
+    """split/merge/swap are bijections onto the same device set."""
+    m = make_machine("TPU", shape)
+    views = [m.linearized()]
+    if m.ndim >= 2:
+        views.append(m.swap(0, 1))
+        views.append(m.merge(0, 1))
+    if m.shape[0] % 2 == 0:
+        views.append(m.split(0, 2))
+    base = sorted(m.flat_index(p) for p in all_points(m))
+    for v in views:
+        got = sorted(v.flat_index(p) for p in all_points(v))
+        assert got == base
+
+
+def test_slice_restricts():
+    m = make_machine("TPU", (4, 4))
+    s = m.slice(0, 1, 2)
+    assert s.shape == (2, 4)
+    assert s.flat_index((0, 0)) == m.flat_index((1, 0))
+    assert s.flat_index((1, 3)) == m.flat_index((2, 3))
+    with pytest.raises(MachineError):
+        m.slice(0, 3, 1)
+    with pytest.raises(MachineError):
+        s.flat_index((2, 0))
+
+
+def test_paper_example_split_semantics():
+    """Paper A.2: m (8,8); m.split(0,2) -> (2,4,8);
+    m'[j0,j1,j2] == m[j0 + j1*2, j2]."""
+    m = make_machine("TPU", (8, 8))
+    m2 = m.split(0, 2)
+    assert m2.shape == (2, 4, 8)
+    for j0 in range(2):
+        for j1 in range(4):
+            for j2 in range(8):
+                assert m2.flat_index((j0, j1, j2)) == \
+                    m.flat_index((j0 + j1 * 2, j2))
+
+
+def test_merge_semantics():
+    """m' = m.split->merge matches paper: m''[j0,j1] = m'[j0%2, j0//2, j1]."""
+    m = make_machine("TPU", (8, 8))
+    m1 = m.split(0, 2)          # (2, 4, 8)
+    m2 = m1.merge(0, 1)         # (8, 8)
+    for j0 in range(8):
+        for j1 in range(8):
+            assert m2.flat_index((j0, j1)) == \
+                m1.flat_index((j0 % 2, j0 // 2, j1))

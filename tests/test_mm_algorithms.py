@@ -1,0 +1,97 @@
+"""Distributed matmul algorithms: numerics on 8 host devices (subprocess)
++ the communication model's orderings."""
+
+import math
+import random
+
+import pytest
+
+from repro.apps.agent import INDEX_FNS
+from repro.apps.search import (MM_EXPERT_MAPPERS, MMWorkload, mm_eval_mapper,
+                               mm_mapper_text)
+from repro.parallel.mm_algorithms import TorusTopo, comm_model, cosma_grid
+
+
+MULTIDEV_CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.mm_algorithms import run_algorithm, ALGORITHMS
+rng = np.random.RandomState(0)
+M = N = K = 64
+A = jnp.asarray(rng.randn(M, K), jnp.float32)
+B = jnp.asarray(rng.randn(K, N), jnp.float32)
+ref = A @ B
+devs = jax.devices()
+assert len(devs) == 8
+for alg in ALGORITHMS:
+    d = devs[:4] if alg in ("cannon", "pumma") else devs
+    C = run_algorithm(alg, A, B, devices=d)
+    err = float(jnp.max(jnp.abs(C - ref)))
+    assert err < 1e-3, (alg, err)
+    print(alg, "ok", err)
+"""
+
+
+def test_all_algorithms_numerically_correct(multidev):
+    out = multidev(MULTIDEV_CODE, n_devices=8)
+    assert out.count("ok") == 6
+
+
+def test_cosma_grid_adapts_to_shape():
+    # tall-skinny C: K large -> gk should grow
+    g_square = cosma_grid(8, 4096, 4096, 4096)
+    g_deep = cosma_grid(8, 256, 256, 65536)
+    assert g_deep[2] > g_square[2]
+
+
+def test_torus_hops():
+    topo = TorusTopo((2, 4))
+    assert topo.hops(0, 0) == 0
+    assert topo.hops(0, 1) == 1          # same node, adjacent chip
+    assert topo.hops(0, 4) == 4          # cross-node link weighted 4x
+    assert topo.hops(0, 3) == 1          # torus wrap on chip ring
+
+
+def test_comm_model_prefers_locality():
+    """Block mapping (neighbours adjacent) beats a scrambled mapping."""
+    wl = MMWorkload("cannon")
+    t_expert = mm_eval_mapper(wl, mm_mapper_text("block2d"))
+    rng = random.Random(0)
+    perm = list(range(8))
+    rng.shuffle(perm)
+
+    def scrambled(tile):
+        i, j = int(tile[0]), int(tile[1])
+        return perm[(i * 2 + j) % 8]
+
+    res = comm_model("cannon", wl.M, wl.N, wl.K, 8, scrambled, wl.topo)
+    assert t_expert <= res["time_s"]
+
+
+def test_degenerate_mapping_penalized():
+    """All tiles on one device must serialize compute."""
+    wl = MMWorkload("summa")
+    t_expert = mm_eval_mapper(wl, mm_mapper_text("block2d"))
+    res = comm_model("summa", wl.M, wl.N, wl.K, 8, lambda t: 0, wl.topo)
+    assert res["time_s"] > t_expert
+    # and its compute term alone shows the 4x serialization
+    assert res["compute_s"] > 3 * 2 * wl.M * wl.N * wl.K / 4 / 197e12
+
+
+@pytest.mark.parametrize("alg", sorted(MM_EXPERT_MAPPERS))
+def test_expert_mappers_valid(alg):
+    wl = MMWorkload(alg)
+    t = mm_eval_mapper(wl, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
+    assert math.isfinite(t) and t > 0
+
+
+@pytest.mark.parametrize("alg", ["cannon", "johnson"])
+def test_random_mappings_worse_on_average(alg):
+    wl = MMWorkload(alg)
+    t_expert = mm_eval_mapper(wl, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
+    times = []
+    for fn in INDEX_FNS:
+        try:
+            times.append(mm_eval_mapper(wl, mm_mapper_text(fn)))
+        except Exception:
+            times.append(10 * t_expert)
+    assert sum(times) / len(times) >= t_expert

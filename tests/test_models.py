@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step on CPU, asserting output shapes and no NaNs (assignment requirement),
+plus numerics of the core blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import get_model
+from repro.models.attention import _chunked_attn, _naive_attn
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import ssd_chunked
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=24):
+    batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab_size)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(RNG, (b, 16, cfg.d_model),
+                                            jnp.float32)
+        batch["tokens"] = jax.random.randint(
+            RNG, (b, cfg.max_target_len), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = _batch(cfg)
+    logits, _ = model.forward(params, batch)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    params = model.init(RNG)
+    batch = _batch(cfg)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    opt = adamw_init(params)
+    new_params, opt, metrics = adamw_update(AdamWConfig(), grads, opt, params)
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params))
+    assert max(delta) > 0
+
+
+def test_full_configs_instantiable_abstractly():
+    """Full (non-smoke) configs build abstract param trees w/o allocation."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        model = get_model(cfg)
+        abstract = model.abstract_params()
+        n = sum(np.prod(x.shape) for x in jax.tree.leaves(abstract))
+        assert n > 1e8, (arch, n)  # every assigned arch is >100M params
+
+
+def test_param_counts_sane():
+    approx = {
+        "stablelm-1.6b": (1.2e9, 2.6e9),
+        "gemma2-27b": (24e9, 31e9),
+        "qwen3-14b": (13e9, 17e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "chameleon-34b": (32e9, 38e9),
+        "recurrentgemma-2b": (2.2e9, 3.3e9),
+        "granite-moe-3b-a800m": (2.6e9, 4e9),
+        "whisper-small": (0.2e9, 0.35e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_chunked_attention_matches_naive():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 16, 2, 2, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 48, 2, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 48, 2, 16), jnp.float32)
+    q_pos = jnp.arange(16)[None] + 32
+    kv_pos = jnp.arange(48)[None]
+    for window, cap in [(None, None), (8, None), (None, 30.0), (16, 50.0)]:
+        a = _naive_attn(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                        window=window, softcap=cap)
+        b = _chunked_attn(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                          window=window, softcap=cap, chunk=16)
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-5, (window, cap)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size must not change the result (associativity of the scan)."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(1, 64, 4, 8), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (1, 64, 4)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, 4), jnp.float32)
+    b = jnp.asarray(rng.randn(1, 64, 2, 8) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.randn(1, 64, 2, 8) * 0.3, jnp.float32)
+    y8, s8 = ssd_chunked(x, dt, a, b, c, 8)
+    y32, s32 = ssd_chunked(x, dt, a, b, c, 32)
+    assert float(jnp.max(jnp.abs(y8 - y32))) < 1e-4
+    assert float(jnp.max(jnp.abs(s8 - s32))) < 1e-4
+
+
+def test_rglru_scan_matches_loop():
+    rng = np.random.RandomState(2)
+    a = jnp.asarray(rng.uniform(0.2, 0.99, (2, 20, 8)), jnp.float32)
+    b = jnp.asarray(rng.randn(2, 20, 8), jnp.float32)
+    h = rglru_scan(a, b)
+    ref = np.zeros((2, 8), np.float32)
+    for t in range(20):
+        ref = np.asarray(a[:, t]) * ref + np.asarray(b[:, t])
+        assert float(jnp.max(jnp.abs(h[:, t] - ref))) < 1e-5

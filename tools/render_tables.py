@@ -1,0 +1,50 @@
+"""Render the EXPERIMENTS.md roofline tables from dryrun_all.jsonl."""
+
+import json
+import sys
+
+
+def main(path="dryrun_all.jsonl"):
+    rows = [json.loads(l) for l in open(path)]
+    by_mesh = {}
+    for r in rows:
+        by_mesh.setdefault(r.get("mesh", "skip"), []).append(r)
+
+    print("### Single-pod (16x16 = 256 chips) baseline roofline, "
+          "expert mappers\n")
+    print("| arch | shape | step | compute (ms) | memory (ms) | "
+          "collective (ms) | bottleneck | peak HBM/dev (GiB) | "
+          "useful-FLOPs ratio | roofline fraction |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    singles = [r for r in rows if r.get("mesh") == "16x16"]
+    skips = [r for r in rows if "skipped" in r]
+    for r in singles:
+        peak = (r.get("peak_memory_bytes") or 0) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {r['step']} | "
+              f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+              f"{r['collective_s']*1e3:.1f} | {r['bottleneck']} | "
+              f"{peak:.1f} | {r['useful_flops_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.3f} |")
+    seen = set()
+    print("\nSkipped cells (per-spec):\n")
+    for r in skips:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"- {r['arch']} x {r['shape']}: {r['skipped']}")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) pass\n")
+    print("| arch | shape | compiles | peak HBM/dev (GiB) | bottleneck | "
+          "step (ms) |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != "2x16x16":
+            continue
+        peak = (r.get("peak_memory_bytes") or 0) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | yes | {peak:.1f} | "
+              f"{r['bottleneck']} | {r['step_time_s']*1e3:.0f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
