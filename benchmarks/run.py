@@ -31,7 +31,7 @@ def bench_loc_reduction():
     """Table 1: DSL mapper LoC vs the hand-written distribution code it
     replaces (the shard_map algorithm implementations + sharding glue)."""
     from repro.apps import circuit, pennant, stencil
-    from repro.apps.search import MM_EXPERT_MAPPERS, mm_mapper_text
+    from repro.asi.adapters_mm import MM_EXPERT_MAPPERS, mm_mapper_text
     from repro.parallel import mm_algorithms as mma
 
     def loc(src: str) -> int:
@@ -118,9 +118,11 @@ def bench_strategy_codegen():
 # ---------------------------------------------------------------------------
 def bench_scientific_apps(seeds=(0, 1, 2, 3, 4), iterations=10):
     """Fig. 6: normalized throughput, expert / random / best-of-search +
-    Trace & OPRO trajectories."""
+    Trace & OPRO trajectories -- all through the unified ASI front door."""
     from repro.apps import circuit, pennant, stencil
-    from repro.apps.search import expert_time, random_time, search_app
+    from repro.apps.search import expert_time, random_time
+    from repro.asi import tune
+    from repro.asi.adapters_apps import TaskGraphWorkload
 
     for mod, mk in [(stencil, lambda: stencil.make_app(n=8192)),
                     (circuit, lambda: circuit.make_app()),
@@ -134,7 +136,10 @@ def bench_scientific_apps(seeds=(0, 1, 2, 3, 4), iterations=10):
             scores = []
             traj_acc = np.zeros(iterations)
             for s in seeds:
-                res = search_app(app, algo, seed=s, iterations=iterations)
+                # fresh workload per search: the timing column measures
+                # search cost, not evaluator-cache hits across seeds
+                res = tune(TaskGraphWorkload(app), strategy=algo, seed=s,
+                           iterations=iterations)
                 scores.append(res.best_score)
                 traj_acc += np.minimum.accumulate(
                     [t if np.isfinite(t) else rt for t in res.trajectory])
@@ -155,25 +160,27 @@ def bench_scientific_apps(seeds=(0, 1, 2, 3, 4), iterations=10):
 def bench_matmul_algorithms(seeds=(0, 1, 2, 3, 4), iterations=10):
     """Fig. 7: six matmul algorithms, search over index mappings."""
     from repro.apps.agent import INDEX_FNS
-    from repro.apps.search import (MM_EXPERT_MAPPERS, MMWorkload,
-                                   mm_eval_mapper, mm_mapper_text, search_mm)
+    from repro.asi import tune
+    from repro.asi.adapters_mm import (MM_EXPERT_MAPPERS, MMWorkload,
+                                       MatmulWorkload, mm_eval_mapper,
+                                       mm_mapper_text)
 
     rng = random.Random(0)
     for alg in MM_EXPERT_MAPPERS:
-        wl = MMWorkload(alg)
+        spec = MMWorkload(alg)
         t0 = time.perf_counter()
-        et = mm_eval_mapper(wl, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
+        et = mm_eval_mapper(spec, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
         rand = []
         for _ in range(10):
             fn = rng.choice(INDEX_FNS)
             try:
-                rand.append(mm_eval_mapper(wl, mm_mapper_text(fn)))
+                rand.append(mm_eval_mapper(spec, mm_mapper_text(fn)))
             except Exception:
                 rand.append(et * 10)
         best = {}
         for algo in ("trace", "opro"):
-            scores = [search_mm(wl, algo, seed=s,
-                                iterations=iterations).best_score
+            scores = [tune(MatmulWorkload(spec), strategy=algo, seed=s,
+                           iterations=iterations).best_score
                       for s in seeds]
             best[algo] = min(scores)
         us = (time.perf_counter() - t0) * 1e6
@@ -188,27 +195,32 @@ def bench_feedback_ablation(seeds=(0, 1, 2, 3, 4), iterations=10):
     """Fig. 8: System vs System+Explain vs full feedback, on circuit +
     COSMA + Cannon."""
     from repro.apps import circuit
-    from repro.apps.search import (MMWorkload, MM_EXPERT_MAPPERS,
-                                   expert_time, mm_eval_mapper,
-                                   mm_mapper_text, search_app, search_mm)
+    from repro.apps.search import expert_time
+    from repro.asi import tune
+    from repro.asi.adapters_apps import TaskGraphWorkload
+    from repro.asi.adapters_mm import (MM_EXPERT_MAPPERS, MMWorkload,
+                                       MatmulWorkload, mm_eval_mapper,
+                                       mm_mapper_text)
 
     app = circuit.make_app()
     et_circ = expert_time(app, circuit.EXPERT_MAPPER)
     for level, label in [("system", "System"), ("explain", "SystemExplain"),
                          ("full", "SystemExplainSuggest")]:
-        scores = [search_app(app, "trace", seed=s, iterations=iterations,
-                             feedback_level=level).best_score
+        scores = [tune(TaskGraphWorkload(app), strategy="trace", seed=s,
+                       iterations=iterations,
+                       feedback_level=level).best_score
                   for s in seeds]
         _emit(f"feedback_ablation/circuit/{label}", 0.0,
               f"norm_throughput={et_circ/np.mean(scores):.3f}")
     for alg in ("cosma", "cannon"):
-        wl = MMWorkload(alg)
-        et = mm_eval_mapper(wl, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
+        spec = MMWorkload(alg)
+        et = mm_eval_mapper(spec, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
         for level, label in [("system", "System"),
                              ("explain", "SystemExplain"),
                              ("full", "SystemExplainSuggest")]:
-            scores = [search_mm(wl, "trace", seed=s, iterations=iterations,
-                                feedback_level=level).best_score
+            scores = [tune(MatmulWorkload(spec), strategy="trace", seed=s,
+                           iterations=iterations,
+                           feedback_level=level).best_score
                       for s in seeds]
             _emit(f"feedback_ablation/{alg}/{label}", 0.0,
                   f"norm_throughput={et/np.mean(scores):.3f}")
@@ -263,6 +275,26 @@ def bench_kernel_microbench():
 
 
 # ---------------------------------------------------------------------------
+def bench_asi_batching(iterations=10):
+    """(ours) Batched tuning through the unified ASI front door: candidates
+    evaluated per second as the per-iteration batch grows."""
+    from repro.apps import circuit
+    from repro.asi import tune
+    from repro.asi.adapters_apps import TaskGraphWorkload
+
+    for batch in (1, 4, 8):
+        wl = TaskGraphWorkload(circuit.make_app())  # fresh evaluator cache
+        t0 = time.perf_counter()
+        res = tune(wl, strategy="trace", seed=0, iterations=iterations,
+                   batch=batch)
+        dt = time.perf_counter() - t0
+        n_evals = len(res.graph.records)
+        _emit(f"asi_batching/batch_{batch}", dt / n_evals * 1e6,
+              f"evals={n_evals};best={res.best_score:.6f};"
+              f"evals_per_s={n_evals/dt:.1f}")
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -289,6 +321,7 @@ SECTIONS = {
     "matmul_algorithms": bench_matmul_algorithms,
     "feedback_ablation": bench_feedback_ablation,
     "kernel_microbench": bench_kernel_microbench,
+    "asi_batching": bench_asi_batching,
     "agent_overhead": bench_agent_overhead,
 }
 

@@ -1,22 +1,24 @@
-"""The paper's core loop, end to end: an LLM-optimizer agent iteratively
-improves a DSL mapper from system feedback -- shown on (a) the Circuit
-scientific app and (b) a distributed-matmul index-mapping search.
+"""The paper's core loop, end to end, through the unified Agent-System
+Interface: an LLM-optimizer agent iteratively improves a DSL mapper from
+system feedback -- shown on (a) the Circuit scientific app and (b) a
+distributed-matmul index-mapping search, then (c) a batched run that
+evaluates 4 candidates per iteration through the same front door.
 
     PYTHONPATH=src python examples/optimize_mapper.py
 """
 
 from repro.apps import circuit
-from repro.apps.search import (MM_EXPERT_MAPPERS, MMWorkload, expert_time,
-                               mm_eval_mapper, mm_mapper_text, random_time,
-                               search_app, search_mm)
+from repro.apps.search import expert_time, random_time
+from repro.asi import registry, tune
 
 
 def main():
     print("=== Circuit simulation (paper §5.2) ===")
-    app = circuit.make_app()
+    wl = registry.get("circuit")
+    app = wl.app
     et = expert_time(app, circuit.EXPERT_MAPPER)
     rt = random_time(app)
-    res = search_app(app, "trace", seed=0, iterations=10)
+    res = tune(wl, strategy="trace", seed=0, iterations=10)
     print(f"expert mapper:   {et*1e3:8.3f} ms/iter (normalized 1.00)")
     print(f"random mappers:  {rt*1e3:8.3f} ms/iter ({et/rt:.2f})")
     print(f"agent-optimized: {res.best_score*1e3:8.3f} ms/iter "
@@ -26,13 +28,18 @@ def main():
     print("  " + " ".join(f"{t*1e3:.2f}" for t in res.trajectory))
 
     print("\n=== SUMMA index-mapping search (paper §5.3) ===")
-    wl = MMWorkload("summa")
-    et = mm_eval_mapper(wl, mm_mapper_text(MM_EXPERT_MAPPERS["summa"]))
-    res = search_mm(wl, "trace", seed=0, iterations=10)
+    mm = registry.get("matmul/summa")
+    et = mm.evaluator()(mm.expert_mapper).score
+    res = tune(mm, strategy="trace", seed=0, iterations=10)
     print(f"expert (block2d): {et*1e3:.2f} ms; "
           f"searched: {res.best_score*1e3:.2f} ms "
           f"({et/res.best_score:.2f}x)")
     print("\nbest mapper found:\n" + res.best_mapper)
+
+    print("\n=== Batched tuning (4 candidates/iteration) ===")
+    res4 = tune("circuit", strategy="trace", seed=0, iterations=10, batch=4)
+    print(f"batch=4 evaluated {len(res4.graph.records)} candidates, "
+          f"best {res4.best_score*1e3:.3f} ms/iter")
 
 
 if __name__ == "__main__":

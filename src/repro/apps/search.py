@@ -1,72 +1,52 @@
-"""Search harness for the scientific apps and matmul algorithms -- the
-machinery behind Figures 6, 7 and 8 of the paper.
+"""Legacy search front ends for the scientific apps and matmul algorithms.
 
-Apps are scored by the task-graph machine model; matmuls by the
-communication model (bytes x torus hops).  Both are deterministic, like
-the paper's controlled cluster.
+.. deprecated::
+    The substance of this module moved to the unified Agent-System
+    Interface: :mod:`repro.asi.adapters_apps`,
+    :mod:`repro.asi.adapters_mm`, and the :func:`repro.asi.tune` front
+    door.  ``search_app`` / ``search_mm`` are kept as thin shims so
+    existing callers keep working; new code should do::
+
+        from repro import asi
+        asi.tune("circuit", strategy="trace", iterations=10)
+        asi.tune(asi.registry.get("matmul/summa"), batch=4)
 """
 
 from __future__ import annotations
 
-import math
-import random
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional
 
-from ..core.agent.llm import HeuristicLLM
-from ..core.agent.optimizers import (AnnealingSearch, OPROSearch,
-                                     RandomSearch, SearchResult, TraceSearch)
+from ..asi.adapters_apps import (APP_MACHINE, TaskGraphWorkload,  # noqa: F401
+                                 app_machine_factory, app_rules,
+                                 make_app_evaluator)
+from ..asi.adapters_mm import (MM_EXPERT_MAPPERS, MM_MACHINE,  # noqa: F401
+                               MatmulWorkload, MMWorkload, mm_eval_mapper,
+                               mm_machine_factory, mm_mapper_text)
+from ..core.agent.optimizers import SearchResult
 from ..core.dsl.compiler import compile_mapper
-from ..core.evaluator import CallableEvaluator
-from ..core.dsl.machine import make_machine
-from ..parallel.mm_algorithms import TorusTopo, comm_model
-from .agent import AppMapperAgent, mutate_app_decisions, index_fn_code
 from .taskgraph import TaskGraphApp, evaluate_plan
 
-# The paper's cluster: nodes x 4 GPUs.  8 "devices" = (2, 4).
-APP_MACHINE = (2, 4)
-
-
-def app_machine_factory(proc: str):
-    return make_machine(proc, APP_MACHINE)
-
-
-# LLM proposal rules for the app space.  Patterns reference the *enhanced*
-# feedback phrasing (Suggest channel), so the Fig. 8 ablation bites: at
-# 'system' level the proposer falls back to exploration.
-def _app_rules(app: TaskGraphApp):
-    return [
-        (r"Move more (tasks|stages)",
-         {"try": [("task_decision", t.name, "GPU") for t in app.tasks]
-          + [("region_decision", r, "FBMEM") for r in app.regions]}),
-        (r"Move activations to REMAT|keep weights in FBMEM",
-         {"try": [("region_decision", r, "FBMEM") for r in app.regions]
-          + [("region_decision", r, "SYSMEM") for r in app.regions]}),
-        (r"Adjust the layout|layout constraints",
-         {"try": [("layout_decision", "soa", "SOA"),
-                  ("layout_decision", "order", "C_order")]}),
-    ]
-
-
-def make_app_evaluator(app: TaskGraphApp) -> CallableEvaluator:
-    def run(mapper_src: str) -> float:
-        plan = compile_mapper(mapper_src, app_machine_factory)
-        return evaluate_plan(app, plan)
-    return CallableEvaluator(run)
+# backwards-compatible alias (pre-ASI private name)
+_app_rules = app_rules
 
 
 def search_app(app: TaskGraphApp, algo: str = "trace", seed: int = 0,
                iterations: int = 10, feedback_level: str = "full",
                start: Optional[Dict] = None) -> SearchResult:
-    agent = AppMapperAgent(app, decisions=start)
-    neighbor = lambda d, rng, k=1: mutate_app_decisions(app, d, rng, k)
-    rand = lambda s: AppMapperAgent.random_decisions(app, s)
-    llm = HeuristicLLM(rules=_app_rules(app), neighbor_fn=neighbor)
-    cls = {"random": RandomSearch, "opro": OPROSearch, "trace": TraceSearch,
-           "annealing": AnnealingSearch}[algo]
-    search = cls(seed=seed, feedback_level=feedback_level, llm=llm,
-                 random_fn=rand, neighbor_fn=neighbor)
-    return search.run(agent, make_app_evaluator(app), iterations)
+    """Deprecated shim: ``asi.tune`` on a :class:`TaskGraphWorkload`."""
+    from ..asi.tuner import tune
+    return tune(TaskGraphWorkload(app), strategy=algo, seed=seed,
+                iterations=iterations, feedback_level=feedback_level,
+                start=start)
+
+
+def search_mm(wl: MMWorkload, algo: str = "trace", seed: int = 0,
+              iterations: int = 10,
+              feedback_level: str = "full") -> SearchResult:
+    """Deprecated shim: ``asi.tune`` on a :class:`MatmulWorkload`."""
+    from ..asi.tuner import tune
+    return tune(MatmulWorkload(wl), strategy=algo, seed=seed,
+                iterations=iterations, feedback_level=feedback_level)
 
 
 def expert_time(app: TaskGraphApp, expert_mapper: str) -> float:
@@ -76,6 +56,7 @@ def expert_time(app: TaskGraphApp, expert_mapper: str) -> float:
 
 def random_time(app: TaskGraphApp, n: int = 10) -> float:
     """Average modeled time of n random mappers (the paper's baseline)."""
+    from .agent import AppMapperAgent
     total, count = 0.0, 0
     for s in range(n):
         agent = AppMapperAgent(app, AppMapperAgent.random_decisions(app, s))
@@ -87,152 +68,3 @@ def random_time(app: TaskGraphApp, n: int = 10) -> float:
             total += 10.0  # failed mappers: paper counts them as very slow
             count += 1
     return total / max(count, 1)
-
-
-# ---------------------------------------------------------------------------
-# Matmul-algorithm mapping search (paper §5.3)
-# ---------------------------------------------------------------------------
-MM_MACHINE = (2, 4)  # nodes x GPUs (flat 8 devices)
-
-
-@dataclass
-class MMWorkload:
-    algorithm: str
-    M: int = 8192
-    N: int = 8192
-    K: int = 8192
-    n_devices: int = 8
-
-    @property
-    def topo(self) -> TorusTopo:
-        return TorusTopo(MM_MACHINE)
-
-
-def mm_machine_factory(proc: str):
-    return make_machine(proc, MM_MACHINE)
-
-
-def mm_eval_mapper(wl: MMWorkload, mapper_src: str) -> float:
-    """Score a DSL mapper for a matmul algorithm: the IndexTaskMap of the
-    algorithm's task is materialized over its tile grid and fed to the
-    communication model."""
-    plan = compile_mapper(mapper_src, mm_machine_factory)
-    fn = plan.index_map_for("mm_tiles")
-    if fn is None:
-        raise_from = plan.index_map_for("*")
-        fn = raise_from
-    from ..core.dsl.interp import TaskPoint
-    from ..core.dsl.errors import CompileError
-    if fn is None:
-        raise CompileError("no IndexTaskMap registered for task mm_tiles")
-
-    n = wl.n_devices
-    if wl.algorithm in ("cannon", "summa", "pumma"):
-        p = int(math.isqrt(n))
-        while n % (p * p):
-            p -= 1
-        grid = (p, p, 1)
-    elif wl.algorithm == "solomonik":
-        p = int(math.isqrt(n))
-        while n % (p * p):
-            p -= 1
-        grid = (p, p, n // (p * p))
-    elif wl.algorithm == "johnson":
-        g = round(n ** (1 / 3))
-        grid = (g, g, g)
-    else:
-        from ..parallel.mm_algorithms import cosma_grid
-        grid = cosma_grid(n, wl.M, wl.N, wl.K)
-
-    def tile_to_device(tile: Tuple[int, ...]) -> int:
-        t = tuple(int(x) for x in tile)
-        if len(t) == 1:
-            t = (t[0], 0)
-        ispace = grid[:len(t)] if len(t) >= 3 else grid[:2]
-        tp = TaskPoint(ipoint=t, ispace=tuple(ispace), name="mm_tiles")
-        return fn(tp)
-
-    res = comm_model(wl.algorithm, wl.M, wl.N, wl.K, n, tile_to_device,
-                     wl.topo)
-    return res["time_s"]
-
-
-MM_EXPERT_MAPPERS = {
-    # canonical per-algorithm mappings (paper: "algorithm self-specified
-    # expert mappers"): 2D algorithms use block2d; 3D/2.5D linearize the
-    # grid hierarchically.
-    "cannon": "block2d", "summa": "block2d", "pumma": "block2d",
-    "johnson": "linearize3d", "solomonik": "block2d", "cosma": "linearize3d",
-}
-
-
-def mm_mapper_text(fn_name: str) -> str:
-    return "\n".join([
-        "Task mm_tiles GPU;",
-        "Region mm_tiles * GPU FBMEM;",
-        "mgpu = Machine(GPU);",
-        index_fn_code(fn_name),
-        f"IndexTaskMap mm_tiles {fn_name};",
-    ])
-
-
-def search_mm(wl: MMWorkload, algo: str = "trace", seed: int = 0,
-              iterations: int = 10,
-              feedback_level: str = "full") -> SearchResult:
-    from .agent import INDEX_FNS
-    app_like = None
-
-    def rand(s: int) -> Dict:
-        rng = random.Random(s)
-        return {"index_task_map_decision": {"fn": rng.choice(INDEX_FNS),
-                                            "index_tasks": ("mm_tiles",)}}
-
-    def neighbor(d, rng, k=1):
-        import copy
-        out = copy.deepcopy(d)
-        out["index_task_map_decision"]["fn"] = rng.choice(INDEX_FNS)
-        return out
-
-    class MMAgent(AppMapperAgent):  # reuse bundle plumbing
-        def __init__(self, decisions=None):
-            from ..core.agent.trace_lite import Bundle
-            d = decisions or {"index_task_map_decision":
-                              {"fn": "cyclic1d", "index_tasks": ("mm_tiles",)}}
-
-            def render_idx(value, _):
-                fnn = value["fn"]
-                return "\n".join([
-                    "Task mm_tiles GPU;",
-                    "Region mm_tiles * GPU FBMEM;",
-                    "mgpu = Machine(GPU);",
-                    index_fn_code(fnn),
-                    f"IndexTaskMap mm_tiles {fnn};",
-                ])
-
-            self.index_task_map_decision = Bundle(
-                "index_task_map_decision", {"fn": INDEX_FNS},
-                dict(d["index_task_map_decision"]), render_idx)
-
-        def mapper_text(self):
-            return self.index_task_map_decision.forward(None)
-
-    agent = MMAgent()
-    fns_3d = ("linearize3d",)
-    fns_2d = ("block2d", "linearize", "block1d", "blockcyclic")
-    llm = HeuristicLLM(rules=[
-        (r"tuple index .* out of bounds|arity",
-         {"try": [("index_task_map_decision", "fn", f)
-                  for f in (fns_3d if wl.algorithm in ("johnson", "cosma")
-                            else fns_2d)]}),
-        (r"different IndexTaskMap",   # enhanced-feedback phrasing only
-         {"try": [("index_task_map_decision", "fn", f)
-                  for f in (fns_3d + fns_2d
-                            if wl.algorithm in ("johnson", "cosma")
-                            else fns_2d)]}),
-    ], neighbor_fn=neighbor)
-    cls = {"random": RandomSearch, "opro": OPROSearch, "trace": TraceSearch,
-           "annealing": AnnealingSearch}[algo]
-    search = cls(seed=seed, feedback_level=feedback_level, llm=llm,
-                 random_fn=rand, neighbor_fn=neighbor)
-    evaluator = CallableEvaluator(lambda src: mm_eval_mapper(wl, src))
-    return search.run(agent, evaluator, iterations)

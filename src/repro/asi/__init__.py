@@ -1,0 +1,24 @@
+"""repro.asi -- the unified Agent-System Interface.
+
+One ``Workload`` protocol, one ``WorkloadRegistry``, one ``Tuner`` front
+door for every substrate the repro can tune:
+
+    from repro import asi
+    result = asi.tune("circuit", strategy="trace", iterations=10, batch=4)
+    asi.registry.names()          # everything tunable
+    asi.resume("session.json")    # continue a checkpointed run
+
+CLI: ``python -m repro.tune --workload circuit --strategy trace``.
+"""
+
+from . import registry  # noqa: F401
+from ..core.agent.loop import TuneSession, run_loop
+from .registry import REGISTRY, WorkloadInfo, WorkloadRegistry, populate
+from .tuner import STRATEGIES, Tuner, resume, tune
+from .workload import AgentWorkload, Workload
+
+__all__ = [
+    "AgentWorkload", "REGISTRY", "STRATEGIES", "Tuner", "TuneSession",
+    "Workload", "WorkloadInfo", "WorkloadRegistry", "populate", "registry",
+    "resume", "run_loop", "tune",
+]

@@ -1,0 +1,62 @@
+"""Workload adapters for the LM (arch x shape) cells.
+
+Each supported cell of the production dry-run grid -- an architecture
+from the zoo times an assigned input shape -- is one workload: decisions
+are the paper's five LM mapper bundles, rendering goes through
+:class:`MapperAgent`, and evaluation compiles the mapped step on the
+production mesh via :class:`LMCellEvaluator`.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, Optional
+
+from ..core.agent.agent import MapperAgent
+from ..core.mapping import space
+from .workload import AgentWorkload
+
+
+class LMCellWorkload(AgentWorkload):
+    substrate = "lm"
+    # JAX lowering/compilation is not safe to drive from several threads.
+    parallel_safe = False
+
+    def __init__(self, arch: str, shape: str, multi_pod: bool = False):
+        super().__init__()
+        self.arch = arch
+        self.shape = shape
+        self.multi_pod = multi_pod
+        self.name = f"lm/{arch}/{shape}"
+        self.description = (f"{arch} {shape} cell on the production mesh"
+                            f"{' (multi-pod)' if multi_pod else ''}")
+
+    def make_agent(self, decisions: Optional[Dict] = None):
+        return MapperAgent(decisions)
+
+    def default_decisions(self) -> Dict:
+        return space.default_decisions()
+
+    def random_decisions(self, seed: int) -> Dict:
+        return space.random_decisions(seed)
+
+    def neighbors(self, decisions: Dict, rng: random.Random,
+                  k: int = 1) -> Dict:
+        return space.neighbors(decisions, rng, k)
+
+    def _make_evaluator(self) -> Callable:
+        from ..core.evaluator import LMCellEvaluator
+        return LMCellEvaluator(self.arch, self.shape,
+                               multi_pod=self.multi_pod)
+
+
+def register_lm_cells(registry):
+    from ..configs import all_cells
+    for arch, shape, skip in all_cells():
+        if skip:
+            continue
+        registry.register(
+            f"lm/{arch}/{shape}",
+            (lambda arch=arch, shape=shape: LMCellWorkload(arch, shape)),
+            substrate="lm",
+            description=f"{arch} {shape} production-mesh cell")

@@ -1,0 +1,190 @@
+"""Workload adapter for the distributed-matmul algorithms (paper §5.3).
+
+Home of the matmul mapping-search substance that used to live inside
+``repro.apps.search``: the :class:`MMWorkload` spec (algorithm + problem
+shape), the communication-model evaluator, the per-algorithm expert
+mappers, and the single-bundle index-mapping agent.  ``repro.apps.search``
+re-exports these names as a deprecation shim.
+"""
+
+from __future__ import annotations
+
+import copy
+import math
+import random
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from ..apps.agent import AppMapperAgent, INDEX_FNS, index_fn_code
+from ..core.agent.llm import HeuristicLLM
+from ..core.agent.trace_lite import Bundle
+from ..core.dsl.compiler import compile_mapper
+from ..core.dsl.machine import make_machine
+from ..core.evaluator import CallableEvaluator
+from ..parallel.mm_algorithms import TorusTopo, comm_model
+from .workload import AgentWorkload
+
+MM_MACHINE = (2, 4)  # nodes x GPUs (flat 8 devices)
+
+
+@dataclass
+class MMWorkload:
+    """Problem spec: which algorithm, what shape, how many devices."""
+
+    algorithm: str
+    M: int = 8192
+    N: int = 8192
+    K: int = 8192
+    n_devices: int = 8
+
+    @property
+    def topo(self) -> TorusTopo:
+        return TorusTopo(MM_MACHINE)
+
+
+def mm_machine_factory(proc: str):
+    return make_machine(proc, MM_MACHINE)
+
+
+def mm_eval_mapper(wl: MMWorkload, mapper_src: str) -> float:
+    """Score a DSL mapper for a matmul algorithm: the IndexTaskMap of the
+    algorithm's task is materialized over its tile grid and fed to the
+    communication model."""
+    plan = compile_mapper(mapper_src, mm_machine_factory)
+    fn = plan.index_map_for("mm_tiles")
+    if fn is None:
+        fn = plan.index_map_for("*")
+    from ..core.dsl.errors import CompileError
+    from ..core.dsl.interp import TaskPoint
+    if fn is None:
+        raise CompileError("no IndexTaskMap registered for task mm_tiles")
+
+    n = wl.n_devices
+    if wl.algorithm in ("cannon", "summa", "pumma"):
+        p = int(math.isqrt(n))
+        while n % (p * p):
+            p -= 1
+        grid = (p, p, 1)
+    elif wl.algorithm == "solomonik":
+        p = int(math.isqrt(n))
+        while n % (p * p):
+            p -= 1
+        grid = (p, p, n // (p * p))
+    elif wl.algorithm == "johnson":
+        g = round(n ** (1 / 3))
+        grid = (g, g, g)
+    else:
+        from ..parallel.mm_algorithms import cosma_grid
+        grid = cosma_grid(n, wl.M, wl.N, wl.K)
+
+    def tile_to_device(tile: Tuple[int, ...]) -> int:
+        t = tuple(int(x) for x in tile)
+        if len(t) == 1:
+            t = (t[0], 0)
+        ispace = grid[:len(t)] if len(t) >= 3 else grid[:2]
+        tp = TaskPoint(ipoint=t, ispace=tuple(ispace), name="mm_tiles")
+        return fn(tp)
+
+    res = comm_model(wl.algorithm, wl.M, wl.N, wl.K, n, tile_to_device,
+                     wl.topo)
+    return res["time_s"]
+
+
+MM_EXPERT_MAPPERS = {
+    # canonical per-algorithm mappings (paper: "algorithm self-specified
+    # expert mappers"): 2D algorithms use block2d; 3D/2.5D linearize the
+    # grid hierarchically.
+    "cannon": "block2d", "summa": "block2d", "pumma": "block2d",
+    "johnson": "linearize3d", "solomonik": "block2d", "cosma": "linearize3d",
+}
+
+
+def mm_mapper_text(fn_name: str) -> str:
+    return "\n".join([
+        "Task mm_tiles GPU;",
+        "Region mm_tiles * GPU FBMEM;",
+        "mgpu = Machine(GPU);",
+        index_fn_code(fn_name),
+        f"IndexTaskMap mm_tiles {fn_name};",
+    ])
+
+
+class MMAgent(AppMapperAgent):
+    """Single-bundle agent over the index-mapping function family."""
+
+    def __init__(self, decisions=None):
+        d = decisions or {"index_task_map_decision":
+                          {"fn": "cyclic1d", "index_tasks": ("mm_tiles",)}}
+
+        def render_idx(value, _):
+            return mm_mapper_text(value["fn"])
+
+        self.index_task_map_decision = Bundle(
+            "index_task_map_decision", {"fn": INDEX_FNS},
+            dict(d["index_task_map_decision"]), render_idx)
+
+    def mapper_text(self):
+        return self.index_task_map_decision.forward(None)
+
+
+class MatmulWorkload(AgentWorkload):
+    substrate = "matmul"
+
+    def __init__(self, spec: MMWorkload, name: Optional[str] = None):
+        super().__init__()
+        self.spec = spec
+        if name is None:
+            name = f"matmul/{spec.algorithm}"
+            if spec != MMWorkload(spec.algorithm):
+                # non-default problem: keep the name distinct so a
+                # checkpoint can never silently rebind to the registry's
+                # default-spec workload
+                name += f"/{spec.M}x{spec.N}x{spec.K}@{spec.n_devices}"
+        self.name = name
+        self.expert_mapper = mm_mapper_text(
+            MM_EXPERT_MAPPERS[spec.algorithm])
+        self.description = (f"{spec.algorithm} {spec.M}x{spec.N}x{spec.K} "
+                            f"on {spec.n_devices} devices (Fig. 7)")
+
+    @classmethod
+    def of(cls, algorithm: str, **kw) -> "MatmulWorkload":
+        return cls(MMWorkload(algorithm, **kw))
+
+    def make_agent(self, decisions: Optional[Dict] = None):
+        return MMAgent(decisions)
+
+    def random_decisions(self, seed: int) -> Dict:
+        rng = random.Random(seed)
+        return {"index_task_map_decision": {"fn": rng.choice(INDEX_FNS),
+                                            "index_tasks": ("mm_tiles",)}}
+
+    def neighbors(self, decisions: Dict, rng: random.Random,
+                  k: int = 1) -> Dict:
+        out = copy.deepcopy(decisions)
+        out["index_task_map_decision"]["fn"] = rng.choice(INDEX_FNS)
+        return out
+
+    def _make_evaluator(self) -> Callable:
+        return CallableEvaluator(lambda src: mm_eval_mapper(self.spec, src))
+
+    def llm(self):
+        fns_3d = ("linearize3d",)
+        fns_2d = ("block2d", "linearize", "block1d", "blockcyclic")
+        is_3d = self.spec.algorithm in ("johnson", "cosma")
+        return HeuristicLLM(rules=[
+            (r"tuple index .* out of bounds|arity",
+             {"try": [("index_task_map_decision", "fn", f)
+                      for f in (fns_3d if is_3d else fns_2d)]}),
+            (r"different IndexTaskMap",   # enhanced-feedback phrasing only
+             {"try": [("index_task_map_decision", "fn", f)
+                      for f in (fns_3d + fns_2d if is_3d else fns_2d)]}),
+        ], neighbor_fn=self.neighbors)
+
+
+def register_matmuls(registry):
+    for alg in MM_EXPERT_MAPPERS:
+        registry.register(
+            f"matmul/{alg}",
+            (lambda alg=alg: MatmulWorkload.of(alg)),
+            substrate="matmul",
+            description=f"{alg} index-mapping search, 8192^3 on 8 devices")

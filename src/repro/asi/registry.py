@@ -1,0 +1,101 @@
+"""The workload registry: every tunable substrate under one namespace.
+
+Workloads register *factories* (not instances) so that listing the
+registry stays cheap -- constructing an LM-cell evaluator builds the
+production mesh, and the real-JAX app workloads time a kernel, none of
+which should happen before ``get()``.
+
+    from repro.asi import registry
+    registry.names()                  # all registered workload names
+    wl = registry.get("circuit")      # construct (cached) on first use
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .workload import Workload
+
+
+@dataclass(frozen=True)
+class WorkloadInfo:
+    name: str
+    substrate: str
+    description: str = ""
+
+
+@dataclass
+class WorkloadRegistry:
+    _factories: Dict[str, Callable[[], Workload]] = field(
+        default_factory=dict)
+    _infos: Dict[str, WorkloadInfo] = field(default_factory=dict)
+    _cache: Dict[str, Workload] = field(default_factory=dict)
+
+    def register(self, name: str, factory: Callable[[], Workload], *,
+                 substrate: str, description: str = "",
+                 replace: bool = False) -> None:
+        if name in self._factories and not replace:
+            raise ValueError(f"workload {name!r} already registered")
+        self._factories[name] = factory
+        self._infos[name] = WorkloadInfo(name, substrate, description)
+        self._cache.pop(name, None)
+
+    def get(self, name: str) -> Workload:
+        if name not in self._factories:
+            raise KeyError(
+                f"unknown workload {name!r}; known: {sorted(self._factories)}")
+        if name not in self._cache:
+            self._cache[name] = self._factories[name]()
+        return self._cache[name]
+
+    def names(self, substrate: Optional[str] = None) -> List[str]:
+        if substrate is None:
+            return sorted(self._factories)
+        return sorted(n for n, i in self._infos.items()
+                      if i.substrate == substrate)
+
+    def list(self) -> List[WorkloadInfo]:
+        return [self._infos[n] for n in self.names()]
+
+    def substrates(self) -> List[str]:
+        return sorted({i.substrate for i in self._infos.values()})
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._factories
+
+    def __len__(self) -> int:
+        return len(self._factories)
+
+    def __iter__(self):
+        return iter(self.names())
+
+
+# The default registry, populated with every substrate in the repro.
+REGISTRY = WorkloadRegistry()
+_POPULATED = False
+
+
+def populate(registry: Optional[WorkloadRegistry] = None) -> WorkloadRegistry:
+    """Idempotently register all built-in workloads."""
+    global _POPULATED
+    reg = registry or REGISTRY
+    if reg is REGISTRY and _POPULATED:
+        return reg
+    from .adapters_apps import register_apps
+    from .adapters_lm import register_lm_cells
+    from .adapters_mm import register_matmuls
+    register_apps(reg)
+    register_matmuls(reg)
+    register_lm_cells(reg)
+    if reg is REGISTRY:
+        _POPULATED = True
+    return reg
+
+
+def get(name: str) -> Workload:
+    return populate().get(name)
+
+
+def names(substrate: Optional[str] = None) -> List[str]:
+    return populate().names(substrate)

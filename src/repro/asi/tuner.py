@@ -1,0 +1,231 @@
+"""The ``Tuner``: one front door for every optimization run.
+
+``tune(workload, strategy, iterations, batch, seed)`` drives the
+unified loop of :mod:`repro.core.agent.loop` (which ``Search.run`` also
+delegates to):
+
+* **Batching** -- each iteration proposes ``batch`` candidates: the
+  *primary* candidate follows exactly the single-candidate proposal
+  chain (so ``batch=1`` reproduces the legacy trajectory bit-for-bit,
+  and the primary chain is identical at any batch size), plus
+  ``batch - 1`` exploration candidates mutated from it on an
+  independent per-iteration RNG stream.  All candidates of an iteration
+  are evaluated concurrently through the content-hashed evaluator cache
+  (workloads whose evaluator is not thread-safe set
+  ``parallel_safe=False`` and evaluate sequentially).  Every candidate
+  lands in the result graph, so the best-found score is monotonically
+  no-worse as ``batch`` grows.
+* **Checkpointing** -- pass ``checkpoint=<path>`` to write a JSON
+  session after every iteration; ``resume(<path>)`` restores the RNG,
+  the proposal graph, and the dedup sets, and continues to produce the
+  identical trajectory an uninterrupted run would have produced.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional, Union
+
+from ..core.agent.loop import TuneSession, _norm, run_loop
+from ..core.agent.optimizers import SEARCHES
+from ..core.agent.trace_lite import TraceRecord
+from .workload import Workload
+
+STRATEGIES = tuple(SEARCHES)
+_CKPT_VERSION = 1
+# AnnealingSearch proposal state that must survive a checkpoint.
+_ANNEAL_ATTRS = ("_current", "_current_score", "_step", "t0", "cooling")
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+def _record_to_json(rec: TraceRecord) -> Dict:
+    return {"values": rec.values, "outputs": rec.outputs,
+            "mapper": rec.mapper, "score": rec.score,
+            "feedback": rec.feedback, "primary": rec.primary}
+
+
+def _session_to_json(s: TuneSession) -> Dict:
+    return {
+        "records": [_record_to_json(r) for r in s.full.records],
+        # inf (no valid candidate yet) as null keeps the file strict JSON
+        "trajectory": [None if t == float("inf") else t
+                       for t in s.trajectory],
+        "seen_texts": sorted(s.seen_texts),
+        "all_texts": sorted(s.all_texts),
+        "best_valid": s.best_valid,
+        "iteration": s.iteration,
+    }
+
+
+def _session_from_json(d: Dict) -> TuneSession:
+    s = TuneSession()
+    for r in d["records"]:
+        rec = TraceRecord(values=r["values"], outputs=r["outputs"],
+                          mapper=r["mapper"], score=r["score"],
+                          feedback=r["feedback"], primary=r["primary"])
+        if r["primary"]:
+            s.graph.add(rec)
+        s.full.add(rec)
+    s.trajectory = [float("inf") if t is None else t
+                    for t in d["trajectory"]]
+    s.seen_texts = set(d["seen_texts"])
+    s.all_texts = set(d["all_texts"])
+    s.best_valid = d["best_valid"]
+    s.iteration = d["iteration"]
+    return s
+
+
+def _search_state(search) -> Dict:
+    st = search.rng.getstate()
+    out = {"rng_state": [st[0], list(st[1]), st[2]]}
+    for a in _ANNEAL_ATTRS:
+        if hasattr(search, a):
+            v = getattr(search, a)
+            # annealing's incumbent score starts at inf; keep strict JSON
+            if isinstance(v, float) and v == float("inf"):
+                v = {"__inf__": True}
+            out[a] = v
+    return out
+
+
+def _restore_search_state(search, d: Dict) -> None:
+    st = d["rng_state"]
+    search.rng.setstate((st[0], tuple(st[1]), st[2]))
+    for a in _ANNEAL_ATTRS:
+        if a in d and hasattr(search, a):
+            v = d[a]
+            if isinstance(v, dict) and v.get("__inf__"):
+                v = float("inf")
+            setattr(search, a, v)
+
+
+@dataclass
+class Tuner:
+    """Configured tuning run over one workload.
+
+    ``workload`` may be a registry name or a :class:`Workload` instance.
+    """
+
+    workload: Union[str, Workload]
+    strategy: str = "trace"
+    iterations: int = 10
+    batch: int = 1
+    seed: int = 0
+    feedback_level: str = "full"
+    checkpoint: Optional[str] = None
+
+    def __post_init__(self):
+        if isinstance(self.workload, str):
+            from . import registry
+            self.workload = registry.get(self.workload)
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"choose from {STRATEGIES}")
+        if self.batch < 1:
+            raise ValueError("batch must be >= 1")
+
+    def _make_search(self):
+        wl = self.workload
+        return SEARCHES[self.strategy](
+            seed=self.seed, feedback_level=self.feedback_level,
+            llm=wl.llm(), random_fn=wl.random_decisions,
+            neighbor_fn=wl.neighbors)
+
+    def _save(self, search, session: TuneSession) -> None:
+        payload = {
+            "version": _CKPT_VERSION,
+            "workload": self.workload.name,
+            "strategy": self.strategy,
+            "iterations": self.iterations,
+            "batch": self.batch,
+            "seed": self.seed,
+            "feedback_level": self.feedback_level,
+            "search_state": _search_state(search),
+            "session": _session_to_json(session),
+        }
+        tmp = self.checkpoint + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, allow_nan=False)
+        os.replace(tmp, self.checkpoint)
+
+    def run(self, start: Optional[Dict] = None,
+            _session: Optional[TuneSession] = None, _search=None):
+        wl = self.workload
+        search = _search or self._make_search()
+        session = _session or TuneSession()
+        agent = wl.make_agent(_norm(start) if start else None)
+        if session.iteration:   # resumed: restore the agent's position
+            agent.set_decisions(session.graph.records[-1].values)
+        on_it = (lambda s: self._save(search, s)) if self.checkpoint else None
+        return run_loop(search, agent, wl.evaluator(), self.iterations,
+                        self.batch, parallel_safe=wl.parallel_safe,
+                        session=session, on_iteration=on_it)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, iterations: Optional[int] = None,
+                        workload: Optional[Workload] = None) -> "Tuner":
+        """Rebuild a Tuner from a session file.
+
+        A checkpoint stores the workload by registry *name*; pass the
+        ``workload`` instance explicitly to resume one that is not in
+        the registry (a custom spec or app).
+        """
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != _CKPT_VERSION:
+            raise ValueError(f"unsupported checkpoint version in {path}")
+        if workload is not None and workload.name != payload["workload"]:
+            raise ValueError(
+                f"checkpoint {path} was written for workload "
+                f"{payload['workload']!r}, not {workload.name!r}")
+        if workload is None:
+            from . import registry
+            try:
+                workload = registry.get(payload["workload"])
+            except KeyError:
+                raise ValueError(
+                    f"checkpoint {path} names workload "
+                    f"{payload['workload']!r}, which is not in the "
+                    "registry; pass the original Workload instance to "
+                    "Tuner.from_checkpoint(workload=...)") from None
+        t = cls(workload=workload, strategy=payload["strategy"],
+                iterations=(iterations if iterations is not None
+                            else payload["iterations"]),
+                batch=payload["batch"], seed=payload["seed"],
+                feedback_level=payload["feedback_level"], checkpoint=path)
+        t._payload = payload
+        return t
+
+    def resume(self):
+        """Continue a checkpointed session to ``iterations``."""
+        payload = getattr(self, "_payload", None)
+        if payload is None:
+            raise ValueError("resume() requires Tuner.from_checkpoint()")
+        search = self._make_search()
+        _restore_search_state(search, payload["search_state"])
+        session = _session_from_json(payload["session"])
+        return self.run(_session=session, _search=search)
+
+
+def tune(workload: Union[str, Workload], strategy: str = "trace",
+         iterations: int = 10, batch: int = 1, seed: int = 0,
+         feedback_level: str = "full", start: Optional[Dict] = None,
+         checkpoint: Optional[str] = None):
+    """Tune ``workload`` and return a ``SearchResult`` (the single entry
+    point the CLI, examples, benchmarks, and legacy shims go through)."""
+    return Tuner(workload, strategy=strategy, iterations=iterations,
+                 batch=batch, seed=seed, feedback_level=feedback_level,
+                 checkpoint=checkpoint).run(start=start)
+
+
+def resume(checkpoint: str, iterations: Optional[int] = None,
+           workload: Optional[Workload] = None):
+    """Resume a checkpointed session, reproducing the trajectory an
+    uninterrupted run would have produced.  ``workload`` is required
+    only when the session's workload is not in the registry."""
+    return Tuner.from_checkpoint(checkpoint, iterations=iterations,
+                                 workload=workload).resume()

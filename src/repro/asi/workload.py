@@ -1,0 +1,122 @@
+"""The Agent-System Interface ``Workload`` protocol.
+
+The paper's central claim is that *one* structured boundary between the
+LLM optimizer and the system -- the mapper DSL plus feedback -- works
+across heterogeneous parallel programs.  This module makes that boundary
+a first-class API: a :class:`Workload` is anything that can
+
+  * describe its decision space (``bundles`` / ``default_decisions`` /
+    ``random_decisions`` / ``neighbors``),
+  * render a decision assignment into DSL mapper source
+    (``render_mapper``), and
+  * score mapper source with system feedback (``evaluator``).
+
+Every substrate in the repro -- LM (arch x shape) cells, the task-graph
+scientific apps, the real-JAX app kernels, and the six distributed-matmul
+algorithms -- implements this protocol via an adapter (see the
+``adapters_*`` modules), and every optimizer reaches the system only
+through it.  New workloads implement :class:`AgentWorkload` (or the raw
+protocol) and register with :mod:`repro.asi.registry`.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, Optional, Protocol, runtime_checkable
+
+from ..core.agent.feedback import Feedback
+from ..core.agent.llm import HeuristicLLM, LLMClient
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """Structural interface every tunable workload exposes."""
+
+    name: str
+    substrate: str        # "lm" | "app" | "app-jax" | "matmul" | ...
+    description: str
+    parallel_safe: bool   # False: evaluator must not run concurrently
+
+    def bundles(self) -> Dict[str, Dict[str, list]]:
+        """Decision axes: bundle name -> {key: allowed values}."""
+        ...
+
+    def default_decisions(self) -> Dict[str, Dict]:
+        ...
+
+    def random_decisions(self, seed: int) -> Dict[str, Dict]:
+        ...
+
+    def neighbors(self, decisions: Dict, rng: random.Random,
+                  k: int = 1) -> Dict[str, Dict]:
+        ...
+
+    def render_mapper(self, decisions: Dict[str, Dict]) -> str:
+        ...
+
+    def evaluator(self) -> Callable[[str], Feedback]:
+        ...
+
+
+class AgentWorkload:
+    """Base adapter: a workload backed by a Trace ``Module`` agent.
+
+    Subclasses provide ``make_agent`` plus the decision-space functions;
+    rendering and the bundle table come from the agent, and the (cached)
+    evaluator from ``_make_evaluator``.
+    """
+
+    name: str = ""
+    substrate: str = ""
+    description: str = ""
+    parallel_safe: bool = True
+    expert_mapper: Optional[str] = None
+
+    def __init__(self):
+        self._evaluator = None
+
+    # -- decision space ------------------------------------------------------
+    def make_agent(self, decisions: Optional[Dict] = None):
+        raise NotImplementedError
+
+    def bundles(self) -> Dict[str, Dict[str, list]]:
+        return {b.name: {k: list(v) for k, v in b.options.items()}
+                for b in self.make_agent().bundles()}
+
+    def default_decisions(self) -> Dict[str, Dict]:
+        return self.make_agent().decisions()
+
+    def random_decisions(self, seed: int) -> Dict[str, Dict]:
+        raise NotImplementedError
+
+    def neighbors(self, decisions: Dict, rng: random.Random,
+                  k: int = 1) -> Dict[str, Dict]:
+        raise NotImplementedError
+
+    # -- rendering + evaluation ---------------------------------------------
+    def render_mapper(self, decisions: Dict[str, Dict]) -> str:
+        return self.make_agent(decisions).mapper_text()
+
+    def _make_evaluator(self) -> Callable[[str], Feedback]:
+        raise NotImplementedError
+
+    def evaluator(self) -> Callable[[str], Feedback]:
+        if self._evaluator is None:
+            self._evaluator = self._make_evaluator()
+        return self._evaluator
+
+    # -- optimizer plumbing --------------------------------------------------
+    def llm(self) -> LLMClient:
+        """Proposal backend consuming this workload's feedback phrasing."""
+        return HeuristicLLM()
+
+    def space_size(self) -> int:
+        n = 1
+        for axes in self.bundles().values():
+            for choices in axes.values():
+                n *= max(len(choices), 1)
+        return n
+
+    def __repr__(self):
+        return (f"<{type(self).__name__} {self.name!r} "
+                f"substrate={self.substrate} |Theta|~{self.space_size()}>")

@@ -1,0 +1,148 @@
+"""The unified optimization loop (paper Fig. 5b), generalized to
+``batch`` candidates per iteration.
+
+This is the engine under both front doors: ``Search.run`` (the legacy
+single-candidate API) calls it with ``batch=1``, and the ASI ``Tuner``
+(:mod:`repro.asi.tuner`) adds workload plumbing, concurrency policy,
+and JSON checkpointing on top of :class:`TuneSession`.
+
+Batch semantics: the *primary* candidate of each iteration follows
+exactly the single-candidate proposal chain -- primary dedup consults
+(and mutates) only primary-chain state -- so ``batch=1`` reproduces the
+legacy trajectory bit-for-bit and the primary chain is identical at any
+batch size.  The ``batch - 1`` exploration candidates are mutated from
+the primary on an independent per-iteration RNG stream, evaluated
+alongside it (concurrently when the evaluator allows), and recorded
+with ``primary=False``: they widen coverage, so the best-found score is
+monotonically non-worse as ``batch`` grows.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from .feedback import Feedback
+from .trace_lite import TraceGraph, TraceRecord
+
+
+def _norm(obj):
+    """JSON-normal form for decision dicts (tuples -> lists), so a resumed
+    session renders and compares decisions identically to a live one."""
+    return json.loads(json.dumps(obj))
+
+
+def _extra_rng(seed: int, iteration: int) -> random.Random:
+    return random.Random(0x9E3779B9 * (iteration + 1) + seed)
+
+
+@dataclass
+class TuneSession:
+    """Mutable loop state; serializable to/from JSON (see asi.tuner).
+
+    ``seen_texts`` holds only primary-chain mappers: the primary dedup
+    loop must consult (and mutate) exactly the state a ``batch=1`` run
+    would, or the chain stops being batch-invariant.  ``all_texts``
+    additionally holds exploration candidates and only gates extras.
+    """
+
+    graph: TraceGraph = field(default_factory=TraceGraph)   # primary chain
+    full: TraceGraph = field(default_factory=TraceGraph)    # all candidates
+    trajectory: List[float] = field(default_factory=list)
+    seen_texts: set = field(default_factory=set)
+    all_texts: set = field(default_factory=set)
+    best_valid: Optional[float] = None
+    iteration: int = 0
+
+
+def run_loop(search, agent, evaluate: Callable[[str], Feedback],
+             iterations: int = 10, batch: int = 1, *,
+             parallel_safe: bool = True,
+             session: Optional[TuneSession] = None,
+             on_iteration: Optional[Callable[[TuneSession], None]] = None):
+    """Run ``search`` over ``agent`` for ``iterations``, ``batch``
+    candidates per iteration; returns a ``SearchResult``."""
+    from .optimizers import SearchResult
+
+    s = session or TuneSession()
+    for it in range(s.iteration, iterations):
+        # -- primary candidate: the legacy proposal chain -------------------
+        if it > 0:
+            proposal = search.propose(agent, s.graph)
+            # avoid re-evaluating stale candidates: explore if the
+            # proposal renders a mapper we already tried
+            for _ in range(8):
+                proposal = _norm(proposal)
+                agent.set_decisions(proposal)
+                if agent.mapper_text() not in s.seen_texts:
+                    break
+                proposal = search.neighbor_fn(proposal, search.rng, k=1)
+            agent.set_decisions(_norm(proposal))
+        outputs = agent.generate_mapper()
+        mapper = agent.mapper_text()
+        primary_values = agent.decisions()
+        s.seen_texts.add(mapper)
+        s.all_texts.add(mapper)
+        candidates = [(primary_values, outputs, mapper)]
+
+        # -- exploration candidates (batch > 1) -----------------------------
+        # Extras dedup against all_texts only; they never enter
+        # seen_texts, so the primary chain above stays batch-invariant
+        # (a primary re-visit of an extra's mapper is a cache hit).
+        if batch > 1:
+            erng = _extra_rng(getattr(search, "seed", 0), it)
+            for _ in range(batch - 1):
+                extra = search.neighbor_fn(_norm(primary_values), erng, k=1)
+                for _ in range(8):
+                    extra = _norm(extra)
+                    agent.set_decisions(extra)
+                    text = agent.mapper_text()
+                    if text not in s.all_texts:
+                        break
+                    extra = search.random_fn(erng.randrange(1 << 30))
+                else:
+                    continue  # space exhausted around this point
+                candidates.append((agent.decisions(),
+                                   agent.generate_mapper(), text))
+                s.all_texts.add(text)
+            # leave the agent on the primary candidate for the next propose
+            agent.set_decisions(primary_values)
+
+        # -- evaluate the batch (concurrently when safe) --------------------
+        texts = [c[2] for c in candidates]
+        if len(texts) > 1 and parallel_safe:
+            with ThreadPoolExecutor(max_workers=min(len(texts), 8)) as pool:
+                fbs = list(pool.map(evaluate, texts))
+        else:
+            fbs = [evaluate(t) for t in texts]
+
+        # -- record: primary drives proposals, everything counts for best --
+        for idx, ((values, outs, text), fb) in enumerate(
+                zip(candidates, fbs)):
+            rec = TraceRecord(values=values, outputs=outs, mapper=text,
+                              score=fb.score,
+                              feedback=fb.render(search.feedback_level),
+                              primary=(idx == 0))
+            if idx == 0:
+                s.graph.add(rec)
+            s.full.add(rec)
+            if fb.score is not None and (s.best_valid is None
+                                         or fb.score < s.best_valid):
+                s.best_valid = fb.score
+        s.trajectory.append(s.best_valid if s.best_valid is not None
+                            else float("inf"))
+        s.iteration = it + 1
+        if on_iteration is not None:
+            on_iteration(s)
+
+    best = s.full.best()
+    return SearchResult(
+        graph=s.full,
+        best_mapper=best.mapper if best else "",
+        best_score=best.score if best else float("inf"),
+        best_decisions=best.values if best else {},
+        trajectory=s.trajectory,
+    )

@@ -27,7 +27,7 @@ from ..mapping import space
 from .agent import MapperAgent
 from .feedback import Feedback
 from .llm import HeuristicLLM, LLMClient
-from .trace_lite import TraceGraph, TraceRecord
+from .trace_lite import TraceGraph
 
 # bundle credit assignment: feedback category -> implicated bundles
 # (ordered: the FIRST matching category wins, mirroring how Trace
@@ -64,6 +64,7 @@ class Search:
                  llm: Optional[LLMClient] = None,
                  random_fn: Optional[Callable[[int], Dict]] = None,
                  neighbor_fn: Optional[Callable] = None):
+        self.seed = seed
         self.rng = random.Random(seed)
         self.feedback_level = feedback_level
         self.llm = llm or HeuristicLLM()
@@ -78,42 +79,10 @@ class Search:
     def run(self, agent: MapperAgent,
             evaluate: Callable[[str], Feedback],
             iterations: int = 10) -> SearchResult:
-        graph = TraceGraph()
-        trajectory: List[float] = []
-        best_valid = None
-        seen_texts = set()
-        for it in range(iterations):
-            if it > 0:
-                proposal = self.propose(agent, graph)
-                # avoid re-evaluating stale candidates: explore if the
-                # proposal renders a mapper we already tried
-                for _ in range(8):
-                    agent.set_decisions(proposal)
-                    if agent.mapper_text() not in seen_texts:
-                        break
-                    proposal = self.neighbor_fn(proposal, self.rng, k=1)
-                agent.set_decisions(proposal)
-            outputs = agent.generate_mapper()
-            mapper = agent.mapper_text()
-            seen_texts.add(mapper)
-            fb = evaluate(mapper)
-            rec = TraceRecord(values=agent.decisions(), outputs=outputs,
-                              mapper=mapper, score=fb.score,
-                              feedback=fb.render(self.feedback_level))
-            graph.add(rec)
-            if fb.score is not None and (best_valid is None
-                                         or fb.score < best_valid):
-                best_valid = fb.score
-            trajectory.append(best_valid if best_valid is not None
-                              else float("inf"))
-        best = graph.best()
-        return SearchResult(
-            graph=graph,
-            best_mapper=best.mapper if best else "",
-            best_score=best.score if best else float("inf"),
-            best_decisions=best.values if best else {},
-            trajectory=trajectory,
-        )
+        """Single-candidate search: the ``batch=1`` case of the unified
+        loop (see :func:`repro.core.agent.loop.run_loop`)."""
+        from .loop import run_loop
+        return run_loop(self, agent, evaluate, iterations, batch=1)
 
 
 class RandomSearch(Search):
@@ -129,13 +98,26 @@ class OPROSearch(Search):
 
     name = "opro"
 
+    @staticmethod
+    def _format_decisions(values: Dict) -> str:
+        parts = []
+        for bundle in sorted(values):
+            v = values[bundle]
+            if isinstance(v, dict):
+                inner = ",".join(f"{k}={v[k]}" for k in sorted(v))
+            else:
+                inner = str(v)
+            parts.append(f"{bundle}[{inner}]")
+        return " ".join(parts)
+
     def _prompt(self, graph: TraceGraph) -> str:
         lines = ["Optimize the mapper. History (decisions -> score):"]
         scored = sorted(
             [r for r in graph.records if r.score is not None],
             key=lambda r: r.score)[:5]
         for r in scored:
-            lines.append(f"  score={r.score:.4f}s")
+            lines.append(f"  {self._format_decisions(r.values)} -> "
+                         f"score={r.score:.4f}s")
         last = graph.last()
         if last is not None:
             lines.append("Latest feedback:\n" + last.feedback)

@@ -61,6 +61,7 @@ class TraceRecord:
     score: Optional[float] = None             # lower is better (seconds)
     feedback: str = ""
     error_node: Optional[str] = None
+    primary: bool = True                      # False: batch-exploration extra
 
 
 @dataclass

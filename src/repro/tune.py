@@ -1,0 +1,162 @@
+"""CLI front door for the Agent-System Interface.
+
+    python -m repro.tune --list
+    python -m repro.tune --list --substrate matmul
+    python -m repro.tune --workload circuit --strategy trace --iters 10
+    python -m repro.tune --workload matmul/summa --batch 4 --out traj.json
+    python -m repro.tune --workload circuit --checkpoint sess.json
+    python -m repro.tune --resume sess.json --iters 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _jsonable(x):
+    """Strict-JSON scalar: non-finite floats become null."""
+    if isinstance(x, float) and not math.isfinite(x):
+        return None
+    return x
+
+
+def _print_listing(substrate=None):
+    from .asi import registry
+    infos = [i for i in registry.populate().list()
+             if substrate is None or i.substrate == substrate]
+    by_sub = {}
+    for i in infos:
+        by_sub.setdefault(i.substrate, []).append(i)
+    print(f"{len(infos)} registered workloads "
+          f"({len(by_sub)} substrates)")
+    for sub in sorted(by_sub):
+        print(f"\n[{sub}]")
+        for i in by_sub[sub]:
+            print(f"  {i.name:40s} {i.description}")
+
+
+def _result_payload(res, args):
+    return {
+        "workload": args.workload,
+        "strategy": args.strategy,
+        "iterations": args.iters,
+        "batch": args.batch,
+        "seed": args.seed,
+        "best_score": _jsonable(res.best_score),
+        "best_decisions": res.best_decisions,
+        "best_mapper": res.best_mapper,
+        "trajectory": [_jsonable(t) for t in res.trajectory],
+        "evaluations": len(res.graph.records),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="Tune a registered workload through the unified "
+                    "Agent-System Interface.")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered workloads and exit")
+    ap.add_argument("--substrate", default=None,
+                    help="filter --list by substrate (lm, app, app-jax, "
+                         "matmul)")
+    from .asi.tuner import STRATEGIES
+
+    ap.add_argument("--workload", default=None,
+                    help="registry name, e.g. circuit or matmul/summa or "
+                         "lm/stablelm-1.6b/train_4k")
+    ap.add_argument("--strategy", default=None, choices=STRATEGIES,
+                    help="(default: trace)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="iteration target (default: 10, or the "
+                         "checkpoint's own target when resuming)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="candidates proposed+evaluated per iteration "
+                         "(default: 1)")
+    ap.add_argument("--seed", type=int, default=None, help="(default: 0)")
+    ap.add_argument("--feedback-level", default=None,
+                    choices=("system", "explain", "full"),
+                    help="(default: full)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="write a resumable JSON session here every "
+                         "iteration")
+    ap.add_argument("--resume", default=None, metavar="CHECKPOINT",
+                    help="resume a checkpointed session")
+    ap.add_argument("--out", default=None,
+                    help="write the result (trajectory, best mapper) as "
+                         "JSON here instead of stdout")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        _print_listing(args.substrate)
+        return 0
+
+    from .asi import Tuner, tune
+
+    try:
+        if args.resume:
+            # a session resumes with its own settings; conflicting flags
+            # would silently break the deterministic-resume guarantee
+            fixed = [f"--{n}" for n, v in
+                     [("strategy", args.strategy), ("batch", args.batch),
+                      ("seed", args.seed),
+                      ("feedback-level", args.feedback_level),
+                      ("checkpoint", args.checkpoint),
+                      ("workload", args.workload)] if v is not None]
+            if fixed:
+                ap.error(f"--resume takes these from the checkpoint; "
+                         f"drop {', '.join(fixed)}")
+            tuner = Tuner.from_checkpoint(args.resume,
+                                          iterations=args.iters)
+            args.workload = tuner.workload.name
+            args.strategy = tuner.strategy
+            args.batch = tuner.batch
+            args.seed = tuner.seed
+            args.iters = tuner.iterations
+            res = tuner.resume()
+        elif args.workload:
+            args.iters = 10 if args.iters is None else args.iters
+            args.strategy = args.strategy or "trace"
+            args.batch = 1 if args.batch is None else args.batch
+            args.seed = 0 if args.seed is None else args.seed
+            res = tune(args.workload, strategy=args.strategy,
+                       iterations=args.iters, batch=args.batch,
+                       seed=args.seed,
+                       feedback_level=args.feedback_level or "full",
+                       checkpoint=args.checkpoint)
+        else:
+            ap.error("one of --list, --workload, or --resume is required")
+            return 2
+    except (KeyError, ValueError) as e:
+        print(f"error: {e.args[0] if e.args else e}", file=sys.stderr)
+        return 2
+    except OSError as e:
+        print(f"error: cannot read checkpoint: {e}", file=sys.stderr)
+        return 2
+
+    payload = _result_payload(res, args)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+    else:
+        print(f"workload:  {payload['workload']}")
+        print(f"strategy:  {payload['strategy']} (batch={payload['batch']}, "
+              f"seed={payload['seed']})")
+        print(f"evaluated: {payload['evaluations']} candidates over "
+              f"{len(payload['trajectory'])} iterations")
+        best = payload["best_score"]
+        print(f"best:      "
+              f"{'no valid candidate' if best is None else f'{best:.6f}s'}")
+        print("trajectory (best-so-far):")
+        print("  " + " ".join("inf" if t is None else f"{t:.4g}"
+                              for t in payload["trajectory"]))
+        print("best mapper:\n" + payload["best_mapper"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

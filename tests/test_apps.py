@@ -54,6 +54,7 @@ print("stencil sharded ok", err)
 """
 
 
+@pytest.mark.slow
 def test_stencil_sharded_matches_reference(multidev):
     assert "ok" in multidev(STENCIL_MULTIDEV, n_devices=4)
 

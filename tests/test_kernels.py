@@ -10,6 +10,8 @@ from repro.kernels.block_matmul.kernel import block_matmul
 from repro.kernels.block_matmul.ref import reference_matmul
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import reference_attention
+
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (interpret-mode sweeps)
 from repro.kernels.rglru.kernel import rglru_scan_kernel
 from repro.kernels.rglru.ref import reference_scan
 from repro.kernels.ssd.kernel import ssd_kernel

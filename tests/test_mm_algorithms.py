@@ -31,6 +31,7 @@ for alg in ALGORITHMS:
 """
 
 
+@pytest.mark.slow
 def test_all_algorithms_numerically_correct(multidev):
     out = multidev(MULTIDEV_CODE, n_devices=8)
     assert out.count("ok") == 6

@@ -5,6 +5,8 @@ invariant (mappers never change numerics)."""
 
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (subprocess meshes)
+
 SYSTEM_CODE = """
 import jax, jax.numpy as jnp
 from repro.configs import get_config

@@ -10,6 +10,8 @@ import pytest
 from repro.configs import get_config
 from repro.core.mapping.presets import expert_mapper
 from repro.launch.mesh import make_host_mesh
+
+pytestmark = pytest.mark.slow  # JAX-compile-heavy (full training loops)
 from repro.models import get_model
 from repro.train.loop import TrainConfig, train
 from repro.train.optim import AdamWConfig
