@@ -4,7 +4,7 @@
     Table 3  strategy_codegen     strategy -> DSL success rate (+ noise)
     Fig. 6   scientific_apps      expert / random / searched mappers
     Fig. 7   matmul_algorithms    6 algorithms, index-mapping search
-    Fig. 8   feedback_ablation    System / +Explain / +Explain+Suggest
+    Fig. 8   feedback_ablation    Scalar / System / +Explain / +Explain+Suggest
     (ours)   kernel_microbench    Pallas kernel wall time (interpret)
     (ours)   agent_overhead       mapper generate+compile latency
 
@@ -204,7 +204,8 @@ def bench_feedback_ablation(seeds=(0, 1, 2, 3, 4), iterations=10):
 
     app = circuit.make_app()
     et_circ = expert_time(app, circuit.EXPERT_MAPPER)
-    for level, label in [("system", "System"), ("explain", "SystemExplain"),
+    for level, label in [("scalar", "Scalar"), ("system", "System"),
+                         ("explain", "SystemExplain"),
                          ("full", "SystemExplainSuggest")]:
         scores = [tune(TaskGraphWorkload(app), strategy="trace", seed=s,
                        iterations=iterations,
@@ -215,7 +216,7 @@ def bench_feedback_ablation(seeds=(0, 1, 2, 3, 4), iterations=10):
     for alg in ("cosma", "cannon"):
         spec = MMWorkload(alg)
         et = mm_eval_mapper(spec, mm_mapper_text(MM_EXPERT_MAPPERS[alg]))
-        for level, label in [("system", "System"),
+        for level, label in [("scalar", "Scalar"), ("system", "System"),
                              ("explain", "SystemExplain"),
                              ("full", "SystemExplainSuggest")]:
             scores = [tune(MatmulWorkload(spec), strategy="trace", seed=s,

@@ -55,11 +55,12 @@ def make_app_evaluator(app: TaskGraphApp) -> CallableEvaluator:
     def run(mapper_src: str) -> float:
         plan = compile_mapper(mapper_src, app_machine_factory)
         return evaluate_plan(app, plan)
-    return CallableEvaluator(run)
+    return CallableEvaluator(run, pack="app")
 
 
 class TaskGraphWorkload(AgentWorkload):
     substrate = "app"
+    rule_pack = "app"
 
     def __init__(self, app: TaskGraphApp, name: Optional[str] = None,
                  expert_mapper: Optional[str] = None, description: str = ""):
@@ -160,7 +161,8 @@ class JaxAppWorkload(TaskGraphWorkload):
         def run(mapper_src: str) -> float:
             plan = compile_mapper(mapper_src, app_machine_factory)
             return evaluate_plan(self.app, plan) * self.calibration()
-        return CallableEvaluator(run, metric_name="Measured-anchored time")
+        return CallableEvaluator(run, metric_name="Measured-anchored time",
+                                 pack=self.rule_pack)
 
 
 _APPS = {

@@ -19,6 +19,7 @@ from .workload import AgentWorkload
 
 class LMCellWorkload(AgentWorkload):
     substrate = "lm"
+    rule_pack = "lm"
     # JAX lowering/compilation is not safe to drive from several threads.
     parallel_safe = False
 

@@ -129,6 +129,7 @@ class MMAgent(AppMapperAgent):
 
 class MatmulWorkload(AgentWorkload):
     substrate = "matmul"
+    rule_pack = "matmul"
 
     def __init__(self, spec: MMWorkload, name: Optional[str] = None):
         super().__init__()
@@ -165,7 +166,8 @@ class MatmulWorkload(AgentWorkload):
         return out
 
     def _make_evaluator(self) -> Callable:
-        return CallableEvaluator(lambda src: mm_eval_mapper(self.spec, src))
+        return CallableEvaluator(lambda src: mm_eval_mapper(self.spec, src),
+                                 pack="matmul")
 
     def llm(self):
         fns_3d = ("linearize3d",)

@@ -79,7 +79,9 @@ _POPULATED = False
 def populate(registry: Optional[WorkloadRegistry] = None) -> WorkloadRegistry:
     """Idempotently register all built-in workloads."""
     global _POPULATED
-    reg = registry or REGISTRY
+    # not `registry or REGISTRY`: an empty WorkloadRegistry is falsy but
+    # still the registry the caller asked to populate
+    reg = REGISTRY if registry is None else registry
     if reg is REGISTRY and _POPULATED:
         return reg
     from .adapters_apps import register_apps

@@ -28,13 +28,17 @@ import os
 from dataclasses import dataclass
 from typing import Dict, Optional, Union
 
+from ..core.agent.autoguide import ExecutionReport
 from ..core.agent.loop import TuneSession, _norm, run_loop
 from ..core.agent.optimizers import SEARCHES
 from ..core.agent.trace_lite import TraceRecord
 from .workload import Workload
 
 STRATEGIES = tuple(SEARCHES)
-_CKPT_VERSION = 1
+# v2 adds the per-record structured ExecutionReport (AutoGuide v2);
+# v1 sessions (no reports) still load.
+_CKPT_VERSION = 2
+_CKPT_READABLE = (1, 2)
 # AnnealingSearch proposal state that must survive a checkpoint.
 _ANNEAL_ATTRS = ("_current", "_current_score", "_step", "t0", "cooling")
 
@@ -45,7 +49,8 @@ _ANNEAL_ATTRS = ("_current", "_current_score", "_step", "t0", "cooling")
 def _record_to_json(rec: TraceRecord) -> Dict:
     return {"values": rec.values, "outputs": rec.outputs,
             "mapper": rec.mapper, "score": rec.score,
-            "feedback": rec.feedback, "primary": rec.primary}
+            "feedback": rec.feedback, "primary": rec.primary,
+            "report": rec.report.to_dict() if rec.report else None}
 
 
 def _session_to_json(s: TuneSession) -> Dict:
@@ -66,7 +71,9 @@ def _session_from_json(d: Dict) -> TuneSession:
     for r in d["records"]:
         rec = TraceRecord(values=r["values"], outputs=r["outputs"],
                           mapper=r["mapper"], score=r["score"],
-                          feedback=r["feedback"], primary=r["primary"])
+                          feedback=r["feedback"], primary=r["primary"],
+                          report=(ExecutionReport.from_dict(r["report"])
+                                  if r.get("report") else None))
         if r["primary"]:
             s.graph.add(rec)
         s.full.add(rec)
@@ -125,6 +132,11 @@ class Tuner:
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {STRATEGIES}")
+        from ..core.agent.feedback import FEEDBACK_LEVELS
+        if self.feedback_level not in FEEDBACK_LEVELS:
+            raise ValueError(
+                f"unknown feedback level {self.feedback_level!r}; "
+                f"choose from {FEEDBACK_LEVELS}")
         if self.batch < 1:
             raise ValueError("batch must be >= 1")
 
@@ -176,7 +188,7 @@ class Tuner:
         """
         with open(path) as f:
             payload = json.load(f)
-        if payload.get("version") != _CKPT_VERSION:
+        if payload.get("version") not in _CKPT_READABLE:
             raise ValueError(f"unsupported checkpoint version in {path}")
         if workload is not None and workload.name != payload["workload"]:
             raise ValueError(

@@ -9,7 +9,11 @@ a first-class API: a :class:`Workload` is anything that can
     ``random_decisions`` / ``neighbors``),
   * render a decision assignment into DSL mapper source
     (``render_mapper``), and
-  * score mapper source with system feedback (``evaluator``).
+  * score mapper source with system feedback (``evaluator``): the
+    returned ``Feedback`` is the rendered view of a structured
+    :class:`~repro.core.agent.autoguide.ExecutionReport`, produced by
+    the diagnostic rule pack named by ``rule_pack`` (AutoGuide v2; see
+    docs/feedback.md).
 
 Every substrate in the repro -- LM (arch x shape) cells, the task-graph
 scientific apps, the real-JAX app kernels, and the six distributed-matmul
@@ -36,6 +40,7 @@ class Workload(Protocol):
     substrate: str        # "lm" | "app" | "app-jax" | "matmul" | ...
     description: str
     parallel_safe: bool   # False: evaluator must not run concurrently
+    rule_pack: str        # AutoGuide diagnostic pack (see autoguide.rules)
 
     def bundles(self) -> Dict[str, Dict[str, list]]:
         """Decision axes: bundle name -> {key: allowed values}."""
@@ -70,6 +75,7 @@ class AgentWorkload:
     substrate: str = ""
     description: str = ""
     parallel_safe: bool = True
+    rule_pack: str = "base"
     expert_mapper: Optional[str] = None
 
     def __init__(self):

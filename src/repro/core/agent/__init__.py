@@ -1,12 +1,15 @@
 from .agent import MapperAgent
-from .feedback import Feedback, enhance, performance_feedback, error_feedback
+from .autoguide import ErrorCategory, ExecutionReport
+from .feedback import (FEEDBACK_LEVELS, Feedback, enhance, error_feedback,
+                       performance_feedback)
 from .llm import HeuristicLLM, ScriptedLLM, LLMClient
 from .optimizers import (AnnealingSearch, OPROSearch, RandomSearch,
                          SEARCHES, Search, SearchResult, TraceSearch)
 from .trace_lite import Bundle, Module, TraceGraph, TraceRecord
 
 __all__ = [
-    "MapperAgent", "Feedback", "enhance", "performance_feedback",
+    "MapperAgent", "ErrorCategory", "ExecutionReport", "FEEDBACK_LEVELS",
+    "Feedback", "enhance", "performance_feedback",
     "error_feedback", "HeuristicLLM", "ScriptedLLM", "LLMClient",
     "RandomSearch", "OPROSearch", "TraceSearch", "AnnealingSearch",
     "SEARCHES", "Search", "SearchResult", "Bundle", "Module", "TraceGraph",

@@ -1,0 +1,34 @@
+"""AutoGuide v2 -- the layered diagnostics engine (docs/feedback.md).
+
+Layer 1 (:mod:`.report`): evaluators emit a structured
+:class:`ExecutionReport` -- error taxonomy (:class:`ErrorCategory`),
+cost-model term breakdown (:class:`CostBreakdown`), per-device HBM
+footprint (:class:`MemoryFootprint`) -- instead of a bare string+score.
+
+Layer 2 (:mod:`.rules`, :mod:`.engine`): per-substrate rule packs match
+on the report's fields and render the legacy ``Feedback`` view via
+:func:`diagnose`; :func:`history_guidance` adds trajectory-aware nudges
+and :func:`implicated_bundles` gives TraceSearch structured credit
+assignment.
+
+Layer 3 lives in the callers: evaluators build reports, the Tuner
+checkpoints them, the loop threads them to the optimizers, and
+``python -m repro.tune --feedback-level {scalar,system,explain,full}``
+ablates how much of a report the optimizer sees (paper Fig. 8).
+"""
+
+from .engine import (MAX_SUGGESTIONS, diagnose, history_guidance,
+                     implicated_bundles)
+from .report import (CostBreakdown, ErrorCategory, ExecutionReport,
+                     MemoryFootprint, classify_error, classify_message,
+                     report_from_error, report_from_metric,
+                     report_from_roofline)
+from .rules import DSL_VOCAB, RULE_PACKS, Rule, get_pack
+
+__all__ = [
+    "CostBreakdown", "DSL_VOCAB", "ErrorCategory", "ExecutionReport",
+    "MAX_SUGGESTIONS", "MemoryFootprint", "RULE_PACKS", "Rule",
+    "classify_error", "classify_message", "diagnose", "get_pack",
+    "history_guidance", "implicated_bundles", "report_from_error",
+    "report_from_metric", "report_from_roofline",
+]

@@ -1,0 +1,130 @@
+"""The AutoGuide v2 engine: structured report -> actionable feedback.
+
+``diagnose`` runs a substrate's rule pack over an
+:class:`~.report.ExecutionReport` and renders the result as the legacy
+:class:`~repro.core.agent.feedback.Feedback` view (system / explain /
+suggest channels), keeping every downstream consumer -- optimizers,
+HeuristicLLM keyword rules, checkpoints -- source-compatible while the
+report itself rides along on ``Feedback.report``.
+
+``history_guidance`` is the trajectory-aware layer: given the primary
+proposal chain it detects decision bundles that are frozen across the
+current top-k mappers and nudges the optimizer to vary an unexplored
+bundle instead of re-proposing the dominant pattern.  ``implicated_bundles``
+is structured credit assignment for TraceSearch: the report's taxonomy
+category / bottleneck term names the bundles to mutate, replacing the
+regex table for records that carry a report.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .report import ErrorCategory, ExecutionReport
+from .rules import Rule, get_pack
+
+MAX_SUGGESTIONS = 2   # same cap the flat ENHANCE_RULES matcher applied
+
+
+def diagnose(report: ExecutionReport, pack: Optional[str] = None,
+             max_suggestions: int = MAX_SUGGESTIONS):
+    """Match ``pack``'s rules against ``report``; return a Feedback view
+    (with ``report`` attached) carrying the fired explain/suggest text."""
+    from ..feedback import Feedback
+
+    rules = get_pack(pack or report.substrate or "base")
+    explains: List[str] = []
+    suggests: List[str] = []
+    probe = str(report.details.get("probe", ""))
+    if probe:
+        explains.append(probe)
+    elif report.cost is not None and report.cost.bottleneck:
+        explains.append(f"The {report.cost.bottleneck} term dominates the "
+                        "step time.")
+    for rule in rules:
+        if not rule.matches(report):
+            continue
+        if rule.explain:
+            explains.append(rule.explain)
+        if rule.suggest:
+            suggests.append(rule.suggest)
+        if len(suggests) >= max_suggestions:
+            break
+    # de-dup while preserving order (the bottleneck sentence can also be
+    # a rule's explain)
+    explains = list(dict.fromkeys(e for e in explains if e))
+    return Feedback(system=report.message, explain=" ".join(explains),
+                    suggest=" ".join(suggests), score=report.score,
+                    report=report)
+
+
+# -- Layer 2b: trajectory-aware guidance --------------------------------------
+def history_guidance(records: Sequence, k: int = 3) -> str:
+    """One-line nudge derived from the primary proposal chain.
+
+    When the top-``k`` scored mappers all share a bundle's rendering, the
+    optimizer is circling a local pattern; name the shared statement and
+    point at a different frozen bundle to vary.  Deterministic (pure
+    function of the records), so checkpoint resume reproduces it.
+    """
+    scored = sorted((r for r in records if r.score is not None),
+                    key=lambda r: r.score)[:k]
+    if len(scored) < k:
+        return ""
+    base = scored[0].values
+    frozen = [b for b in sorted(base)
+              if all(r.values.get(b) == base[b] for r in scored[1:])]
+    if len(frozen) < 2:
+        return ""   # nothing is both dominant and unexplored
+    cited = None
+    for b in frozen:
+        out0 = (scored[0].outputs or {}).get(b, "")
+        first_line = out0.splitlines()[0].strip() if out0 else ""
+        if first_line and all((r.outputs or {}).get(b, "") == out0
+                              for r in scored[1:]):
+            cited = (b, first_line)
+            break
+    if cited is None:
+        return ""
+    target = next((b for b in frozen if b != cited[0]), None)
+    if target is None:
+        return ""
+    return (f"History: `{cited[1]}` already dominates your top-{k} "
+            f"mappers; keep it and vary {target} next.")
+
+
+# -- Layer 2c: structured credit assignment (TraceSearch) ---------------------
+_BOTTLENECK_BUNDLES: Dict[str, Tuple[str, ...]] = {
+    "collective": ("task_decision", "region_decision",
+                   "index_task_map_decision"),
+    "memory": ("layout_decision", "region_decision",
+               "instance_limit_decision"),
+    "compute": ("region_decision", "instance_limit_decision"),
+}
+
+
+def implicated_bundles(report: ExecutionReport) -> Tuple[str, ...]:
+    """Which decision bundles the report implicates (mirrors the legacy
+    regex `_CREDIT` table, but driven by the taxonomy + cost fields)."""
+    text = report.text().lower()
+    if any(s in text for s in ("index out of bound", "tuple index",
+                               "function undefined")):
+        return ("index_task_map_decision",)
+    if report.category is ErrorCategory.NUMERIC:
+        return ("index_task_map_decision",)
+    if report.category is ErrorCategory.RESOURCE or (
+            report.memory is not None and report.memory.over_limit):
+        return ("region_decision", "instance_limit_decision",
+                "layout_decision")
+    if report.category is ErrorCategory.COMPILE:
+        return ("task_decision", "region_decision", "layout_decision")
+    if report.cost is not None and report.cost.bottleneck:
+        return _BOTTLENECK_BUNDLES.get(report.cost.bottleneck, ())
+    for term, bundles in _BOTTLENECK_BUNDLES.items():
+        # reports without a cost layer (legacy enhance(), synthetic
+        # evaluators) still name the dominant term in prose
+        if f"{term} term dominates" in text:
+            return bundles
+    if report.score is not None:
+        return ("task_decision", "region_decision")
+    return ()

@@ -1,0 +1,219 @@
+"""Layer 1 of AutoGuide v2: the structured ``ExecutionReport``.
+
+Evaluators no longer summarize a run as one prose string -- they emit an
+:class:`ExecutionReport` carrying
+
+* an **error taxonomy** (:class:`ErrorCategory`): ``ok`` / ``compile`` /
+  ``execution`` / ``resource`` / ``numeric``,
+* the **cost-model term breakdown** (:class:`CostBreakdown`): compute vs.
+  memory vs. collective seconds plus the dominant term,
+* the **per-device HBM footprint** (:class:`MemoryFootprint`),
+* the raw system-feedback ``message`` (what the paper's Table 2 calls
+  System feedback) and the scalar ``score``.
+
+Rule packs (:mod:`.rules`) match on these *fields* instead of regexes
+over rendered prose, and Tuner checkpoints persist reports via
+:meth:`ExecutionReport.to_dict` / :meth:`ExecutionReport.from_dict`.
+The legacy :class:`~repro.core.agent.feedback.Feedback` is kept as a
+rendered *view* of a report (see :func:`..autoguide.engine.diagnose`).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from enum import Enum
+from typing import Dict, Optional
+
+
+class ErrorCategory(str, Enum):
+    """AutoGuide's error taxonomy (docs/feedback.md has the full table).
+
+    ``OK``        -- the mapper ran; a performance metric is available.
+    ``COMPILE``   -- the mapper failed to lex/parse/compile in the DSL.
+    ``EXECUTION`` -- the mapper compiled but the system rejected it
+                     (bad index map, sharding mismatch, lowering failure).
+    ``RESOURCE``  -- the mapped program exceeds a machine resource
+                     (per-device HBM, instance limits).
+    ``NUMERIC``   -- the mapping function itself misbehaved numerically
+                     (division by zero, NaN/Inf, overflow).
+    """
+
+    OK = "ok"
+    COMPILE = "compile"
+    EXECUTION = "execution"
+    RESOURCE = "resource"
+    NUMERIC = "numeric"
+
+
+# \b-delimited where a marker could hide inside an ordinary word
+# ("pennant" contains "nan", "bloom" contains "oom").
+_NUMERIC_RE = re.compile(
+    r"division by zero|\bnan\b|\binf\b|overflow|non-finite|not finite")
+_RESOURCE_RE = re.compile(
+    r"out of memory|exceeds hbm|\boom\b|memory capacity|resource exhausted")
+_COMPILE_RE = re.compile(
+    r"compile error|syntax error|parse error|unknown processor|"
+    r"unknown memory|unknown layout|not found|undefined")
+
+
+def classify_message(message: str) -> ErrorCategory:
+    """Best-effort taxonomy for a raw feedback/error string (the entry
+    point for errors that arrive as text rather than typed exceptions)."""
+    t = message.lower()
+    if _NUMERIC_RE.search(t):
+        return ErrorCategory.NUMERIC
+    if _RESOURCE_RE.search(t):
+        return ErrorCategory.RESOURCE
+    if _COMPILE_RE.search(t):
+        return ErrorCategory.COMPILE
+    if "error" in t:
+        return ErrorCategory.EXECUTION
+    return ErrorCategory.OK
+
+
+def classify_error(err: Exception) -> ErrorCategory:
+    """Taxonomy for a typed exception: DSL error kinds first, then the
+    message markers (an ExecutionError whose text says OOM is RESOURCE)."""
+    from ...dsl.errors import DSLError, ExecutionError
+    msg_cat = classify_message(str(err))
+    if isinstance(err, (MemoryError,)):
+        return ErrorCategory.RESOURCE
+    if isinstance(err, (ZeroDivisionError, FloatingPointError,
+                        OverflowError)):
+        return ErrorCategory.NUMERIC
+    if isinstance(err, ExecutionError):
+        if msg_cat in (ErrorCategory.RESOURCE, ErrorCategory.NUMERIC):
+            return msg_cat
+        return ErrorCategory.EXECUTION
+    if isinstance(err, DSLError):   # Lex/Parse/Compile
+        return ErrorCategory.COMPILE
+    if msg_cat is ErrorCategory.OK:
+        return ErrorCategory.EXECUTION
+    return msg_cat
+
+
+@dataclass
+class CostBreakdown:
+    """Per-term roofline decomposition of one mapped step (seconds)."""
+
+    step_time_s: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str = ""                      # "compute"|"memory"|"collective"
+    useful_flops_ratio: Optional[float] = None
+    roofline_fraction: Optional[float] = None
+
+
+@dataclass
+class MemoryFootprint:
+    """Per-device HBM footprint of the mapped program."""
+
+    peak_bytes_per_device: float
+    limit_bytes_per_device: float
+
+    @property
+    def utilization(self) -> float:
+        if self.limit_bytes_per_device <= 0:
+            return 0.0
+        return self.peak_bytes_per_device / self.limit_bytes_per_device
+
+    @property
+    def over_limit(self) -> bool:
+        return self.peak_bytes_per_device > self.limit_bytes_per_device
+
+
+@dataclass
+class ExecutionReport:
+    """Structured result of evaluating one mapper (docs/feedback.md)."""
+
+    category: ErrorCategory
+    message: str                              # raw System-feedback line
+    substrate: str = ""                       # "lm"|"app"|"matmul"|...
+    score: Optional[float] = None             # seconds; None on error
+    cost: Optional[CostBreakdown] = None
+    memory: Optional[MemoryFootprint] = None
+    details: Dict[str, object] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.category is ErrorCategory.OK
+
+    def text(self) -> str:
+        """Message plus any free-text probe context (legacy `enhance`
+        callers pass pre-derived explanations via details['probe'])."""
+        probe = str(self.details.get("probe", ""))
+        return self.message + ("\n" + probe if probe else "")
+
+    # -- strict-JSON round trip (Tuner checkpoints) ---------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "category": self.category.value,
+            "message": self.message,
+            "substrate": self.substrate,
+            "score": self.score,
+            "cost": asdict(self.cost) if self.cost else None,
+            "memory": asdict(self.memory) if self.memory else None,
+            "details": dict(self.details),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExecutionReport":
+        return cls(
+            category=ErrorCategory(d["category"]),
+            message=d["message"],
+            substrate=d.get("substrate", ""),
+            score=d.get("score"),
+            cost=CostBreakdown(**d["cost"]) if d.get("cost") else None,
+            memory=(MemoryFootprint(**d["memory"])
+                    if d.get("memory") else None),
+            details=dict(d.get("details") or {}),
+        )
+
+
+# -- constructors used by the evaluators --------------------------------------
+def report_from_roofline(r, hbm_limit: Optional[float] = None,
+                         substrate: str = "lm") -> ExecutionReport:
+    """Successful LM dry-run -> ExecutionReport (cost + HBM layers)."""
+    t = r.step_time_s
+    message = (
+        f"Performance Metric: step time {t*1e3:.1f} ms "
+        f"(compute {r.compute_s*1e3:.1f} ms, memory "
+        f"{r.memory_s*1e3:.1f} ms, collective "
+        f"{r.collective_s*1e3:.1f} ms). "
+        f"useful_flops_ratio={r.useful_flops_ratio:.2f}, "
+        f"roofline_fraction={r.roofline_fraction:.3f}."
+    )
+    cost = CostBreakdown(
+        step_time_s=t, compute_s=r.compute_s, memory_s=r.memory_s,
+        collective_s=r.collective_s, bottleneck=r.bottleneck,
+        useful_flops_ratio=r.useful_flops_ratio,
+        roofline_fraction=r.roofline_fraction)
+    memory = None
+    if r.peak_memory_bytes is not None and hbm_limit:
+        memory = MemoryFootprint(peak_bytes_per_device=r.peak_memory_bytes,
+                                 limit_bytes_per_device=hbm_limit)
+    return ExecutionReport(
+        category=ErrorCategory.OK, message=message, substrate=substrate,
+        score=t, cost=cost, memory=memory,
+        details={"n_devices": r.n_devices,
+                 "collective_counts": dict(r.collective_counts)})
+
+
+def report_from_error(err: Exception, substrate: str = "") -> ExecutionReport:
+    """Typed exception -> ExecutionReport (taxonomy + paper-style line)."""
+    from ...dsl.errors import DSLError
+    message = (err.feedback() if isinstance(err, DSLError)
+               else f"Execution Error: {err}")
+    return ExecutionReport(category=classify_error(err), message=message,
+                           substrate=substrate)
+
+
+def report_from_metric(seconds: float, metric_name: str = "Execution time",
+                       substrate: str = "") -> ExecutionReport:
+    """Scalar wall/model time -> ExecutionReport (no term breakdown)."""
+    return ExecutionReport(
+        category=ErrorCategory.OK,
+        message=f"Performance Metric: {metric_name} is {seconds:.4f}s.",
+        substrate=substrate, score=seconds)

@@ -1,0 +1,341 @@
+"""Layer 2 of AutoGuide v2: per-substrate diagnostic rule packs.
+
+A :class:`Rule` matches on the *structured* :class:`~.report.ExecutionReport`
+(taxonomy category, cost-term bottleneck, HBM footprint), falling back to
+substring probes of the raw message only where the message is the sole
+signal (compiler diagnostics).  Each rule carries
+
+* ``explain`` / ``suggest`` -- the enhanced-feedback channels (paper
+  Fig. 8: System / +Explain / +Explain+Suggest),
+* ``example`` -- a synthetic report the rule is guaranteed to fire on
+  (every pack entry is unit-tested against its own example, and every
+  suggestion must name a real DSL token from :data:`DSL_VOCAB`),
+* ``legacy_patterns`` -- the regexes of the retired flat ``ENHANCE_RULES``
+  list this rule subsumes, so the v1 -> v2 migration is auditable: a
+  coverage test asserts no legacy rule was silently dropped.
+
+Packs: ``base`` (errors common to every substrate), ``lm`` (roofline
+bottleneck terms + HBM pressure on the production mesh), ``app``
+(task-graph placement), ``matmul`` (index-mapping search).  ``get_pack``
+composes substrate packs on top of ``base``; the ``all`` pack preserves
+the legacy single-list matching order for ``enhance()`` compatibility.
+See docs/feedback.md for the how-to-write-a-rule-pack guide.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from .report import (CostBreakdown, ErrorCategory, ExecutionReport,
+                     MemoryFootprint)
+
+# Tokens a suggestion may cite: statement keywords and the processor /
+# memory / layout vocabulary of the DSL (mirrors core.dsl.parser), plus
+# the index-mapping function family of apps.agent.
+DSL_VOCAB = frozenset({
+    # statements
+    "Task", "Region", "Layout", "IndexTaskMap", "SingleTaskMap",
+    "InstanceLimit", "CollectMemory", "GarbageCollect", "Machine", "def",
+    "return",
+    # processor kinds
+    "CPU", "GPU", "OMP", "TPU", "DP", "TP", "EP", "SP", "PP", "INLINE",
+    # memory kinds
+    "SYSMEM", "FBMEM", "ZCMEM", "RDMA", "REMAT", "HOST", "VMEM",
+    # layout constraints
+    "SOA", "AOS", "C_order", "F_order", "Align", "BF16", "F32", "Compact",
+    # index-mapping function family (apps/matmul substrates)
+    "block1d", "cyclic1d", "block2d", "cyclic2d", "linearize",
+    "linearize3d", "blockcyclic",
+})
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One diagnostic: structured predicate -> explain/suggest channels."""
+
+    name: str
+    category: Optional[ErrorCategory]           # None = any category
+    when: Callable[[ExecutionReport], bool]
+    explain: str
+    suggest: str
+    example: Callable[[], ExecutionReport]
+    legacy_patterns: Tuple[str, ...] = ()
+
+    def matches(self, report: ExecutionReport) -> bool:
+        if self.category is not None and report.category != self.category:
+            return False
+        return bool(self.when(report))
+
+
+# -- predicate helpers --------------------------------------------------------
+def _msg(*needles: str) -> Callable[[ExecutionReport], bool]:
+    lows = tuple(n.lower() for n in needles)
+    return lambda r: any(n in r.text().lower() for n in lows)
+
+
+def _bottleneck(term: str) -> Callable[[ExecutionReport], bool]:
+    probe = f"{term} term dominates"
+    return lambda r: ((r.cost is not None and r.cost.bottleneck == term)
+                      or probe in r.text().lower())
+
+
+def _always(_r: ExecutionReport) -> bool:
+    return True
+
+
+def _scored(r: ExecutionReport) -> bool:
+    return r.score is not None
+
+
+# -- synthetic example reports (one per rule; used by the pack tests) ---------
+def _ex_error(category: ErrorCategory, message: str,
+              substrate: str = "") -> Callable[[], ExecutionReport]:
+    return lambda: ExecutionReport(category=category, message=message,
+                                   substrate=substrate)
+
+
+def _ex_cost(bottleneck: str, ratio: float = 1.0) -> Callable[
+        [], ExecutionReport]:
+    def make():
+        return ExecutionReport(
+            category=ErrorCategory.OK,
+            message="Performance Metric: step time 20.0 ms (compute 5.0 ms, "
+                    "memory 1.0 ms, collective 14.0 ms).",
+            substrate="lm", score=0.02,
+            cost=CostBreakdown(step_time_s=0.02, compute_s=0.005,
+                               memory_s=0.001, collective_s=0.014,
+                               bottleneck=bottleneck,
+                               useful_flops_ratio=ratio,
+                               roofline_fraction=0.25))
+    return make
+
+
+def _ex_hbm(peak_gib: float, limit_gib: float = 16.0,
+            category: ErrorCategory = ErrorCategory.OK) -> Callable[
+        [], ExecutionReport]:
+    def make():
+        msg = (f"Execution Error: out of memory -- peak HBM {peak_gib:.1f} "
+               f"GiB exceeds HBM capacity {limit_gib:.0f} GiB per chip."
+               if peak_gib > limit_gib else
+               f"Performance Metric: step time 20.0 ms; peak HBM "
+               f"{peak_gib:.1f} GiB of {limit_gib:.0f} GiB per chip.")
+        return ExecutionReport(
+            category=category, message=msg, substrate="lm",
+            score=None if peak_gib > limit_gib else 0.02,
+            memory=MemoryFootprint(peak_bytes_per_device=peak_gib * 2**30,
+                                   limit_bytes_per_device=limit_gib * 2**30))
+    return make
+
+
+def _ex_metric(metric: str, substrate: str) -> Callable[[], ExecutionReport]:
+    return lambda: ExecutionReport(
+        category=ErrorCategory.OK,
+        message=f"Performance Metric: {metric} is 0.0042s.",
+        substrate=substrate, score=0.0042)
+
+
+# -- the packs ----------------------------------------------------------------
+# Base: DSL / runtime errors every substrate can hit.
+BASE_RULES: Tuple[Rule, ...] = (
+    Rule("compile/brace-form-colon", ErrorCategory.COMPILE,
+         _msg("unexpected ':'"),
+         "",
+         "There should be no colon in brace-style function definitions; use "
+         "{ ... } or end the colon-form body with a return statement.",
+         _ex_error(ErrorCategory.COMPILE,
+                   "Compile Error: Syntax error, unexpected ':' at line 2"),
+         (r"Syntax error, unexpected ':'",)),
+    Rule("compile/syntax", ErrorCategory.COMPILE,
+         _msg("syntax error"),
+         "The mapper is not a valid DSL program.",
+         "Emit only Task/Region/Layout/IndexTaskMap statements terminated by "
+         "';' and def functions with braces.",
+         _ex_error(ErrorCategory.COMPILE,
+                   "Compile Error: Syntax error, unexpected 'foo' at line 1"),
+         (r"Syntax error",)),
+    Rule("compile/undefined-index-fn", ErrorCategory.COMPILE,
+         _msg("IndexTaskMap's function undefined"),
+         "",
+         "Define the IndexTaskMap function first before using it.",
+         _ex_error(ErrorCategory.COMPILE,
+                   "Compile Error: IndexTaskMap's function undefined: fn3"),
+         (r"IndexTaskMap's function undefined",)),
+    Rule("compile/name-not-found", ErrorCategory.COMPILE,
+         _msg("not found"),
+         "",
+         "Include mtpu = Machine(TPU); in the generated code before using "
+         "it.",
+         _ex_error(ErrorCategory.COMPILE, "Compile Error: mtpu not found"),
+         (r"not found",)),
+    Rule("compile/unknown-identifier", ErrorCategory.COMPILE,
+         _msg("unknown processor", "unknown memory", "unknown layout"),
+         "A statement uses an identifier outside the DSL vocabulary.",
+         "Use processors {TP, DP, SP, INLINE}, memories {FBMEM, ZCMEM, "
+         "SYSMEM, REMAT}, layouts {SOA, AOS, C_order, F_order, Align==<n>}.",
+         _ex_error(ErrorCategory.COMPILE,
+                   "Compile Error: unknown processor kind 'QPU' in Task "
+                   "statement (line 1)"),
+         (r"unknown processor|unknown memory|unknown layout",)),
+    Rule("execution/index-out-of-bound", None,
+         _msg("index out of bound"),
+         "IndexTaskMap statements cause error.",
+         "In the def body, reduce each returned Machine index with the "
+         "modulus: end the first index with % m.size[0] and the second "
+         "with % m.size[1].",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: machine index out of bound: (9, 0)"),
+         (r"index out of bound",)),
+    Rule("execution/arity-mismatch", None,
+         _msg("tuple arity mismatch", "expects", "tuple index"),
+         "IndexTaskMap function arity does not match the iteration space.",
+         "Take (Task task) or (Tuple ipoint, Tuple ispace) and index the "
+         "machine with the right rank.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: fn expects 2 args, got 1"),
+         (r"tuple arity mismatch|expects \d+ args",)),
+    Rule("resource/oom", ErrorCategory.RESOURCE,
+         lambda r: (r.memory is not None and r.memory.over_limit)
+         or _msg("out of memory", "exceeds hbm")(r),
+         "The mapped step does not fit per-device HBM.",
+         "Move activations to REMAT (Region step activations TP REMAT;), "
+         "raise InstanceLimit step <n>; to split the batch into "
+         "microbatches, keep weights in FBMEM (sharded) rather than ZCMEM "
+         "(replicated), or Task attention SP; to shard replicated "
+         "activations over the model axis.",
+         _ex_hbm(40.0, 16.0, ErrorCategory.RESOURCE),
+         (r"out of memory|exceeds HBM",)),
+    Rule("numeric/mapping-function", ErrorCategory.NUMERIC,
+         _always,
+         "The index-mapping function is numerically invalid on some point "
+         "of the iteration space.",
+         "Guard divisors and moduli in the def body (divide by m.size "
+         "components, never by expressions that can reach 0) and return "
+         "machine indices reduced with %.",
+         _ex_error(ErrorCategory.NUMERIC,
+                   "Execution Error: division by zero in mapping function"),
+         ()),
+)
+
+# LM: roofline-term and HBM diagnostics of the production dry-run mesh.
+LM_RULES: Tuple[Rule, ...] = (
+    Rule("lm/collective-bound", ErrorCategory.OK,
+         _bottleneck("collective"),
+         "Inter-chip communication is the bottleneck for this mapping.",
+         "Reduce cross-chip traffic: Task attention SP; (sequence "
+         "parallelism turns TP all-reduces into reduce-scatters), or place "
+         "small stages INLINE, or use ZCMEM weights to trade memory for "
+         "gathers, or pick a blocked IndexTaskMap so neighbouring tiles "
+         "land on neighbouring chips.",
+         _ex_cost("collective"),
+         (r"collective term dominates",)),
+    Rule("lm/memory-bound", ErrorCategory.OK,
+         _bottleneck("memory"),
+         "HBM traffic is the bottleneck for this mapping.",
+         "Layout attention scores * C_order; (chunked online-softmax "
+         "attention keeps scores out of HBM), Region step activations TP "
+         "REMAT; to trade FLOPs for traffic, or F_order KV cache for "
+         "seq-major locality.",
+         _ex_cost("memory"),
+         (r"memory term dominates",)),
+    Rule("lm/compute-bound", ErrorCategory.OK,
+         _bottleneck("compute"),
+         "The mapping is close to the compute roofline.",
+         "Remove recompute waste: Region step activations TP FBMEM; if "
+         "memory allows (useful_flops_ratio < 1 indicates remat overhead), "
+         "and lower InstanceLimit to cut per-microbatch overheads.",
+         _ex_cost("compute"),
+         (r"compute term dominates",)),
+    Rule("lm/remat-overhead", ErrorCategory.OK,
+         lambda r: (r.cost is not None and r.cost.bottleneck == "compute"
+                    and r.cost.useful_flops_ratio is not None
+                    and r.cost.useful_flops_ratio < 0.9),
+         "A large share of FLOPs is recomputation, not model math.",
+         "Move activations out of REMAT (Region step activations TP "
+         "FBMEM;) -- the compute roofline is paying for recompute.",
+         _ex_cost("compute", ratio=0.6),
+         ()),
+    Rule("lm/hbm-pressure", ErrorCategory.OK,
+         lambda r: (r.memory is not None and not r.memory.over_limit
+                    and r.memory.utilization > 0.9),
+         "The mapping fits HBM with less than 10% headroom.",
+         "Pre-empt an OOM on larger shapes: Region step activations TP "
+         "REMAT; or raise InstanceLimit step 2; before growing the batch.",
+         _ex_hbm(15.2, 16.0),
+         ()),
+)
+
+# App: task-graph placement on the nodes x GPUs cluster.
+APP_RULES: Tuple[Rule, ...] = (
+    Rule("app/execution-time", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("execution time", "throughput",
+                                       "measured-anchored")(r),
+         "",
+         "Move more tasks to GPU (Task <task> GPU;) and keep their hot "
+         "regions in FBMEM to reduce execution time, or try different "
+         "IndexTaskMap functions to maximize throughput.",
+         _ex_metric("Execution time", "app"),
+         (r"Execution time|throughput",)),
+    Rule("app/region-placement", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("execution time",
+                                       "measured-anchored")(r),
+         "Regions mapped to SYSMEM are read over the host link every task "
+         "launch.",
+         "Move activations to REMAT only on GPUs; keep weights in FBMEM "
+         "and spilling regions in ZCMEM.",
+         _ex_metric("Execution time", "app"),
+         ()),
+    Rule("app/layout", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("execution time")(r),
+         "",
+         "Adjust the layout constraints (Layout * * * SOA C_order;) so "
+         "hot regions are traversed contiguously.",
+         _ex_metric("Execution time", "app"),
+         ()),
+)
+
+# Matmul: the single index-mapping bundle over a fixed tile grid.
+MM_RULES: Tuple[Rule, ...] = (
+    Rule("matmul/communication", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("execution time", "communication",
+                                       "throughput")(r),
+         "Communication volume depends only on which device each tile "
+         "lands on.",
+         "Try different IndexTaskMap functions so neighbouring tiles land "
+         "on neighbouring devices: block2d for 2D algorithms, linearize3d "
+         "for 3D grids, blockcyclic to spread skewed workloads.",
+         _ex_metric("Execution time", "matmul"),
+         (r"Execution time|throughput",)),
+    Rule("matmul/grid-rank", None,
+         _msg("tuple index", "out of bounds", "arity"),
+         "The index-mapping function's rank does not match the tile grid.",
+         "Use a def of (Tuple ipoint, Tuple ispace); 3D algorithms "
+         "(johnson, cosma) need linearize3d, 2D grids use block2d or "
+         "linearize.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: tuple index out of range", "matmul"),
+         ()),
+)
+
+RULE_PACKS: Dict[str, Tuple[Rule, ...]] = {
+    "base": BASE_RULES,
+    "lm": BASE_RULES + LM_RULES,
+    "app": BASE_RULES + APP_RULES,
+    "app-jax": BASE_RULES + APP_RULES,
+    "matmul": BASE_RULES + MM_RULES,
+    # Legacy single-list order (the retired ENHANCE_RULES precedence):
+    # errors first, then bottleneck terms, then the generic metric rules.
+    "all": BASE_RULES + LM_RULES + APP_RULES + MM_RULES,
+}
+
+
+def get_pack(name: str) -> Tuple[Rule, ...]:
+    """Resolve a pack name ('lm' | 'app' | 'app-jax' | 'matmul' | 'base' |
+    'all').  Unknown names raise KeyError: a typo must not silently
+    degrade diagnostics -- custom substrates register their pack in
+    RULE_PACKS (docs/feedback.md)."""
+    try:
+        return RULE_PACKS[name]
+    except KeyError:
+        raise KeyError(f"unknown rule pack {name!r}; "
+                       f"known: {sorted(RULE_PACKS)}") from None

@@ -6,17 +6,33 @@ Three system-feedback categories:
                         (OOM, bad index map, sharding mismatch)
   3. Performance Metric -- step time / throughput of the mapped program
 
-Enhanced feedback adds keyword-matched *explanations* and *suggestions*
-(the paper implements these "via keyword matching, where system feedback
-triggers the corresponding explanations and suggestions").  The ablation
-levels (System / +Explain / +Explain+Suggest) mirror Fig. 8.
+Enhanced feedback adds *explanations* and *suggestions* on top; since
+AutoGuide v2 these come from the layered diagnostics engine in
+:mod:`repro.core.agent.autoguide` -- evaluators emit a structured
+:class:`~repro.core.agent.autoguide.ExecutionReport` (error taxonomy +
+cost-term breakdown + HBM footprint) and per-substrate rule packs match
+on its fields.  :class:`Feedback` remains the rendered *view* every
+optimizer consumes; its ``report`` attribute carries the structure.
+
+The ablation levels mirror the paper's Fig. 8, extended one notch down:
+
+  scalar   -- the bare score (what a scalar tuner like OpenTuner sees)
+  system   -- the raw system-feedback line
+  explain  -- system + the Explanation channel
+  full     -- system + Explanation + Suggestion channels
 """
 
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
+
+from .autoguide.engine import diagnose
+from .autoguide.report import (ExecutionReport, classify_message,
+                               report_from_error, report_from_roofline)
+
+#: Valid rendering levels, weakest to strongest (Fig. 8 ablation axis).
+FEEDBACK_LEVELS: Tuple[str, ...] = ("scalar", "system", "explain", "full")
 
 
 @dataclass
@@ -25,8 +41,25 @@ class Feedback:
     explain: str = ""
     suggest: str = ""
     score: Optional[float] = None     # seconds (lower better); None on error
+    report: Optional[ExecutionReport] = None
 
     def render(self, level: str = "full") -> str:
+        """Render the view at an ablation level.
+
+        Level handling is explicit: an unknown level raises instead of
+        silently degrading to system-only output (which used to make a
+        typo indistinguishable from the 'system' ablation arm).  At
+        'explain' the Suggestion channel is deliberately withheld even
+        when the Explanation channel is empty -- that is the Fig. 8
+        System+Explain arm, not an accident.
+        """
+        if level not in FEEDBACK_LEVELS:
+            raise ValueError(
+                f"unknown feedback level {level!r}; choose from "
+                f"{FEEDBACK_LEVELS}")
+        if level == "scalar":
+            return (f"score={self.score:.6f}s" if self.score is not None
+                    else "invalid mapper (no score)")
         parts = [self.system]
         if level in ("explain", "full") and self.explain:
             parts.append("Explanation: " + self.explain)
@@ -35,81 +68,40 @@ class Feedback:
         return "\n".join(parts)
 
 
-# (pattern, explain, suggest) -- matched against the system feedback text.
+# Legacy flat rule list (pattern, explain, suggest), retained ONLY as the
+# v1 audit surface: matching moved to autoguide.rules, and the coverage
+# test (tests/test_autoguide.py) asserts every pattern here is claimed by
+# a rule-pack entry's ``legacy_patterns`` -- no rule silently dropped.
 ENHANCE_RULES: List[Tuple[str, str, str]] = [
-    (r"Syntax error, unexpected ':'",
-     "",
-     "There should be no colon in brace-style function definitions; use "
-     "{ ... } or end the colon-form body with a return statement."),
-    (r"Syntax error",
-     "The mapper is not a valid DSL program.",
-     "Emit only Task/Region/Layout/IndexTaskMap statements terminated by "
-     "';' and def functions with braces."),
-    (r"IndexTaskMap's function undefined",
-     "",
-     "Define the IndexTaskMap function first before using it."),
-    (r"not found",
-     "",
-     "Include mtpu = Machine(TPU); in the generated code before using it."),
-    (r"index out of bound",
-     "IndexTaskMap statements cause error.",
-     "Ensure the first index ends with % m.size[0] and the second with "
-     "% m.size[1]."),
-    (r"out of memory|exceeds HBM",
-     "The mapped step does not fit per-device HBM.",
-     "Move activations to REMAT (Region step activations TP REMAT;), raise "
-     "InstanceLimit step <n>; to split the batch into microbatches, keep "
-     "weights in FBMEM (sharded) rather than ZCMEM (replicated), or Task "
-     "attention SP; to shard replicated activations over the model axis."),
-    (r"unknown processor|unknown memory|unknown layout",
-     "A statement uses an identifier outside the DSL vocabulary.",
-     "Use processors {TP, DP, SP, INLINE}, memories {FBMEM, ZCMEM, SYSMEM, "
-     "REMAT}, layouts {SOA, AOS, C_order, F_order, Align==<n>}."),
-    (r"tuple arity mismatch|expects \d+ args",
-     "IndexTaskMap function arity does not match the iteration space.",
-     "Take (Task task) or (Tuple ipoint, Tuple ispace) and index the "
-     "machine with the right rank."),
-    (r"collective term dominates",
-     "Inter-chip communication is the bottleneck for this mapping.",
-     "Reduce cross-chip traffic: Task attention SP; (sequence parallelism "
-     "turns TP all-reduces into reduce-scatters), or place small stages "
-     "INLINE, or use ZCMEM weights to trade memory for gathers, or pick a "
-     "blocked IndexTaskMap so neighbouring tiles land on neighbouring "
-     "chips."),
-    (r"memory term dominates",
-     "HBM traffic is the bottleneck for this mapping.",
-     "Layout attention scores * C_order; (chunked online-softmax attention "
-     "keeps scores out of HBM), Region step activations TP REMAT; to trade "
-     "FLOPs for traffic, or F_order KV cache for seq-major locality."),
-    (r"compute term dominates",
-     "The mapping is close to the compute roofline.",
-     "Remove recompute waste: Region step activations TP FBMEM; if memory "
-     "allows (useful_flops_ratio < 1 indicates remat overhead), and lower "
-     "InstanceLimit to cut per-microbatch overheads."),
-    (r"Execution time|throughput",
-     "",
-     "Move more stages to TP to reduce execution time, or try different "
-     "IndexTaskMap functions to maximize throughput."),
+    (r"Syntax error, unexpected ':'", "", ""),
+    (r"Syntax error", "", ""),
+    (r"IndexTaskMap's function undefined", "", ""),
+    (r"not found", "", ""),
+    (r"index out of bound", "", ""),
+    (r"out of memory|exceeds HBM", "", ""),
+    (r"unknown processor|unknown memory|unknown layout", "", ""),
+    (r"tuple arity mismatch|expects \d+ args", "", ""),
+    (r"collective term dominates", "", ""),
+    (r"memory term dominates", "", ""),
+    (r"compute term dominates", "", ""),
+    (r"Execution time|throughput", "", ""),
 ]
 
 
 def enhance(system: str, score: Optional[float] = None,
             extra_explain: str = "") -> Feedback:
-    """Keyword-match the rules against system feedback (+ any
-    already-derived explanation): the paper's enhanced-feedback layer."""
-    explains = [extra_explain] if extra_explain else []
-    suggests = []
-    probe = system + "\n" + extra_explain
-    for pat, exp, sug in ENHANCE_RULES:
-        if re.search(pat, probe, re.IGNORECASE):
-            if exp:
-                explains.append(exp)
-            if sug:
-                suggests.append(sug)
-            if len(suggests) >= 2:
-                break
-    return Feedback(system=system, explain=" ".join(explains),
-                    suggest=" ".join(suggests), score=score)
+    """Diagnose a raw system-feedback string (legacy entry point).
+
+    Builds a minimal ExecutionReport by classifying ``system`` against
+    the error taxonomy and runs the combined 'all' rule pack over it, so
+    call sites that only have prose (synthetic evaluators, hillclimb
+    logs) keep working.  Any pre-derived explanation rides along as the
+    report's probe text and stays visible to text-fallback predicates.
+    """
+    report = ExecutionReport(
+        category=classify_message(system), message=system, score=score,
+        details={"probe": extra_explain} if extra_explain else {})
+    return diagnose(report, pack="all")
 
 
 def performance_feedback(report) -> Feedback:
@@ -117,21 +109,11 @@ def performance_feedback(report) -> Feedback:
 
     The raw numbers are System feedback; the bottleneck interpretation is
     the Explain channel (ablated away at the 'system' level, Fig. 8)."""
-    t = report.step_time_s
-    sys_txt = (
-        f"Performance Metric: step time {t*1e3:.1f} ms "
-        f"(compute {report.compute_s*1e3:.1f} ms, memory "
-        f"{report.memory_s*1e3:.1f} ms, collective "
-        f"{report.collective_s*1e3:.1f} ms). "
-        f"useful_flops_ratio={report.useful_flops_ratio:.2f}, "
-        f"roofline_fraction={report.roofline_fraction:.3f}."
-    )
-    explain = f"The {report.bottleneck} term dominates the step time."
-    return enhance(sys_txt, score=t, extra_explain=explain)
+    from ...core.evaluator import HBM_BYTES
+    return diagnose(report_from_roofline(report, hbm_limit=HBM_BYTES),
+                    pack="lm")
 
 
-def error_feedback(err: Exception) -> Feedback:
-    from ..dsl.errors import DSLError
-    if isinstance(err, DSLError):
-        return enhance(err.feedback())
-    return enhance(f"Execution Error: {err}")
+def error_feedback(err: Exception, substrate: str = "") -> Feedback:
+    return diagnose(report_from_error(err, substrate=substrate),
+                    pack=substrate or "all")

@@ -25,6 +25,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
+from .autoguide.engine import history_guidance
 from .feedback import Feedback
 from .trace_lite import TraceGraph, TraceRecord
 
@@ -122,10 +123,16 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
         # -- record: primary drives proposals, everything counts for best --
         for idx, ((values, outs, text), fb) in enumerate(
                 zip(candidates, fbs)):
+            fb_text = fb.render(search.feedback_level)
+            if idx == 0 and search.feedback_level == "full":
+                # trajectory-aware AutoGuide layer: computed from the
+                # primary chain only, so the chain stays batch-invariant
+                hint = history_guidance(s.graph.records)
+                if hint:
+                    fb_text += "\n" + hint
             rec = TraceRecord(values=values, outputs=outs, mapper=text,
-                              score=fb.score,
-                              feedback=fb.render(search.feedback_level),
-                              primary=(idx == 0))
+                              score=fb.score, feedback=fb_text,
+                              report=fb.report, primary=(idx == 0))
             if idx == 0:
                 s.graph.add(rec)
             s.full.add(rec)

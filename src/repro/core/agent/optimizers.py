@@ -121,6 +121,25 @@ class OPROSearch(Search):
         last = graph.last()
         if last is not None:
             lines.append("Latest feedback:\n" + last.feedback)
+            # AutoGuide v2: surface the structured cost/memory layers of
+            # the ExecutionReport -- but only at the ablation levels that
+            # include the Explanation channel (Fig. 8).
+            rep = getattr(last, "report", None)
+            if rep is not None and self.feedback_level in ("explain",
+                                                           "full"):
+                if rep.cost is not None:
+                    c = rep.cost
+                    lines.append(
+                        f"Cost breakdown: compute {c.compute_s*1e3:.1f} ms, "
+                        f"memory {c.memory_s*1e3:.1f} ms, collective "
+                        f"{c.collective_s*1e3:.1f} ms; "
+                        f"bottleneck={c.bottleneck}.")
+                if rep.memory is not None:
+                    m = rep.memory
+                    lines.append(
+                        f"HBM: peak {m.peak_bytes_per_device/2**30:.1f} GiB "
+                        f"of {m.limit_bytes_per_device/2**30:.0f} GiB per "
+                        f"device ({m.utilization:.0%}).")
         return "\n".join(lines)
 
     def propose(self, agent, graph):
@@ -142,10 +161,19 @@ class TraceSearch(Search):
         last = graph.last()
         feedback = last.feedback if last else ""
         implicated = set()
-        for pat, bundles in _CREDIT:
-            if re.search(pat, feedback, re.IGNORECASE):
-                implicated.update(bundles)
-                break  # first (most specific) category wins
+        # AutoGuide v2: structured credit assignment from the record's
+        # ExecutionReport (taxonomy category / bottleneck term), gated to
+        # the levels that expose the Explanation channel so the Fig. 8
+        # ablation still withholds information at scalar/system.
+        rep = getattr(last, "report", None) if last else None
+        if rep is not None and self.feedback_level in ("explain", "full"):
+            from .autoguide.engine import implicated_bundles
+            implicated.update(implicated_bundles(rep))
+        if not implicated:
+            for pat, bundles in _CREDIT:
+                if re.search(pat, feedback, re.IGNORECASE):
+                    implicated.update(bundles)
+                    break  # first (most specific) category wins
         proposal = self.llm.propose(feedback, decisions, self.rng)
         if not implicated:
             return proposal

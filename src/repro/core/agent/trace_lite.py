@@ -62,6 +62,7 @@ class TraceRecord:
     feedback: str = ""
     error_node: Optional[str] = None
     primary: bool = True                      # False: batch-exploration extra
+    report: Optional[Any] = None              # autoguide.ExecutionReport
 
 
 @dataclass

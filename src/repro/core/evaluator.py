@@ -1,5 +1,13 @@
 """Mapper evaluators: run a DSL mapper against a workload, return Feedback.
 
+Since AutoGuide v2 every evaluator first builds a structured
+:class:`~repro.core.agent.autoguide.ExecutionReport` -- error taxonomy
+category, cost-model term breakdown, per-device HBM footprint -- and
+then renders it through the substrate's diagnostic rule pack
+(:func:`~repro.core.agent.autoguide.diagnose`).  The returned
+``Feedback`` is the rendered view; the report rides on
+``Feedback.report`` for checkpoints, prompts, and credit assignment.
+
 ``LMCellEvaluator`` is the production evaluator: compile the mapped step
 for an (arch x shape) cell on the production mesh (dry-run; deterministic,
 like the paper's controlled environment) and score it by the dominant
@@ -8,7 +16,7 @@ Compile/Execution error feedback categories.
 
 ``CallableEvaluator`` wraps any mapper -> seconds function (used by the
 scientific apps and matmul benchmarks, which measure wall time on host
-devices).
+devices); its ``pack`` field picks the rule pack ('app' or 'matmul').
 """
 
 from __future__ import annotations
@@ -17,8 +25,10 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
-from .agent.feedback import Feedback, enhance, error_feedback, \
-    performance_feedback
+from .agent.autoguide import (ErrorCategory, ExecutionReport,
+                              MemoryFootprint, diagnose, report_from_error,
+                              report_from_metric, report_from_roofline)
+from .agent.feedback import Feedback
 from .dsl.errors import DSLError, ExecutionError
 
 HBM_BYTES = 16 * (1 << 30)   # v5e: 16 GiB per chip
@@ -50,19 +60,31 @@ class LMCellEvaluator:
                                    mapper_src=mapper_src, mesh=self._mesh,
                                    verbose=False)
             if isinstance(report, dict) and report.get("skipped"):
-                fb = enhance("Execution Error: " + report["skipped"])
+                xr = ExecutionReport(
+                    category=ErrorCategory.EXECUTION,
+                    message="Execution Error: " + report["skipped"],
+                    substrate="lm")
             elif (report.peak_memory_bytes or 0) > self.hbm_limit:
                 gib = report.peak_memory_bytes / (1 << 30)
-                fb = enhance(
-                    f"Execution Error: out of memory -- peak HBM "
-                    f"{gib:.1f} GiB exceeds HBM capacity 16 GiB per chip.")
+                xr = ExecutionReport(
+                    category=ErrorCategory.RESOURCE,
+                    message=(f"Execution Error: out of memory -- peak HBM "
+                             f"{gib:.1f} GiB exceeds HBM capacity "
+                             f"{self.hbm_limit / (1 << 30):.0f} GiB per "
+                             "chip."),
+                    substrate="lm",
+                    memory=MemoryFootprint(
+                        peak_bytes_per_device=report.peak_memory_bytes,
+                        limit_bytes_per_device=self.hbm_limit))
             else:
-                fb = performance_feedback(report)
+                xr = report_from_roofline(report, hbm_limit=self.hbm_limit)
                 self.reports[key] = report
         except DSLError as e:
-            fb = error_feedback(e)
+            xr = report_from_error(e, substrate="lm")
         except Exception as e:  # sharding/lowering failures = execution
-            fb = error_feedback(ExecutionError(str(e)[:500]))
+            xr = report_from_error(ExecutionError(str(e)[:500]),
+                                   substrate="lm")
+        fb = diagnose(xr, pack="lm")
         self.cache[key] = fb
         return fb
 
@@ -77,6 +99,7 @@ class CallableEvaluator:
 
     fn: Callable[[str], float]
     metric_name: str = "Execution time"
+    pack: str = "app"
     cache: Dict[str, Feedback] = field(default_factory=dict)
 
     def __call__(self, mapper_src: str) -> Feedback:
@@ -85,11 +108,13 @@ class CallableEvaluator:
             return self.cache[key]
         try:
             t = self.fn(mapper_src)
-            fb = enhance(f"Performance Metric: {self.metric_name} is "
-                         f"{t:.4f}s.", score=t)
+            xr = report_from_metric(t, metric_name=self.metric_name,
+                                    substrate=self.pack)
         except DSLError as e:
-            fb = error_feedback(e)
+            xr = report_from_error(e, substrate=self.pack)
         except Exception as e:
-            fb = error_feedback(ExecutionError(str(e)[:500]))
+            xr = report_from_error(ExecutionError(str(e)[:500]),
+                                   substrate=self.pack)
+        fb = diagnose(xr, pack=self.pack)
         self.cache[key] = fb
         return fb

@@ -4,8 +4,12 @@
     python -m repro.tune --list --substrate matmul
     python -m repro.tune --workload circuit --strategy trace --iters 10
     python -m repro.tune --workload matmul/summa --batch 4 --out traj.json
+    python -m repro.tune --workload circuit --feedback-level scalar
     python -m repro.tune --workload circuit --checkpoint sess.json
     python -m repro.tune --resume sess.json --iters 20
+
+``--feedback-level`` ablates how much of the AutoGuide ExecutionReport
+the optimizer sees (paper Fig. 8): scalar | system | explain | full.
 """
 
 from __future__ import annotations
@@ -78,8 +82,9 @@ def main(argv=None) -> int:
                          "(default: 1)")
     ap.add_argument("--seed", type=int, default=None, help="(default: 0)")
     ap.add_argument("--feedback-level", default=None,
-                    choices=("system", "explain", "full"),
-                    help="(default: full)")
+                    choices=("scalar", "system", "explain", "full"),
+                    help="how much of the ExecutionReport the optimizer "
+                         "sees, Fig. 8 ablation (default: full)")
     ap.add_argument("--checkpoint", default=None,
                     help="write a resumable JSON session here every "
                          "iteration")

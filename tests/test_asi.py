@@ -38,6 +38,15 @@ def test_registry_get_is_cached_and_protocol_conformant(reg):
     assert wl.space_size() > 1000
 
 
+def test_populate_fills_the_registry_it_was_given():
+    """An empty custom registry is falsy but still the one the caller
+    asked to populate (regression: `registry or REGISTRY` ignored it)."""
+    from repro.asi.registry import WorkloadRegistry
+    mine = populate(WorkloadRegistry())
+    assert isinstance(mine, WorkloadRegistry) and mine is not REGISTRY
+    assert len(mine) >= 10
+
+
 def test_registry_unknown_name_raises(reg):
     with pytest.raises(KeyError, match="unknown workload"):
         reg.get("nonesuch")

@@ -1,0 +1,21 @@
+"""The docs tree stays honest: tools/docs_lint.py (also a CI step)
+checks that internal links resolve and every public repro.asi symbol
+is documented."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_docs_lint_passes():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "docs_lint.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr or proc.stdout
+
+
+def test_docs_tree_present():
+    for page in ("architecture.md", "feedback.md", "dsl.md"):
+        assert (ROOT / "docs" / page).is_file(), page

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs lint: keep the docs tree honest (run by CI and tests/test_docs.py).
+
+Checks, with no third-party deps and no imports of the package itself:
+
+1. every relative markdown link in docs/*.md and README.md resolves to
+   an existing file (anchors are checked against the target's headings);
+2. every public ``repro.asi`` symbol (its ``__all__``, read statically
+   via ast) is mentioned somewhere in docs/*.md.
+
+Exit 0 when clean; prints one line per violation and exits 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+ASI_INIT = ROOT / "src" / "repro" / "asi" / "__init__.py"
+
+# [text](target) -- ignore images and external/mail links
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style slug: lowercase, drop punctuation, spaces -> dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors_of(md_path: Path) -> set:
+    return {_anchor(m.group(1))
+            for m in _HEADING.finditer(md_path.read_text())}
+
+
+def check_links(files) -> list:
+    errors = []
+    for f in files:
+        text = f.read_text()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (f.parent / path_part).resolve() if path_part else f
+            if not dest.exists():
+                errors.append(f"{f.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                if _anchor(fragment) not in _anchors_of(dest):
+                    errors.append(f"{f.relative_to(ROOT)}: missing anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def public_asi_symbols() -> list:
+    tree = ast.parse(ASI_INIT.read_text())
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"):
+            return [ast.literal_eval(elt) for elt in node.value.elts]
+    raise SystemExit(f"could not find __all__ in {ASI_INIT}")
+
+
+def check_api_coverage(doc_files) -> list:
+    blob = "\n".join(f.read_text() for f in doc_files)
+    return [f"docs/: public repro.asi symbol {sym!r} is not mentioned "
+            "in any docs/*.md"
+            for sym in public_asi_symbols() if sym not in blob]
+
+
+def main() -> int:
+    doc_files = sorted(DOCS.glob("*.md"))
+    if not doc_files:
+        print("docs/: no markdown files found", file=sys.stderr)
+        return 1
+    errors = check_links(doc_files + [ROOT / "README.md"])
+    errors += check_api_coverage(doc_files)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs lint OK: {len(doc_files)} docs pages, "
+              f"{len(public_asi_symbols())} repro.asi symbols covered")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
