@@ -4,7 +4,10 @@ Each supported cell of the production dry-run grid -- an architecture
 from the zoo times an assigned input shape -- is one workload: decisions
 are the paper's five LM mapper bundles, rendering goes through
 :class:`MapperAgent`, and evaluation compiles the mapped step on the
-production mesh via :class:`LMCellEvaluator`.
+production mesh via :class:`LMCellEvaluator` (the tiered evaluation
+engine: plan-fingerprint caching, a persistent cell context, optional
+on-disk store, analytic prescreen -- see
+:mod:`repro.core.evalengine`).
 """
 
 from __future__ import annotations
@@ -20,14 +23,22 @@ from .workload import AgentWorkload
 class LMCellWorkload(AgentWorkload):
     substrate = "lm"
     rule_pack = "lm"
-    # JAX lowering/compilation is not safe to drive from several threads.
+    # JAX lowering/compilation is not safe to drive from several threads;
+    # the evaluation engine still screens and cache-serves batch extras
+    # concurrently (Tier 0/2 are thread-safe), only compiles serialize.
     parallel_safe = False
 
-    def __init__(self, arch: str, shape: str, multi_pod: bool = False):
+    def __init__(self, arch: str, shape: str, multi_pod: bool = False,
+                 *, cache_size: int = 256, disk_cache: str = None,
+                 prescreen_margin: float = 2.0, smoke: bool = False):
         super().__init__()
         self.arch = arch
         self.shape = shape
         self.multi_pod = multi_pod
+        self.cache_size = cache_size
+        self.disk_cache = disk_cache
+        self.prescreen_margin = prescreen_margin
+        self.smoke = smoke
         self.name = f"lm/{arch}/{shape}"
         self.description = (f"{arch} {shape} cell on the production mesh"
                             f"{' (multi-pod)' if multi_pod else ''}")
@@ -48,7 +59,11 @@ class LMCellWorkload(AgentWorkload):
     def _make_evaluator(self) -> Callable:
         from ..core.evaluator import LMCellEvaluator
         return LMCellEvaluator(self.arch, self.shape,
-                               multi_pod=self.multi_pod)
+                               multi_pod=self.multi_pod,
+                               cache_size=self.cache_size,
+                               disk_cache=self.disk_cache,
+                               prescreen_margin=self.prescreen_margin,
+                               smoke=self.smoke)
 
 
 def register_lm_cells(registry):

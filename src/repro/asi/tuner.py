@@ -19,6 +19,11 @@ delegates to):
   session after every iteration; ``resume(<path>)`` restores the RNG,
   the proposal graph, and the dedup sets, and continues to produce the
   identical trajectory an uninterrupted run would have produced.
+  Checkpoints are *cache-aware*: when the workload's evaluator is the
+  tiered evaluation engine (:mod:`repro.core.evalengine`), its
+  plan-fingerprint store persists to ``<checkpoint>.evalcache``, so the
+  resumed (or repeated) session replays scores from disk instead of
+  recompiling every already-seen plan.
 """
 
 from __future__ import annotations
@@ -164,11 +169,26 @@ class Tuner:
             json.dump(payload, f, allow_nan=False)
         os.replace(tmp, self.checkpoint)
 
+    def eval_cache_path(self) -> Optional[str]:
+        """Disk-store path for cache-aware checkpoints (None = no ckpt)."""
+        return self.checkpoint + ".evalcache" if self.checkpoint else None
+
     def run(self, start: Optional[Dict] = None,
             _session: Optional[TuneSession] = None, _search=None):
         wl = self.workload
         search = _search or self._make_search()
         session = _session or TuneSession()
+        # Cache-aware checkpointing: when the evaluator supports a
+        # persistent fingerprint store (the tiered evaluation engine),
+        # back it with a sidecar next to the checkpoint so a resumed --
+        # or re-run -- session skips every already-paid compile.  A
+        # disk_cache the workload configured explicitly takes
+        # precedence (attach is a no-op then).
+        if self.checkpoint:
+            evaluator = wl.evaluator()
+            attach = getattr(evaluator, "attach_disk_cache", None)
+            if attach is not None:
+                attach(self.eval_cache_path())
         agent = wl.make_agent(_norm(start) if start else None)
         if session.iteration:   # resumed: restore the agent's position
             agent.set_decisions(session.graph.records[-1].values)

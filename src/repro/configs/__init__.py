@@ -7,7 +7,7 @@ from typing import Dict, Tuple
 
 from ..models.config import ModelConfig
 from .shapes import SHAPES, ShapeSpec, cell_supported, input_specs, \
-    abstract_caches
+    abstract_caches, resolve_shape
 
 ARCH_MODULES: Dict[str, str] = {
     "whisper-small": "whisper_small",
@@ -45,4 +45,5 @@ def all_cells():
 __all__ = [
     "ARCH_IDS", "ARCH_MODULES", "get_config", "all_cells", "SHAPES",
     "ShapeSpec", "cell_supported", "input_specs", "abstract_caches",
+    "resolve_shape",
 ]

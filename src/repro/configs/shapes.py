@@ -40,10 +40,16 @@ SHAPES: Dict[str, ShapeSpec] = {
 }
 
 
-def cell_supported(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+def resolve_shape(shape) -> ShapeSpec:
+    """Accept a shape either by registry name or as an explicit
+    :class:`ShapeSpec` (test- and smoke-scale cells)."""
+    return shape if isinstance(shape, ShapeSpec) else SHAPES[shape]
+
+
+def cell_supported(cfg: ModelConfig, shape_name) -> Optional[str]:
     """None if the (arch, shape) cell runs; else a skip reason (recorded in
     EXPERIMENTS.md -- see DESIGN.md §Arch-applicability)."""
-    s = SHAPES[shape_name]
+    s = resolve_shape(shape_name)
     if s.name == "long_500k" and not cfg.sub_quadratic:
         return ("full-attention arch: 500k decode requires sub-quadratic "
                 "attention (skip per spec)")
@@ -54,14 +60,14 @@ def _tok(shape):
     return jax.ShapeDtypeStruct(shape, jnp.int32)
 
 
-def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+def input_specs(cfg: ModelConfig, shape_name) -> Dict:
     """Abstract inputs for the cell's step function.
 
     train/prefill: {"tokens": [B, S]} (+ "frames" [B, S_enc, D] for
     enc-dec / audio stubs).  decode: {"tokens": [B, 1], "index": scalar}
     (the serve caches are built separately by the launcher, abstractly).
     """
-    s = SHAPES[shape_name]
+    s = resolve_shape(shape_name)
     b = s.global_batch
     if cfg.is_encoder_decoder:
         # seq_len applies to the encoder frame axis; decoder = target len.
@@ -77,10 +83,10 @@ def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
     return {"tokens": _tok((b, 1))}
 
 
-def abstract_caches(cfg: ModelConfig, shape_name: str, order: str = "C"):
+def abstract_caches(cfg: ModelConfig, shape_name, order: str = "C"):
     """Abstract (ShapeDtypeStruct) serve caches for a decode cell."""
     from ..models.registry import init_serve_caches
-    s = SHAPES[shape_name]
+    s = resolve_shape(shape_name)
     enc_len = s.seq_len if cfg.is_encoder_decoder else 0
     max_len = cfg.max_target_len if cfg.is_encoder_decoder else s.seq_len
     return jax.eval_shape(

@@ -15,6 +15,13 @@ the primary on an independent per-iteration RNG stream, evaluated
 alongside it (concurrently when the evaluator allows), and recorded
 with ``primary=False``: they widen coverage, so the best-found score is
 monotonically non-worse as ``batch`` grows.
+
+When the evaluator exposes a Tier-2 analytic ``prescreen`` (the tiered
+evaluation engine, :mod:`repro.core.evalengine`), the extras route
+through it first: clear analytic losers are recorded with ``score=None``
+and a "screened out" feedback instead of paying a full compile.  The
+primary is never screened, so the proposal chain -- and therefore the
+``batch=1`` trajectory -- is unaffected.
 """
 
 from __future__ import annotations
@@ -59,6 +66,43 @@ class TuneSession:
     iteration: int = 0
 
 
+def _prescreen_extras(pool, prescreen, texts, margin):
+    """Tier-2 screen for the exploration extras of one batch.
+
+    Returns ``{index: Feedback}`` for the extras that should *not* pay a
+    full compile: analytic estimate beyond ``margin x`` the batch's best
+    estimate, or a predicted resource failure.  The primary (index 0) is
+    never screened -- the proposal chain always fully compiles -- and an
+    extra whose mapper cannot be scored analytically (e.g. a DSL error)
+    falls through to full evaluation, which surfaces the real diagnostic
+    cheaply.  Prescreens run concurrently: they are pure analytics, safe
+    to thread even when the compiling evaluator is not.
+    """
+    from ..evalengine.engine import screened_feedback
+
+    def safe(text):
+        try:
+            return prescreen(text)
+        except Exception:
+            return None
+
+    results = list(pool.map(safe, texts))
+    finite = [r.score for r in results
+              if r is not None and r.viable]
+    best = min(finite) if finite else None
+    screened = {}
+    for idx in range(1, len(texts)):
+        r = results[idx]
+        if r is None:
+            continue
+        if not r.viable:
+            screened[idx] = screened_feedback(r.score, best or 0.0, margin,
+                                              reason=r.reason)
+        elif best is not None and r.score > margin * best:
+            screened[idx] = screened_feedback(r.score, best, margin)
+    return screened
+
+
 def run_loop(search, agent, evaluate: Callable[[str], Feedback],
              iterations: int = 10, batch: int = 1, *,
              parallel_safe: bool = True,
@@ -69,6 +113,24 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
     from .optimizers import SearchResult
 
     s = session or TuneSession()
+    # One executor for the whole run (prescreens + concurrent evals);
+    # constructing/tearing one down per iteration wasted thread churn.
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        _run_iterations(search, agent, evaluate, iterations, batch,
+                        parallel_safe, s, on_iteration, pool)
+
+    best = s.full.best()
+    return SearchResult(
+        graph=s.full,
+        best_mapper=best.mapper if best else "",
+        best_score=best.score if best else float("inf"),
+        best_decisions=best.values if best else {},
+        trajectory=s.trajectory,
+    )
+
+
+def _run_iterations(search, agent, evaluate, iterations, batch,
+                    parallel_safe, s, on_iteration, pool):
     for it in range(s.iteration, iterations):
         # -- primary candidate: the legacy proposal chain -------------------
         if it > 0:
@@ -112,13 +174,27 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
             # leave the agent on the primary candidate for the next propose
             agent.set_decisions(primary_values)
 
-        # -- evaluate the batch (concurrently when safe) --------------------
+        # -- Tier-2 prescreen: extras that are clear analytic losers skip
+        # the full compile (the primary always fully compiles, so the
+        # proposal chain stays bit-for-bit batch-invariant) -------------
         texts = [c[2] for c in candidates]
-        if len(texts) > 1 and parallel_safe:
-            with ThreadPoolExecutor(max_workers=min(len(texts), 8)) as pool:
-                fbs = list(pool.map(evaluate, texts))
+        prescreen = getattr(evaluate, "prescreen", None)
+        screened = {}
+        if len(texts) > 1 and prescreen is not None:
+            margin = float(getattr(evaluate, "prescreen_margin", 2.0))
+            screened = _prescreen_extras(pool, prescreen, texts, margin)
+
+        # -- evaluate the survivors (concurrently when safe) ----------------
+        live = [i for i in range(len(texts)) if i not in screened]
+        if len(live) > 1 and parallel_safe:
+            live_fbs = list(pool.map(evaluate, [texts[i] for i in live]))
         else:
-            fbs = [evaluate(t) for t in texts]
+            live_fbs = [evaluate(texts[i]) for i in live]
+        fbs = [None] * len(texts)
+        for i, fb in zip(live, live_fbs):
+            fbs[i] = fb
+        for i, fb in screened.items():
+            fbs[i] = fb
 
         # -- record: primary drives proposals, everything counts for best --
         for idx, ((values, outs, text), fb) in enumerate(
@@ -144,12 +220,3 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
         s.iteration = it + 1
         if on_iteration is not None:
             on_iteration(s)
-
-    best = s.full.best()
-    return SearchResult(
-        graph=s.full,
-        best_mapper=best.mapper if best else "",
-        best_score=best.score if best else float("inf"),
-        best_decisions=best.values if best else {},
-        trajectory=s.trajectory,
-    )

@@ -1,0 +1,41 @@
+"""Tiered evaluation engine: the tuning hot path.
+
+The paper's speed claim -- beating OpenTuner's 1000 iterations with 10 --
+lives on evaluation throughput.  This package makes candidate evaluation
+cheap in three tiers:
+
+* **Tier 0 -- plan canonicalization & fingerprinting**
+  (:mod:`fingerprint`): a mapper compiles to a small canonical plan
+  (Mapple's observation); two textually different mappers that
+  canonicalize to the same plan need zero recompiles.  All caching keys
+  on the plan fingerprint plus cell identity, backed by a bounded
+  in-memory LRU (:mod:`lru`) and an optional on-disk sqlite store
+  (:mod:`store`) so checkpoint-resumed and repeated runs skip compiles
+  entirely.
+* **Tier 1 -- persistent cell context** (:mod:`context`): the config,
+  ``Model``, abstract inputs, and step function of an
+  (arch x shape x step) cell are built once and held by the evaluator;
+  per-candidate work is only re-deriving shardings and lower+compile.
+* **Tier 2 -- analytic prescreen** (:mod:`prescreen`): candidates are
+  scored from the canonical plan with the roofline cost model *without*
+  an XLA compile (OPTIMAS-style analytics-informed prescreening); only
+  survivors pay the full lower+compile.
+
+:class:`EvalEngine` (:mod:`engine`) ties the tiers together behind the
+same ``evaluate(mapper_src) -> Feedback`` contract the optimizers use.
+"""
+
+from .context import (AbstractMesh, CellContext, CellSkipped,  # noqa: F401
+                      smoke_shape)
+from .engine import EvalEngine, screened_feedback  # noqa: F401
+from .fingerprint import canonical_plan, plan_fingerprint  # noqa: F401
+from .lru import LRUCache  # noqa: F401
+from .prescreen import PrescreenResult, prescreen_estimate  # noqa: F401
+from .store import DiskCache  # noqa: F401
+
+__all__ = [
+    "AbstractMesh", "CellContext", "CellSkipped", "DiskCache", "EvalEngine",
+    "LRUCache",
+    "PrescreenResult", "canonical_plan", "plan_fingerprint",
+    "prescreen_estimate", "screened_feedback", "smoke_shape",
+]

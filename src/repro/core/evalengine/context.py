@@ -1,0 +1,273 @@
+"""Tier 1: the persistent cell context.
+
+``lower_cell`` used to rebuild the config, the ``Model``, the abstract
+inputs, and the whole step graph -- then run a full XLA lower+compile --
+for *every* candidate mapper.  Only the last two steps depend on the
+mapper.  :class:`CellContext` splits the pipeline: everything built from
+(arch x shape x step x mesh) alone is constructed once and held by the
+evaluator; ``lower(plan)`` is the per-candidate tail that re-derives
+shardings from the plan and pays the XLA lower+compile.
+
+``CellContext.build`` also supports ``smoke=True``: the arch's smoke
+config on a host-device mesh with a scaled-down shape -- the same code
+path at test scale (used by tests/ and the throughput benchmark).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, Optional, Tuple
+
+from .fingerprint import canonical_plan, plan_fingerprint
+
+
+class CellSkipped(Exception):
+    """The (arch, shape) cell is statically unsupported (skip reason)."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+class AbstractMesh:
+    """Device-less mesh stand-in: production *geometry* without devices.
+
+    Tier 0 (canonicalization/fingerprint) and Tier 2 (prescreen) only
+    read ``axis_names`` and ``devices.shape`` -- never device state -- so
+    a :class:`CellContext` built over an AbstractMesh can fingerprint
+    and prescreen candidates at full production scale on any host.
+    ``lower`` on such a context raises: Tier 1 needs real devices.
+    """
+
+    def __init__(self, shape=(16, 16), axis_names=("data", "model")):
+        import numpy as np
+        if len(shape) != len(axis_names):
+            raise ValueError(f"shape {shape} vs axis_names {axis_names}")
+        self.axis_names = tuple(axis_names)
+        self.devices = np.zeros(tuple(shape), dtype=np.int8)
+
+    def __enter__(self):   # pragma: no cover - lower() rejects us first
+        raise RuntimeError("AbstractMesh has no devices; build the "
+                           "CellContext over a real mesh to lower")
+
+    def __exit__(self, *exc):   # pragma: no cover
+        return False
+
+
+def smoke_shape(spec):
+    """Scale a production ShapeSpec down to smoke-config size."""
+    from ...configs import ShapeSpec
+    return ShapeSpec(name=f"{spec.name}-smoke",
+                     seq_len=min(spec.seq_len, 64),
+                     global_batch=min(spec.global_batch, 4),
+                     step=spec.step)
+
+
+class CellContext:
+    """Reusable compile context for one (config x shape x step x mesh).
+
+    Holds the plan-independent state: config, ``Model``, abstract batch,
+    the DSL machine factory, and (lazily, per cache order) the abstract
+    serve caches and minimum per-device HBM bytes.  ``lower(plan)`` does
+    only the per-candidate work.
+    """
+
+    def __init__(self, cfg, shape_spec, mesh, *, opt_cfg=None,
+                 arch: Optional[str] = None):
+        from ...configs import cell_supported, input_specs
+        from ...launch.mesh import machine_factory_for_mesh
+        from ...models.registry import Model
+
+        skip = cell_supported(cfg, shape_spec)
+        if skip:
+            raise CellSkipped(skip)
+        self.cfg = cfg
+        self.arch = arch or cfg.name
+        self.spec = shape_spec
+        self.step = shape_spec.step
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg
+        self.mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+        self.n_devices = mesh.devices.size
+        self.machine_factory = machine_factory_for_mesh(mesh)
+        self.model = Model(cfg)
+        self.batch = input_specs(cfg, shape_spec)
+        self._reuse: Dict = {}          # build_cell's plan-independent state
+        self._caches: Dict[str, object] = {}   # order -> abstract caches
+        self._min_bytes: Dict[str, float] = {}  # order -> unavoidable HBM/dev
+        self.param_bytes = self._param_bytes()
+        self.build_count = 0            # full lower+compile invocations
+
+    @classmethod
+    def build(cls, arch: str, shape, *, multi_pod: bool = False,
+              mesh=None, smoke: bool = False, opt_cfg=None) -> "CellContext":
+        """Resolve an (arch, shape) cell; raises :class:`CellSkipped` for
+        statically unsupported cells."""
+        from ...configs import cell_supported, get_config, resolve_shape
+        from ...launch.mesh import make_host_mesh, make_production_mesh
+
+        cfg = get_config(arch, smoke=smoke)
+        spec = resolve_shape(shape)
+        if smoke:
+            spec = smoke_shape(spec)
+        skip = cell_supported(cfg, spec)
+        if skip:   # before any device/mesh work: skipped cells never touch jax
+            raise CellSkipped(skip)
+        if mesh is None:
+            mesh = (make_host_mesh() if smoke
+                    else make_production_mesh(multi_pod=multi_pod))
+        return cls(cfg, spec, mesh, opt_cfg=opt_cfg, arch=arch)
+
+    # -- Tier 0 hooks -------------------------------------------------------
+    def compile_mapper(self, mapper_src: str):
+        """DSL-compile a mapper against this cell's machine space."""
+        from ..dsl.compiler import compile_mapper
+        return compile_mapper(mapper_src, self.machine_factory)
+
+    def cell_key(self) -> Dict:
+        """The cell-identity half of the plan fingerprint.
+
+        Pins everything outside the mapper that changes the compiled
+        artifact -- including the optimizer config, which is baked into
+        the train step (two processes sharing a disk store with
+        different ``opt_cfg`` must not exchange entries).
+        """
+        from dataclasses import asdict, is_dataclass
+        if self.opt_cfg is None:
+            opt = None
+        elif is_dataclass(self.opt_cfg):
+            opt = asdict(self.opt_cfg)
+        else:
+            opt = repr(self.opt_cfg)
+        return {"arch": self.arch, "shape": self.spec.name,
+                "seq_len": self.spec.seq_len,
+                "global_batch": self.spec.global_batch,
+                "step": self.step, "mesh": self.mesh_desc,
+                "axes": list(self.mesh.axis_names),
+                "opt_cfg": opt}
+
+    def canonical(self, plan) -> Dict:
+        return canonical_plan(plan, self.mesh, self.step,
+                              num_experts=self.cfg.num_experts or 0)
+
+    def fingerprint(self, plan, extra_cell: Optional[Dict] = None) -> str:
+        """Plan fingerprint in this cell; ``extra_cell`` lets the caller
+        pin additional result-affecting inputs (the engine adds its
+        ``hbm_limit``, which changes the cached OOM verdict)."""
+        cell = self.cell_key()
+        if extra_cell:
+            cell = {**cell, **extra_cell}
+        return plan_fingerprint(self.canonical(plan), cell)
+
+    # -- plan-independent lazies -------------------------------------------
+    def _param_bytes(self) -> float:
+        from ...models.params import param_bytes
+        return float(param_bytes(self.model.specs))
+
+    def abstract_caches(self, order: str = "C"):
+        from ...configs import abstract_caches
+        if order not in self._caches:
+            self._caches[order] = abstract_caches(self.cfg, self.spec, order)
+        return self._caches[order]
+
+    def min_bytes_per_device(self, order: str = "C") -> float:
+        """Unavoidable per-device HBM reads: params (+ serve caches)."""
+        if order not in self._min_bytes:
+            import jax
+            total = self.param_bytes / self.n_devices
+            if self.step in ("prefill", "decode"):
+                cb = sum(math.prod(x.shape) * x.dtype.itemsize
+                         for x in jax.tree.leaves(self.abstract_caches(order)))
+                total += cb / self.n_devices
+            self._min_bytes[order] = total
+        return self._min_bytes[order]
+
+    # -- Tier 1: the per-candidate tail ------------------------------------
+    def lower(self, plan, verbose: bool = False) -> Tuple[object, object]:
+        """Apply ``plan``: derive shardings, lower, compile, analyze.
+
+        Returns ``(compiled, RooflineReport)``.  This is the only method
+        that pays an XLA compile.
+        """
+        if isinstance(self.mesh, AbstractMesh):
+            raise RuntimeError(
+                "cannot lower over an AbstractMesh (no devices); "
+                "fingerprint/prescreen only")
+        import jax
+
+        from ...launch.roofline import analyze, format_report
+        from ...launch.steps import (batch_shardings, build_cell,
+                                     cache_shardings, replicated)
+
+        cell = build_cell(self.model, plan, self.mesh, self.step,
+                          opt_cfg=self.opt_cfg, reuse=self._reuse)
+        rules = cell["rules"]
+        order = cell["order"]
+        b_sh = batch_shardings(rules, self.batch)
+        self.build_count += 1
+
+        t0 = time.time()
+        with self.mesh:
+            if self.step == "train":
+                jitted = jax.jit(
+                    cell["fn"],
+                    in_shardings=(cell["param_shardings"],
+                                  cell["opt_shardings"], b_sh),
+                    out_shardings=(cell["param_shardings"],
+                                   cell["opt_shardings"], None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(cell["abstract_params"],
+                                       cell["abstract_opt"], self.batch)
+            elif self.step == "prefill":
+                caches = self.abstract_caches(order)
+                c_sh = cache_shardings(rules, caches, order)
+                jitted = jax.jit(
+                    cell["fn"],
+                    in_shardings=(cell["param_shardings"], b_sh, c_sh),
+                    out_shardings=(None, c_sh),
+                    donate_argnums=(2,),
+                )
+                lowered = jitted.lower(cell["abstract_params"], self.batch,
+                                       caches)
+            else:  # decode
+                caches = self.abstract_caches(order)
+                c_sh = cache_shardings(rules, caches, order)
+                index = jax.ShapeDtypeStruct((), jax.numpy.int32)
+                jitted = jax.jit(
+                    cell["fn"],
+                    in_shardings=(cell["param_shardings"],
+                                  b_sh["tokens"], c_sh, replicated(rules)),
+                    out_shardings=(None, None, c_sh),
+                    donate_argnums=(2,),
+                )
+                lowered = jitted.lower(cell["abstract_params"],
+                                       self.batch["tokens"], caches, index)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        report = analyze(compiled, hlo_text=hlo, cfg=self.cfg,
+                         shape_spec=self.spec, step=self.step,
+                         arch=self.arch, mesh_desc=self.mesh_desc,
+                         n_devices=self.n_devices,
+                         min_bytes_per_dev=self.min_bytes_per_device(order))
+        report.note = f"lower={t_lower:.1f}s compile={t_compile:.1f}s"
+        if verbose:
+            try:
+                print(compiled.memory_analysis())
+            except Exception as e:  # pragma: no cover
+                print(f"(memory_analysis unavailable: {e})")
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+            print(format_report(report))
+        return compiled, report
+
+    def __repr__(self) -> str:
+        return (f"<CellContext {self.arch} x {self.spec.name} "
+                f"@ {self.mesh_desc} step={self.step} "
+                f"builds={self.build_count}>")

@@ -1,0 +1,272 @@
+"""The tiered evaluation engine.
+
+``EvalEngine.evaluate(mapper_src)`` is the drop-in hot path behind
+``LMCellEvaluator``:
+
+    text LRU  ->  DSL compile  ->  plan fingerprint  ->  plan LRU
+              ->  disk store   ->  full lower+compile (Tier 1 context)
+
+Only the last arrow pays XLA.  Text-distinct but plan-equivalent
+candidates (common under OPRO mutation) hit the plan cache; repeated or
+checkpoint-resumed runs hit the disk store.  ``prescreen`` exposes the
+Tier-2 analytic score for the loop's batch-extras screen.
+
+Full evaluations are serialized behind one lock (JAX lowering is not
+safe to drive from several threads) while every cache tier and the
+prescreen are thread-safe, so a batch of candidates can be screened and
+cache-served concurrently even though compiles stay sequential.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Dict, Optional, Tuple
+
+from ..agent.autoguide import (ErrorCategory, ExecutionReport,
+                               MemoryFootprint, diagnose, report_from_error,
+                               report_from_roofline)
+from ..agent.feedback import Feedback
+from ..dsl.errors import DSLError, ExecutionError
+from .context import CellContext, CellSkipped
+from .fingerprint import text_key
+from .lru import LRUCache
+from .prescreen import PrescreenResult, prescreen_estimate
+from .store import DiskCache
+
+HBM_BYTES = 16 * (1 << 30)   # v5e: 16 GiB per chip
+
+_MISS = object()
+
+
+def screened_feedback(est_s: float, best_s: float, margin: float,
+                      reason: str = "") -> Feedback:
+    """Feedback for a batch extra discarded by the analytic prescreen.
+
+    ``score`` stays ``None``: a screened candidate was never compiled,
+    so it must not claim best-found or perturb the trajectory."""
+    if reason:
+        system = f"Prescreen: candidate screened out -- {reason}."
+    else:
+        system = (f"Prescreen: candidate screened out -- analytic estimate "
+                  f"{est_s * 1e3:.2f} ms/step is more than {margin:g}x the "
+                  f"batch best estimate {best_s * 1e3:.2f} ms/step; "
+                  "full compile skipped.")
+    return Feedback(system=system, score=None)
+
+
+class EvalEngine:
+    """Tiered evaluator for one LM cell (see module docstring)."""
+
+    def __init__(self, arch: str, shape, *, multi_pod: bool = False,
+                 mesh=None, smoke: bool = False, opt_cfg=None,
+                 hbm_limit: float = HBM_BYTES, rule_pack: str = "lm",
+                 cache_size: int = 256, disk_cache: Optional[str] = None):
+        self.arch = arch
+        self.hbm_limit = hbm_limit
+        self.rule_pack = rule_pack
+        self.ctx: Optional[CellContext] = None
+        self.skip_reason: Optional[str] = None
+        try:
+            self.ctx = CellContext.build(arch, shape, multi_pod=multi_pod,
+                                         mesh=mesh, smoke=smoke,
+                                         opt_cfg=opt_cfg)
+        except CellSkipped as e:
+            self.skip_reason = e.reason
+        self.text_cache = LRUCache(cache_size)    # text key -> Feedback
+        self.plan_cache = LRUCache(cache_size)    # fingerprint -> (fb, rr)
+        self.reports = LRUCache(cache_size)       # text key -> RooflineReport
+        self.disk: Optional[DiskCache] = None
+        if disk_cache:
+            self.disk = DiskCache(disk_cache)
+        self._compile_lock = threading.Lock()
+        self.compile_count = 0
+        self.text_hits = 0
+        self.plan_hits = 0
+        self.disk_hits = 0
+        self.prescreen_count = 0
+
+    # -- persistence --------------------------------------------------------
+    def attach_disk_cache(self, path: str) -> None:
+        """Back the plan cache with an on-disk store.
+
+        A no-op when a store is already attached: an explicitly
+        configured (possibly pre-warmed) ``disk_cache`` must not be
+        silently replaced by the Tuner's checkpoint sidecar.
+        """
+        if self.disk is not None:
+            return
+        self.disk = DiskCache(path)
+
+    @staticmethod
+    def _encode(fb: Feedback, roofline) -> Optional[Dict]:
+        try:
+            payload = {
+                "feedback": {
+                    "system": fb.system, "explain": fb.explain,
+                    "suggest": fb.suggest, "score": fb.score,
+                    "report": fb.report.to_dict() if fb.report else None,
+                },
+                "roofline": (json.loads(roofline.to_json())
+                             if roofline is not None else None),
+            }
+            json.dumps(payload, allow_nan=False)   # refuse NaN/inf payloads
+            return payload
+        except (TypeError, ValueError):
+            return None
+
+    @staticmethod
+    def _decode(payload: Dict) -> Tuple[Feedback, object]:
+        from ...launch.roofline import RooflineReport
+        f = payload["feedback"]
+        fb = Feedback(
+            system=f["system"], explain=f.get("explain", ""),
+            suggest=f.get("suggest", ""), score=f.get("score"),
+            report=(ExecutionReport.from_dict(f["report"])
+                    if f.get("report") else None))
+        rr = payload.get("roofline")
+        roofline = RooflineReport(**rr) if rr else None
+        return fb, roofline
+
+    # -- the hot path -------------------------------------------------------
+    def evaluate(self, mapper_src: str) -> Feedback:
+        tkey = text_key(mapper_src)
+        fb = self.text_cache.get(tkey, _MISS)
+        if fb is not _MISS:
+            self.text_hits += 1
+            return fb
+
+        if self.skip_reason is not None:
+            xr = ExecutionReport(
+                category=ErrorCategory.EXECUTION,
+                message="Execution Error: " + self.skip_reason,
+                substrate=self.rule_pack)
+            fb = diagnose(xr, pack=self.rule_pack)
+            self.text_cache.put(tkey, fb)
+            return fb
+
+        # Tier 0a: DSL compile (cheap; errors never reach the plan tier)
+        try:
+            plan = self.ctx.compile_mapper(mapper_src)
+            # hbm_limit is part of the key: it decides the OOM verdict
+            # baked into the cached Feedback.
+            fingerprint = self.ctx.fingerprint(
+                plan, {"hbm_limit": self.hbm_limit})
+        except DSLError as e:
+            fb = diagnose(report_from_error(e, substrate=self.rule_pack),
+                          pack=self.rule_pack)
+            self.text_cache.put(tkey, fb)
+            return fb
+        except Exception as e:   # canonicalization = execution failure
+            fb = diagnose(report_from_error(ExecutionError(str(e)[:500]),
+                                            substrate=self.rule_pack),
+                          pack=self.rule_pack)
+            self.text_cache.put(tkey, fb)
+            return fb
+
+        # Tier 0b: plan-fingerprint LRU, then the disk store
+        hit = self._lookup(fingerprint, count=True)
+        if hit is not None:
+            return self._settle(tkey, hit)
+
+        with self._compile_lock:
+            # another thread may have compiled this plan while we waited
+            hit = self._lookup(fingerprint, count=False)
+            if hit is not None:
+                return self._settle(tkey, hit)
+            entry = self._full_eval(plan)
+            self.plan_cache.put(fingerprint, entry)
+            if self.disk is not None:
+                payload = self._encode(*entry)
+                if payload is not None:
+                    self.disk.put(fingerprint, payload)
+        return self._settle(tkey, entry)
+
+    __call__ = evaluate
+
+    def _lookup(self, fingerprint: str, count: bool):
+        entry = self.plan_cache.get(fingerprint, _MISS)
+        if entry is not _MISS:
+            if count:
+                self.plan_hits += 1
+            return entry
+        if self.disk is not None:
+            payload = self.disk.get(fingerprint)
+            if payload is not None:
+                try:
+                    entry = self._decode(payload)
+                except Exception:
+                    return None    # unreadable entry: re-evaluate
+                if count:
+                    self.disk_hits += 1
+                self.plan_cache.put(fingerprint, entry)
+                return entry
+        return None
+
+    def _settle(self, tkey: str, entry) -> Feedback:
+        fb, roofline = entry
+        self.text_cache.put(tkey, fb)
+        if roofline is not None:
+            self.reports.put(tkey, roofline)
+        return fb
+
+    def _full_eval(self, plan):
+        """Tier 1: the only path that pays an XLA lower+compile."""
+        roofline = None
+        try:
+            self.compile_count += 1
+            _, report = self.ctx.lower(plan)
+            if (report.peak_memory_bytes or 0) > self.hbm_limit:
+                gib = report.peak_memory_bytes / (1 << 30)
+                xr = ExecutionReport(
+                    category=ErrorCategory.RESOURCE,
+                    message=(f"Execution Error: out of memory -- peak HBM "
+                             f"{gib:.1f} GiB exceeds HBM capacity "
+                             f"{self.hbm_limit / (1 << 30):.0f} GiB per "
+                             "chip."),
+                    substrate=self.rule_pack,
+                    memory=MemoryFootprint(
+                        peak_bytes_per_device=report.peak_memory_bytes,
+                        limit_bytes_per_device=self.hbm_limit))
+            else:
+                xr = report_from_roofline(report, hbm_limit=self.hbm_limit)
+                roofline = report
+        except DSLError as e:
+            xr = report_from_error(e, substrate=self.rule_pack)
+        except Exception as e:  # sharding/lowering failures = execution
+            xr = report_from_error(ExecutionError(str(e)[:500]),
+                                   substrate=self.rule_pack)
+        return diagnose(xr, pack=self.rule_pack), roofline
+
+    # -- Tier 2 -------------------------------------------------------------
+    def prescreen(self, mapper_src: str) -> Optional[PrescreenResult]:
+        """Analytic score without compiling; ``None`` when the mapper
+        cannot be scored analytically (e.g. it does not DSL-compile) --
+        the caller should fall back to full evaluation, which surfaces
+        the real diagnostic cheaply."""
+        self.prescreen_count += 1
+        if self.skip_reason is not None:
+            return PrescreenResult(score=float("inf"),
+                                   reason=self.skip_reason)
+        try:
+            plan = self.ctx.compile_mapper(mapper_src)
+            canon = self.ctx.canonical(plan)
+        except Exception:
+            return None
+        return prescreen_estimate(self.ctx, canon, hbm_limit=self.hbm_limit)
+
+    # -- introspection ------------------------------------------------------
+    def report_for(self, mapper_src: str):
+        return self.reports.get(text_key(mapper_src))
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "compiles": self.compile_count,
+            "text_hits": self.text_hits,
+            "plan_hits": self.plan_hits,
+            "disk_hits": self.disk_hits,
+            "prescreens": self.prescreen_count,
+            "text_cache": self.text_cache.stats(),
+            "plan_cache": self.plan_cache.stats(),
+            "disk_entries": len(self.disk) if self.disk is not None else 0,
+        }

@@ -1,0 +1,90 @@
+"""Tier 0: plan canonicalization and fingerprinting.
+
+Mapple's observation (PAPERS.md): mapping decisions compile down to a
+small canonical plan, and two textually different mappers whose plans
+canonicalize identically are the *same* candidate -- under OPRO-style
+mutation this happens constantly (reordered statements, comments,
+redundant statements shadowed by later ones, distinct index-map bodies
+that materialize the same device table).
+
+We canonicalize by evaluating exactly what the backend consumes, not
+the statement list: the :class:`~repro.parallel.sharding.AxisRules`
+derived by ``rules_from_plan`` (axis routing, remat policy, microbatch
+count, layouts, weight placement, attention impl), the KV-cache order,
+and -- for MoE cells -- the materialized expert->device table.  Anything
+that cannot change the lowered HLO is excluded by construction, so the
+fingerprint is a sound cache key for compiled artifacts.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict
+from typing import Dict, Optional
+
+#: Bump when the canonical form changes; invalidates disk caches.
+FINGERPRINT_VERSION = 1
+
+
+def _axes(tgt) -> Optional[list]:
+    if tgt is None:
+        return None
+    if isinstance(tgt, str):
+        return [tgt]
+    return list(tgt)
+
+
+def canonical_plan(plan, mesh, step: str, *,
+                   num_experts: int = 0) -> Dict:
+    """Reduce a compiled :class:`MappingPlan` to the canonical dict of
+    backend-visible decisions for ``step``.
+
+    ``mesh`` only needs ``axis_names`` (a real jax mesh or any stand-in
+    with that attribute), so canonicalization never touches device
+    state.  ``num_experts`` > 0 additionally materializes the expert
+    index map as an expert->device table -- the canonical form of the
+    paper's ``IndexTaskMap`` statement.
+    """
+    from ..mapping.lm_bridge import cache_order_from_plan, rules_from_plan
+
+    rules = rules_from_plan(plan, mesh, step)
+    canon = {
+        "step": step,
+        "rules": {ax: _axes(tgt) for ax, tgt in sorted(rules.rules.items())},
+        "remat": rules.remat,
+        "microbatches": int(rules.microbatches),
+        "layouts": {role: asdict(spec)
+                    for role, spec in sorted(rules.layouts.items())},
+        "placements": dict(sorted(rules.placements.items())),
+        "attn_impl": getattr(rules, "attn_impl", None),
+        "cache_order": cache_order_from_plan(plan),
+    }
+    if num_experts:
+        if plan.index_map_name("experts") is None:
+            canon["expert_table"] = None
+        else:
+            # expert i -> flat device id; equal tables mean equal
+            # permutations regardless of the index-map function body.
+            table = plan.device_table("experts", (int(num_experts),))
+            canon["expert_table"] = [int(d) for d in table.tolist()]
+    return canon
+
+
+def plan_fingerprint(canon: Dict, cell: Dict) -> str:
+    """Content hash of a canonical plan in a cell identity.
+
+    ``cell`` pins everything outside the mapper that affects the
+    compiled artifact: arch, shape, step, mesh geometry.  The version
+    field invalidates persisted entries when the canonical form evolves.
+    """
+    blob = json.dumps({"v": FINGERPRINT_VERSION, "cell": cell,
+                       "plan": canon},
+                      sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def text_key(mapper_src: str) -> str:
+    """Exact-source cache key (the pre-engine behaviour, kept as the
+    cheapest tier: an identical proposal needs no DSL compile at all)."""
+    return hashlib.sha1(mapper_src.encode()).hexdigest()

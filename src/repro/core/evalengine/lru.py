@@ -1,0 +1,87 @@
+"""Bounded, thread-safe LRU cache.
+
+Every cache on the tuning hot path routes through this class so long
+runs stop growing memory without limit: the evaluator feedback caches,
+the plan-fingerprint cache, and the report store are all bounded, and
+each keeps hit/miss/eviction counters for the throughput benchmark.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Dict, Iterator, Optional
+
+_MISSING = object()
+
+
+class LRUCache:
+    """An ``OrderedDict``-backed LRU with a hard ``maxsize``.
+
+    ``get`` refreshes recency; ``put`` evicts the least-recently-used
+    entry once the cache is full.  All operations hold one lock, so the
+    cache is safe to share between the loop's evaluation threads.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.RLock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default: Any = None) -> Any:
+        with self._lock:
+            val = self._data.get(key, _MISSING)
+            if val is _MISSING:
+                self.misses += 1
+                return default
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+            self._data[key] = value
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __iter__(self) -> Iterator:
+        with self._lock:
+            return iter(list(self._data))
+
+    def peek(self, key, default: Any = None) -> Any:
+        """Read without refreshing recency or touching the counters."""
+        with self._lock:
+            val = self._data.get(key, _MISSING)
+            return default if val is _MISSING else val
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"size": len(self._data), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (f"<LRUCache {s['size']}/{s['maxsize']} "
+                f"hits={s['hits']} misses={s['misses']} "
+                f"evictions={s['evictions']}>")

@@ -1,0 +1,132 @@
+"""Tier 2: analytic prescreen -- score a canonical plan without XLA.
+
+OPTIMAS-style analytics-informed prescreening (PAPERS.md): an optimizer
+can discard losers without paying full evaluation cost.  The estimate
+uses the same roofline constants as the full evaluator
+(:mod:`repro.launch.roofline`) but derives the three terms from the
+canonical plan + model config analytically:
+
+* **compute** -- ``MODEL_FLOPS / (n_devices * PEAK_FLOPS)``: the ideal
+  compute roofline (plan-independent).
+* **memory** -- unavoidable per-device HBM reads given the plan's weight
+  sharding (replicated weights read the *whole* parameter set per
+  device) plus serve caches.
+* **collective** -- ring-model estimate of TP activation all-reduces and
+  FSDP parameter all-gathers.
+
+The estimate is deliberately *optimistic* (a lower bound up to the
+collective term): prescreening keeps any candidate that could plausibly
+win and only screens out clear losers, so a false overestimate never
+kills a winner silently -- the margin policy in ``run_loop`` compares
+against the batch's best estimate.  A predicted HBM overflow (with a
+generous 1.25x slack over the limit) returns ``inf``: those candidates
+would only compile to an OOM Execution Error.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class PrescreenResult:
+    """Analytic score for one candidate (seconds/step; lower better)."""
+
+    score: float                      # inf = predicted resource failure
+    reason: str = ""                  # non-empty when score is inf
+    terms: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def viable(self) -> bool:
+        return math.isfinite(self.score)
+
+
+#: Approximate live-activation fraction per remat policy (vs no remat).
+_REMAT_ACT_FACTOR = {"none": 4.0, "block": 1.0, "dots": 0.75,
+                     "full": 0.5, "offload": 0.25}
+
+#: Slack over the HBM limit before the screen predicts OOM -- the
+#: analytic peak is rough, and a false kill costs search quality while a
+#: false pass only costs one compile.
+OOM_SLACK = 1.25
+
+
+def prescreen_estimate(ctx, canon: Dict,
+                       hbm_limit: Optional[float] = None) -> PrescreenResult:
+    """Estimate step time for ``canon`` (a canonical plan of ``ctx``'s
+    cell) from the roofline constants alone -- no lowering, no compile."""
+    from ...launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, \
+        model_flops_for
+
+    cfg, spec, step = ctx.cfg, ctx.spec, ctx.step
+    mesh_shape = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    model_ax = mesh_shape.get("model", 1)
+    n_dev = ctx.n_devices
+    dtype_bytes = 2.0   # bf16 weights/activations
+
+    rules = canon.get("rules", {})
+    fsdp = rules.get("d_model") == ["data"] and data > 1
+    wide = ("heads", "ffn", "experts", "vocab", "rnn")
+    tp = model_ax > 1 and any(rules.get(ax) == ["model"] for ax in wide)
+    micro = max(1, int(canon.get("microbatches", 1)))
+    remat = canon.get("remat", "none")
+
+    # -- weight bytes actually resident per device -------------------------
+    shard = 1.0
+    if fsdp:
+        shard *= data
+    if tp:
+        shard *= model_ax
+    params_dev = ctx.param_bytes / shard
+
+    cache_dev = 0.0
+    if step in ("prefill", "decode"):
+        order = canon.get("cache_order", "C")
+        cache_dev = max(ctx.min_bytes_per_device(order)
+                        - ctx.param_bytes / n_dev, 0.0)
+
+    # -- the three roofline terms ------------------------------------------
+    compute_s = model_flops_for(cfg, spec, step) / (n_dev * PEAK_FLOPS)
+    memory_s = (params_dev + cache_dev) / HBM_BW
+
+    seq = spec.seq_len if step in ("train", "prefill") else 1
+    b_local = spec.global_batch / data
+    coll_bytes = 0.0
+    if tp:
+        # ~2 sharded blocks/layer, each all-reducing a [b_local, seq,
+        # d_model] activation; all-reduce ring factor 2.
+        coll_bytes += (2.0 * 2.0 * b_local * seq * cfg.d_model
+                       * dtype_bytes * cfg.num_layers)
+    if fsdp:
+        # every (micro)batch re-gathers the device's parameter shard.
+        gathers = micro if step == "train" else 1
+        coll_bytes += ctx.param_bytes / (model_ax if tp else 1) * gathers
+    collective_s = coll_bytes / ICI_BW
+
+    # -- predicted peak HBM -------------------------------------------------
+    n_local = params_dev / dtype_bytes     # parameter count per device
+    if step == "train":
+        # bf16 params + f32 adam (m, v) + f32 grads
+        peak = params_dev + n_local * 8.0 + n_local * 4.0
+        act_factor = _REMAT_ACT_FACTOR.get(remat, 1.0)
+        peak += (b_local / micro) * seq * cfg.d_model * dtype_bytes \
+            * cfg.num_layers * act_factor
+    else:
+        peak = params_dev + cache_dev \
+            + b_local * seq * cfg.d_model * dtype_bytes * 2.0
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "peak_bytes_est": peak,
+             "params_bytes_per_device": params_dev}
+    if hbm_limit is not None and peak > OOM_SLACK * hbm_limit:
+        return PrescreenResult(
+            score=float("inf"),
+            reason=(f"predicted out of memory: ~{peak / (1 << 30):.1f} GiB "
+                    f"per device estimated vs HBM capacity "
+                    f"{hbm_limit / (1 << 30):.0f} GiB"),
+            terms=terms)
+    return PrescreenResult(score=max(compute_s, memory_s, collective_s),
+                           terms=terms)

@@ -1,0 +1,68 @@
+"""On-disk fingerprint store (Tier 0 persistence).
+
+A small sqlite3 table mapping plan fingerprints to JSON payloads, so a
+checkpoint-resumed run -- or a repeated run over the same cell -- skips
+XLA compiles entirely.  sqlite is stdlib, transactional (two tuning
+processes can share a store), and one file per tuning session keeps
+cleanup trivial: the Tuner derives the path from the checkpoint path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+from typing import Dict, Optional
+
+
+class DiskCache:
+    """Persistent ``fingerprint -> JSON dict`` store backed by sqlite."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._lock = threading.RLock()
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        with self._lock:
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS entries ("
+                "  key TEXT PRIMARY KEY,"
+                "  payload TEXT NOT NULL)")
+            self._conn.commit()
+
+    def get(self, key: str) -> Optional[Dict]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT payload FROM entries WHERE key = ?",
+                (key,)).fetchone()
+        if row is None:
+            return None
+        try:
+            return json.loads(row[0])
+        except json.JSONDecodeError:
+            return None   # corrupt entry: treat as a miss
+
+    def put(self, key: str, payload: Dict) -> None:
+        blob = json.dumps(payload, allow_nan=False)
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO entries (key, payload) "
+                "VALUES (?, ?)", (key, blob))
+            self._conn.commit()
+
+    def __contains__(self, key: str) -> bool:
+        return self.get(key) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return int(self._conn.execute(
+                "SELECT COUNT(*) FROM entries").fetchone()[0])
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+    def __repr__(self) -> str:
+        return f"<DiskCache {self.path!r} entries={len(self)}>"

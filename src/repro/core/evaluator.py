@@ -8,89 +8,91 @@ then renders it through the substrate's diagnostic rule pack
 ``Feedback`` is the rendered view; the report rides on
 ``Feedback.report`` for checkpoints, prompts, and credit assignment.
 
-``LMCellEvaluator`` is the production evaluator: compile the mapped step
-for an (arch x shape) cell on the production mesh (dry-run; deterministic,
-like the paper's controlled environment) and score it by the dominant
-roofline term.  Compile errors and HBM overflows map to the paper's
-Compile/Execution error feedback categories.
+``LMCellEvaluator`` is the production evaluator: it fronts the tiered
+:class:`~repro.core.evalengine.EvalEngine` -- plan-fingerprint caching
+(text-distinct but plan-equivalent mappers are cache hits), a persistent
+:class:`~repro.core.evalengine.CellContext` (the config/Model/step graph
+is built once per cell), an optional on-disk store, and an analytic
+prescreen -- and scores surviving candidates by the dominant roofline
+term of the compiled step on the production mesh (dry-run;
+deterministic, like the paper's controlled environment).  Compile errors
+and HBM overflows map to the paper's Compile/Execution error feedback
+categories.
 
 ``CallableEvaluator`` wraps any mapper -> seconds function (used by the
 scientific apps and matmul benchmarks, which measure wall time on host
 devices); its ``pack`` field picks the rule pack ('app' or 'matmul').
+Both evaluators bound their caches with the engine's LRU so long tuning
+runs stop growing memory without limit.
 """
 
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
-from .agent.autoguide import (ErrorCategory, ExecutionReport,
-                              MemoryFootprint, diagnose, report_from_error,
-                              report_from_metric, report_from_roofline)
 from .agent.feedback import Feedback
 from .dsl.errors import DSLError, ExecutionError
+from .evalengine import LRUCache
+from .evalengine.engine import HBM_BYTES  # noqa: F401  (re-export)
+from .evalengine.fingerprint import text_key
 
-HBM_BYTES = 16 * (1 << 30)   # v5e: 16 GiB per chip
 
-
-@dataclass
 class LMCellEvaluator:
-    arch: str
-    shape: str
-    multi_pod: bool = False
-    hbm_limit: float = HBM_BYTES
-    cache: Dict[str, Feedback] = field(default_factory=dict)
-    reports: Dict[str, object] = field(default_factory=dict)
-    compile_count: int = 0
+    """Evaluate LM-cell mappers through the tiered evaluation engine.
 
-    def __post_init__(self):
-        from ..launch.mesh import make_production_mesh
-        self._mesh = make_production_mesh(multi_pod=self.multi_pod)
+    Constructor knobs beyond the cell identity:
+
+    * ``cache_size`` -- bound for each in-memory LRU tier.
+    * ``disk_cache`` -- path of a persistent fingerprint store (sqlite);
+      also attachable later via :meth:`attach_disk_cache` (the Tuner
+      does this for checkpointed runs).
+    * ``prescreen_margin`` -- batch extras whose analytic estimate
+      exceeds ``margin x`` the batch's best estimate are screened out
+      of full compilation by ``run_loop``.
+    * ``smoke`` / ``mesh`` -- test-scale cells: the arch's smoke config
+      on a host mesh (or an explicit mesh) instead of the production
+      dry-run mesh.
+    """
+
+    def __init__(self, arch: str, shape, multi_pod: bool = False,
+                 hbm_limit: float = HBM_BYTES, *, cache_size: int = 256,
+                 disk_cache: Optional[str] = None, smoke: bool = False,
+                 mesh=None, prescreen_margin: float = 2.0):
+        from .evalengine import EvalEngine
+        self.arch = arch
+        self.shape = shape
+        self.multi_pod = multi_pod
+        self.hbm_limit = hbm_limit
+        self.prescreen_margin = prescreen_margin
+        self.engine = EvalEngine(arch, shape, multi_pod=multi_pod,
+                                 mesh=mesh, smoke=smoke,
+                                 hbm_limit=hbm_limit, rule_pack="lm",
+                                 cache_size=cache_size,
+                                 disk_cache=disk_cache)
 
     def __call__(self, mapper_src: str) -> Feedback:
-        key = hashlib.sha1(mapper_src.encode()).hexdigest()
-        if key in self.cache:
-            return self.cache[key]
-        from ..launch.dryrun import lower_cell
-        try:
-            self.compile_count += 1
-            _, report = lower_cell(self.arch, self.shape,
-                                   multi_pod=self.multi_pod,
-                                   mapper_src=mapper_src, mesh=self._mesh,
-                                   verbose=False)
-            if isinstance(report, dict) and report.get("skipped"):
-                xr = ExecutionReport(
-                    category=ErrorCategory.EXECUTION,
-                    message="Execution Error: " + report["skipped"],
-                    substrate="lm")
-            elif (report.peak_memory_bytes or 0) > self.hbm_limit:
-                gib = report.peak_memory_bytes / (1 << 30)
-                xr = ExecutionReport(
-                    category=ErrorCategory.RESOURCE,
-                    message=(f"Execution Error: out of memory -- peak HBM "
-                             f"{gib:.1f} GiB exceeds HBM capacity "
-                             f"{self.hbm_limit / (1 << 30):.0f} GiB per "
-                             "chip."),
-                    substrate="lm",
-                    memory=MemoryFootprint(
-                        peak_bytes_per_device=report.peak_memory_bytes,
-                        limit_bytes_per_device=self.hbm_limit))
-            else:
-                xr = report_from_roofline(report, hbm_limit=self.hbm_limit)
-                self.reports[key] = report
-        except DSLError as e:
-            xr = report_from_error(e, substrate="lm")
-        except Exception as e:  # sharding/lowering failures = execution
-            xr = report_from_error(ExecutionError(str(e)[:500]),
-                                   substrate="lm")
-        fb = diagnose(xr, pack="lm")
-        self.cache[key] = fb
-        return fb
+        return self.engine.evaluate(mapper_src)
+
+    def prescreen(self, mapper_src: str):
+        return self.engine.prescreen(mapper_src)
 
     def report_for(self, mapper_src: str):
-        key = hashlib.sha1(mapper_src.encode()).hexdigest()
-        return self.reports.get(key)
+        return self.engine.report_for(mapper_src)
+
+    def attach_disk_cache(self, path: str) -> None:
+        self.engine.attach_disk_cache(path)
+
+    def stats(self):
+        return self.engine.stats()
+
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    @property
+    def cache(self) -> LRUCache:
+        return self.engine.text_cache
 
 
 @dataclass
@@ -100,12 +102,20 @@ class CallableEvaluator:
     fn: Callable[[str], float]
     metric_name: str = "Execution time"
     pack: str = "app"
-    cache: Dict[str, Feedback] = field(default_factory=dict)
+    cache_size: int = 4096
+    cache: LRUCache = field(default=None)
+
+    def __post_init__(self):
+        if self.cache is None:
+            self.cache = LRUCache(self.cache_size)
 
     def __call__(self, mapper_src: str) -> Feedback:
-        key = hashlib.sha1(mapper_src.encode()).hexdigest()
-        if key in self.cache:
-            return self.cache[key]
+        from .agent.autoguide import (diagnose, report_from_error,
+                                      report_from_metric)
+        key = text_key(mapper_src)
+        hit = self.cache.get(key)
+        if hit is not None:
+            return hit
         try:
             t = self.fn(mapper_src)
             xr = report_from_metric(t, metric_name=self.metric_name,
@@ -116,5 +126,5 @@ class CallableEvaluator:
             xr = report_from_error(ExecutionError(str(e)[:500]),
                                    substrate=self.pack)
         fb = diagnose(xr, pack=self.pack)
-        self.cache[key] = fb
+        self.cache.put(key, fb)
         return fb

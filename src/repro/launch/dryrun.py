@@ -1,12 +1,14 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this builds the mapped step function (train_step /
 prefill_step / serve_step) under the DSL mapping plan, lowers it with
 ShapeDtypeStruct inputs (no allocation), compiles it, prints
 memory_analysis() / cost_analysis(), and emits the roofline terms.
+
+The per-cell pipeline lives in
+:class:`repro.core.evalengine.CellContext`; ``lower_cell`` here is the
+one-shot convenience wrapper (the tuning hot path holds a persistent
+context instead of rebuilding one per candidate).
 
 Usage:
     python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
@@ -16,113 +18,31 @@ Usage:
 import argparse
 import json
 import sys
-import time
 import traceback
 
-import jax
-
-from ..configs import (ARCH_IDS, SHAPES, abstract_caches, cell_supported,
-                       get_config, input_specs)
-from ..core.dsl.compiler import compile_mapper
+from ..configs import ARCH_IDS, SHAPES
+from ..core.evalengine import CellContext, CellSkipped
 from ..core.mapping.presets import expert_mapper
-from ..models.registry import Model
-from ..train.optim import AdamWConfig
-from .mesh import machine_factory_for_mesh, make_production_mesh
-from .roofline import analyze, format_report
-from .steps import batch_shardings, build_cell, cache_shardings, replicated
+from .mesh import ensure_host_device_count, make_production_mesh
 
 
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                mapper_src: str = None, mesh=None, verbose: bool = True,
                opt_cfg=None):
     """Build + lower + compile one cell.  Returns (compiled, report)."""
-    cfg = get_config(arch)
-    skip = cell_supported(cfg, shape_name)
-    if skip:
-        return None, {"arch": arch, "shape": shape_name, "skipped": skip}
-    sspec = SHAPES[shape_name]
-    step_kind = sspec.step
-    if mesh is None:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-    mesh_desc = "x".join(str(s) for s in mesh.devices.shape)
+    try:
+        ctx = CellContext.build(arch, shape_name, multi_pod=multi_pod,
+                                mesh=mesh, opt_cfg=opt_cfg)
+    except CellSkipped as e:
+        return None, {"arch": arch, "shape": shape_name, "skipped": e.reason}
     if mapper_src is None:
-        mapper_src = expert_mapper(arch, step_kind)
-    plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
-    model = Model(cfg)
-    cell = build_cell(model, plan, mesh, step_kind, opt_cfg=opt_cfg)
-    rules = cell["rules"]
-    batch = input_specs(cfg, shape_name)
-    b_sh = batch_shardings(rules, batch)
-
-    t0 = time.time()
-    with mesh:
-        if step_kind == "train":
-            jitted = jax.jit(
-                cell["fn"],
-                in_shardings=(cell["param_shardings"], cell["opt_shardings"],
-                              b_sh),
-                out_shardings=(cell["param_shardings"], cell["opt_shardings"],
-                               None),
-                donate_argnums=(0, 1),
-            )
-            lowered = jitted.lower(cell["abstract_params"],
-                                   cell["abstract_opt"], batch)
-        elif step_kind == "prefill":
-            caches = abstract_caches(cfg, shape_name, cell["order"])
-            c_sh = cache_shardings(rules, caches, cell["order"])
-            jitted = jax.jit(
-                cell["fn"],
-                in_shardings=(cell["param_shardings"], b_sh, c_sh),
-                out_shardings=(None, c_sh),
-                donate_argnums=(2,),
-            )
-            lowered = jitted.lower(cell["abstract_params"], batch, caches)
-        else:  # decode
-            caches = abstract_caches(cfg, shape_name, cell["order"])
-            c_sh = cache_shardings(rules, caches, cell["order"])
-            index = jax.ShapeDtypeStruct((), jax.numpy.int32)
-            jitted = jax.jit(
-                cell["fn"],
-                in_shardings=(cell["param_shardings"], b_sh["tokens"], c_sh,
-                              replicated(rules)),
-                out_shardings=(None, None, c_sh),
-                donate_argnums=(2,),
-            )
-            lowered = jitted.lower(cell["abstract_params"], batch["tokens"],
-                                   caches, index)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-
-    hlo = compiled.as_text()
-    # unavoidable per-device HBM reads: params (+ caches for serve steps)
-    from ..models.params import param_bytes as _pb
-    import math as _math
-    min_bytes = _pb(model.specs) / mesh.devices.size
-    if step_kind in ("prefill", "decode"):
-        cb = sum(_math.prod(x.shape) * x.dtype.itemsize
-                 for x in jax.tree.leaves(abstract_caches(cfg, shape_name)))
-        min_bytes += cb / mesh.devices.size
-    report = analyze(compiled, hlo_text=hlo, cfg=cfg, shape_spec=sspec,
-                     step=step_kind, arch=arch, mesh_desc=mesh_desc,
-                     n_devices=mesh.devices.size,
-                     min_bytes_per_dev=min_bytes)
-    report.note = f"lower={t_lower:.1f}s compile={t_compile:.1f}s"
-    if verbose:
-        try:
-            print(compiled.memory_analysis())
-        except Exception as e:  # pragma: no cover
-            print(f"(memory_analysis unavailable: {e})")
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
-        print({k: ca[k] for k in ("flops", "bytes accessed")
-               if k in ca})
-        print(format_report(report))
-    return compiled, report
+        mapper_src = expert_mapper(arch, ctx.step)
+    plan = ctx.compile_mapper(mapper_src)
+    return ctx.lower(plan, verbose=verbose)
 
 
 def main(argv=None):
+    ensure_host_device_count(512)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=tuple(SHAPES))

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Performance hillclimbing on an LM cell (the §Perf loop): the paper's
 agent + feedback machinery applied to the production-mesh dry-run.
 
@@ -20,11 +17,15 @@ from ..configs import ARCH_IDS, SHAPES
 from ..core.agent import MapperAgent, SEARCHES
 from ..core.evaluator import LMCellEvaluator
 from ..core.mapping import space
+from .mesh import ensure_host_device_count
 
 
 def run(arch: str, shape: str, algo: str = "trace", iters: int = 12,
         seed: int = 0, multi_pod: bool = False, out=None,
         start: str = "expert"):
+    # entry point: the production mesh needs 512 host devices (appended
+    # to any user-set XLA_FLAGS, never clobbering them)
+    ensure_host_device_count(512)
     ev = LMCellEvaluator(arch, shape, multi_pod=multi_pod)
     if start == "expert":
         # the per-arch expert mapper's decisions (the §Perf baseline)
@@ -90,7 +91,10 @@ def run(arch: str, shape: str, algo: str = "trace", iters: int = 12,
         if best[2] is not None:
             log(f"roofline_fraction={best[2].roofline_fraction:.4f} "
                 f"bottleneck={best[2].bottleneck}")
-    log(f"\ncompiles: {ev.compile_count}")
+    st = ev.stats()
+    log(f"\ncompiles: {ev.compile_count} "
+        f"(text hits {st['text_hits']}, plan hits {st['plan_hits']}, "
+        f"disk hits {st['disk_hits']})")
     if out:
         with open(out, "w") as f:
             f.write("\n".join(lines))

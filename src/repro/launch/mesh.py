@@ -1,18 +1,36 @@
 """Production mesh construction + the DSL's view of it.
 
 ``make_production_mesh`` is a FUNCTION (importing this module never touches
-jax device state).  The dry-run launcher sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import; smoke tests and benches see the real (1-device) topology.
+jax device state).  Entry points that need the 512-host-device topology
+(dryrun / hillclimb) call :func:`ensure_host_device_count` before first
+device use; smoke tests and benches see the real (1-device) topology.
 """
 
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import numpy as np
 
 from ..core.dsl.machine import MachineSpace, make_machine
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_count(n: int = 512) -> None:
+    """Ask XLA for ``n`` host devices without clobbering user flags.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to any existing
+    ``XLA_FLAGS`` value; a user-supplied device-count flag always wins.
+    Must run before jax initializes its backends, so this is called from
+    entry points (``dryrun.main`` / ``hillclimb.run``) -- never as a
+    module import side effect.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _HOST_COUNT_FLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -144,11 +144,19 @@ def make_serve_step(model: Model, rules: AxisRules, order: str = "C",
 
 # -- bundled builder (dryrun / trainers) ------------------------------------------------
 def build_cell(model: Model, plan, mesh, step_kind: str,
-               opt_cfg: Optional[AdamWConfig] = None):
+               opt_cfg: Optional[AdamWConfig] = None,
+               reuse: Optional[Dict] = None):
     """Resolve everything a cell needs: rules, step fn, shardings.
 
     step_kind: "train" | "prefill" | "decode".
     Returns dict with fn/in_shardings/out_shardings factories.
+
+    ``reuse`` is an optional dict a persistent caller (the evaluation
+    engine's :class:`~repro.core.evalengine.CellContext`) passes on every
+    call for the same (model, step) pair: the plan-independent pieces
+    (abstract params/axes, the traced optimizer-state shapes) are
+    computed once and read from it afterwards, so per-candidate work is
+    only the plan-dependent sharding resolution.
     """
     rules = rules_from_plan(plan, mesh, step_kind)
     order = cache_order_from_plan(plan)
@@ -157,8 +165,13 @@ def build_cell(model: Model, plan, mesh, step_kind: str,
     if cfg.num_experts:
         perm = expert_permutation(plan, cfg.num_experts,
                                   mesh.devices.size)
-    abstract = model.abstract_params()
-    axes = model.param_axes()
+    if reuse is None:
+        reuse = {}
+    if "abstract" not in reuse:
+        reuse["abstract"] = model.abstract_params()
+        reuse["axes"] = model.param_axes()
+    abstract = reuse["abstract"]
+    axes = reuse["axes"]
     p_sh = param_shardings(axes, rules, abstract)
     out = {
         "rules": rules,
@@ -168,7 +181,9 @@ def build_cell(model: Model, plan, mesh, step_kind: str,
         "moe_perm": perm,
     }
     if step_kind == "train":
-        opt_abstract = jax.eval_shape(adamw_init, abstract)
+        if "abstract_opt" not in reuse:
+            reuse["abstract_opt"] = jax.eval_shape(adamw_init, abstract)
+        opt_abstract = reuse["abstract_opt"]
         m_sh = param_shardings(axes, rules, opt_abstract.m)
         opt_sh = AdamWState(step=replicated(rules), m=m_sh, v=m_sh)
         out["abstract_opt"] = opt_abstract

@@ -1,0 +1,384 @@
+"""Tiered evaluation engine (repro.core.evalengine).
+
+Fast tests cover the pure tiers: the bounded LRU, plan
+canonicalization/fingerprinting (over a device-less AbstractMesh --
+production geometry, no compiles), the disk store (including a
+fresh-process read), the analytic prescreen's discrimination at
+production geometry, and the loop's screen routing.
+
+Tests marked ``slow`` compile a smoke-scale cell in-process and cover
+the end-to-end guarantees: plan-equivalent candidates never recompile,
+prescreen agrees with the full compile's score on the same cell, disk
+caches survive an evaluator restart, and a checkpoint-resumed Tuner
+session reproduces the uninterrupted trajectory with a warm cache.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from concurrent.futures import ThreadPoolExecutor
+
+import pytest
+
+from repro.core.evalengine import (AbstractMesh, CellContext, CellSkipped,
+                                   DiskCache, LRUCache)
+from repro.core.evalengine.engine import HBM_BYTES, screened_feedback
+from repro.core.evalengine.prescreen import PrescreenResult, \
+    prescreen_estimate
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+# ---------------------------------------------------------------------------
+# LRU
+# ---------------------------------------------------------------------------
+def test_lru_eviction_and_stats():
+    c = LRUCache(maxsize=3)
+    for i in range(5):
+        c.put(i, i * 10)
+    assert len(c) == 3
+    assert 0 not in c and 1 not in c          # oldest two evicted
+    assert c.get(2) == 20                      # refreshes recency
+    c.put(5, 50)                               # evicts 3, not 2
+    assert 3 not in c and 2 in c
+    s = c.stats()
+    assert s["evictions"] == 3 and s["hits"] == 1
+
+    with pytest.raises(ValueError):
+        LRUCache(maxsize=0)
+
+
+def test_lru_thread_safety_smoke():
+    c = LRUCache(maxsize=64)
+
+    def hammer(k):
+        for i in range(200):
+            c.put((k, i % 80), i)
+            c.get((k, (i * 7) % 80))
+        return True
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        assert all(pool.map(hammer, range(8)))
+    assert len(c) <= 64
+
+
+# ---------------------------------------------------------------------------
+# Tier 0: canonicalization + fingerprint (production geometry, no devices)
+# ---------------------------------------------------------------------------
+def _prod_ctx(arch="stablelm-1.6b", shape="train_4k"):
+    return CellContext.build(arch, shape,
+                             mesh=AbstractMesh((16, 16), ("data", "model")))
+
+
+BASE = """Task * TP;
+Region step weights TP FBMEM;
+Region step activations TP REMAT;
+Region decode kv_cache TP FBMEM;
+Layout decode kv_cache * C_order;
+"""
+
+
+def test_fingerprint_equal_for_text_distinct_equivalent_mappers():
+    ctx = _prod_ctx()
+    base_fp = ctx.fingerprint(ctx.compile_mapper(BASE))
+    # comments, whitespace, statement order, and a shadowed duplicate
+    # statement are all textually distinct but plan-equivalent
+    variants = [
+        BASE + "\n# a trailing comment\n",
+        BASE.replace("Task * TP;", "Task * TP;   # all stages TP"),
+        ("Region step weights TP FBMEM;\nTask * TP;\n"
+         "Region step activations TP REMAT;\n"
+         "Region decode kv_cache TP FBMEM;\n"
+         "Layout decode kv_cache * C_order;\n"),
+        # duplicate Region: the later identical statement wins harmlessly
+        BASE + "Region step weights TP FBMEM;\n",
+    ]
+    for v in variants:
+        assert v != BASE
+        assert ctx.fingerprint(ctx.compile_mapper(v)) == base_fp, v
+
+
+def test_fingerprint_distinguishes_semantic_changes():
+    ctx = _prod_ctx()
+    base_fp = ctx.fingerprint(ctx.compile_mapper(BASE))
+    different = [
+        BASE.replace("Region step weights TP FBMEM;",
+                     "Region step weights TP ZCMEM;"),     # REPL weights
+        BASE + "InstanceLimit step 8;\n",                   # microbatches
+        BASE.replace("Layout decode kv_cache * C_order;",
+                     "Layout decode kv_cache * F_order;"),  # cache order
+        BASE.replace("Task * TP;", "Task attention SP;\nTask mlp TP;"),
+    ]
+    fps = [ctx.fingerprint(ctx.compile_mapper(m)) for m in different]
+    assert base_fp not in fps
+    assert len(set(fps)) == len(fps)
+
+
+def test_fingerprint_canonicalizes_expert_index_maps():
+    # MoE cell: two index-map *bodies* with different names/comments that
+    # materialize the same expert->device table fingerprint identically.
+    ctx = _prod_ctx(arch="olmoe-1b-7b")
+    assert ctx.cfg.num_experts
+
+    def moe_mapper(fn_name, extra=""):
+        return (BASE
+                + "mtpu = Machine(TPU);\nmlin = mtpu.merge(0, 1);\n"
+                + f"def {fn_name}(Tuple ipoint, Tuple ispace) {{\n"
+                + "  idx = ipoint % mlin.size;\n"
+                + f"  return mlin[*idx];\n}}\n{extra}"
+                + f"IndexTaskMap experts {fn_name};\n")
+
+    fp_a = ctx.fingerprint(ctx.compile_mapper(moe_mapper("map_a")))
+    fp_b = ctx.fingerprint(ctx.compile_mapper(
+        moe_mapper("map_b", extra="# same table, different name\n")))
+    assert fp_a == fp_b
+    # a genuinely different placement (block vs cyclic) must differ
+    blocked = (BASE
+               + "mtpu = Machine(TPU);\nmlin = mtpu.merge(0, 1);\n"
+               + "def bmap(Tuple ipoint, Tuple ispace) {\n"
+               + "  idx = ipoint * mlin.size / ispace;\n"
+               + "  return mlin[*idx];\n}\n"
+               + "IndexTaskMap experts bmap;\n")
+    assert ctx.fingerprint(ctx.compile_mapper(blocked)) != fp_a
+
+
+def test_cell_key_separates_cells():
+    a = _prod_ctx(shape="train_4k")
+    b = _prod_ctx(shape="prefill_32k")
+    plan_a = a.compile_mapper(BASE)
+    plan_b = b.compile_mapper(BASE)
+    assert a.fingerprint(plan_a) != b.fingerprint(plan_b)
+
+
+def test_cell_key_pins_opt_cfg_and_extra_inputs():
+    from repro.train.optim import AdamWConfig
+    mesh = AbstractMesh((16, 16), ("data", "model"))
+    a = CellContext.build("stablelm-1.6b", "train_4k", mesh=mesh)
+    b = CellContext.build("stablelm-1.6b", "train_4k", mesh=mesh,
+                          opt_cfg=AdamWConfig(lr=1e-5))
+    plan = a.compile_mapper(BASE)
+    # a custom optimizer config is baked into the train step: entries
+    # must not be exchangeable through a shared disk store
+    assert a.fingerprint(plan) != b.fingerprint(b.compile_mapper(BASE))
+    # the engine pins its hbm_limit the same way (OOM verdict changes)
+    assert a.fingerprint(plan, {"hbm_limit": 1}) != \
+        a.fingerprint(plan, {"hbm_limit": 2})
+
+
+def test_skipped_cell_raises_before_mesh_work():
+    with pytest.raises(CellSkipped):
+        CellContext.build("gemma2-27b", "long_500k",
+                          mesh=AbstractMesh((16, 16), ("data", "model")))
+
+
+# ---------------------------------------------------------------------------
+# Disk store
+# ---------------------------------------------------------------------------
+def test_disk_cache_roundtrip_across_fresh_process(tmp_path):
+    path = str(tmp_path / "cache.sqlite")
+    payload = {"feedback": {"system": "Performance Metric: 1.0 ms",
+                            "score": 0.001, "report": None},
+               "roofline": None}
+    DiskCache(path).put("fp123", payload)
+
+    code = f"""
+import sys
+sys.path.insert(0, {SRC!r})
+from repro.core.evalengine import DiskCache
+d = DiskCache({path!r})
+got = d.get("fp123")
+assert got["feedback"]["score"] == 0.001, got
+assert d.get("missing") is None
+print("ROUNDTRIP OK")
+"""
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "ROUNDTRIP OK" in proc.stdout
+
+
+def test_disk_cache_tolerates_corrupt_entries(tmp_path):
+    path = str(tmp_path / "cache.sqlite")
+    d = DiskCache(path)
+    with d._lock:
+        d._conn.execute("INSERT INTO entries VALUES (?, ?)",
+                        ("bad", "{not json"))
+        d._conn.commit()
+    assert d.get("bad") is None      # miss, not crash
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: analytic prescreen (production geometry)
+# ---------------------------------------------------------------------------
+def test_prescreen_discriminates_at_production_geometry():
+    ctx = _prod_ctx()   # full-size 1.6b config, 16x16 geometry
+    good = prescreen_estimate(
+        ctx, ctx.canonical(ctx.compile_mapper(BASE)), hbm_limit=HBM_BYTES)
+    # replicated full-size weights, no TP/FSDP: analytically hopeless
+    bad_src = ("Task * DP;\nRegion step weights TP ZCMEM;\n"
+               "Region step activations TP FBMEM;\n"
+               "Region decode kv_cache TP FBMEM;\n"
+               "Layout decode kv_cache * C_order;\n")
+    bad = prescreen_estimate(
+        ctx, ctx.canonical(ctx.compile_mapper(bad_src)), hbm_limit=HBM_BYTES)
+    assert good.viable and good.score > 0
+    assert (not bad.viable) or bad.score > 2.0 * good.score
+    if not bad.viable:
+        assert "out of memory" in bad.reason
+
+
+def test_screened_feedback_never_scores():
+    fb = screened_feedback(0.5, 0.1, 2.0)
+    assert fb.score is None
+    assert "screened out" in fb.system
+    fb2 = screened_feedback(float("inf"), 0.1, 2.0, reason="predicted OOM")
+    assert fb2.score is None and "predicted OOM" in fb2.system
+
+
+def test_prescreen_extras_screens_only_extras():
+    from repro.core.agent.loop import _prescreen_extras
+
+    def prescreen(text):
+        if text == "unscoreable":
+            return None
+        return PrescreenResult(score=float(len(text)))
+
+    texts = ["aa", "aaaaaaaaaa", "aaa", "unscoreable"]   # primary = "aa"
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        screened = _prescreen_extras(pool, prescreen, texts, margin=2.0)
+    assert 0 not in screened            # the primary is never screened
+    assert 1 in screened                # 10 > 2.0 * best(2)
+    assert 2 not in screened            # 3 <= 4
+    assert 3 not in screened            # unscoreable -> full evaluation
+    assert screened[1].score is None
+
+
+# ---------------------------------------------------------------------------
+# Evaluator plumbing that needs no compile
+# ---------------------------------------------------------------------------
+def test_skipped_cell_evaluator_feedback_and_prescreen():
+    from repro.core.evaluator import LMCellEvaluator
+    ev = LMCellEvaluator("gemma2-27b", "long_500k")   # statically skipped
+    fb = ev("Task * TP;")
+    assert fb.score is None and "Execution Error" in fb.system
+    assert ev("Task * TP;") is fb                      # text-cache hit
+    pre = ev.prescreen("Task * TP;")
+    assert not pre.viable
+    assert ev.prescreen_margin == 2.0
+
+
+def test_attach_disk_cache_never_replaces_configured_store(tmp_path):
+    from repro.core.evaluator import LMCellEvaluator
+    warm = str(tmp_path / "warm.sqlite")
+    ev = LMCellEvaluator("gemma2-27b", "long_500k", disk_cache=warm)
+    ev.attach_disk_cache(str(tmp_path / "sidecar.sqlite"))
+    assert ev.engine.disk.path == warm      # pre-warmed store kept
+    ev2 = LMCellEvaluator("gemma2-27b", "long_500k")
+    side = str(tmp_path / "sidecar2.sqlite")
+    ev2.attach_disk_cache(side)
+    assert ev2.engine.disk.path == side     # attaches when unset
+
+
+def test_callable_evaluator_cache_is_bounded():
+    from repro.core.evaluator import CallableEvaluator
+    ev = CallableEvaluator(lambda src: float(len(src)), cache_size=4)
+    for i in range(10):
+        ev("Task * TP;" + "#" * i)
+    assert len(ev.cache) <= 4
+    assert ev.cache.stats()["evictions"] == 6
+
+
+# ---------------------------------------------------------------------------
+# End-to-end on a compiled smoke cell (slow)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def smoke_eval():
+    from repro.core.evaluator import LMCellEvaluator
+    return LMCellEvaluator("stablelm-1.6b", "train_4k", smoke=True)
+
+
+@pytest.mark.slow
+def test_plan_equivalent_candidates_do_not_recompile(smoke_eval):
+    from repro.core.agent import MapperAgent
+    ev = smoke_eval
+    text = MapperAgent().mapper_text()
+    fb = ev(text)
+    assert fb.score is not None, fb.system
+    n = ev.compile_count
+    fb2 = ev(text + "\n# textually distinct, plan-equivalent")
+    assert ev.compile_count == n                 # plan-fingerprint hit
+    assert fb2.score == fb.score
+    assert ev.stats()["plan_hits"] >= 1
+    # the roofline report is visible under the *new* text too
+    assert ev.report_for(text + "\n# textually distinct, plan-equivalent")
+
+
+@pytest.mark.slow
+def test_prescreen_agrees_with_full_compile(smoke_eval):
+    from repro.core.agent import MapperAgent
+    ev = smoke_eval
+    text = MapperAgent().mapper_text()
+    full = ev(text).score
+    pre = ev.prescreen(text)
+    assert full is not None and pre is not None and pre.viable
+    # the analytic estimate is an optimistic bound of the compiled score
+    # on a collective-free cell: never above it, within sanity below it
+    assert 0 < pre.score <= full * 1.5
+    assert pre.score >= full / 1000.0
+
+
+@pytest.mark.slow
+def test_disk_cache_survives_evaluator_restart(tmp_path):
+    from repro.core.agent import MapperAgent
+    from repro.core.evaluator import LMCellEvaluator
+    db = str(tmp_path / "cells.sqlite")
+    text = MapperAgent().mapper_text()
+
+    ev1 = LMCellEvaluator("stablelm-1.6b", "train_4k", smoke=True,
+                          disk_cache=db)
+    fb1 = ev1(text)
+    assert ev1.compile_count == 1 and fb1.score is not None
+
+    ev2 = LMCellEvaluator("stablelm-1.6b", "train_4k", smoke=True,
+                          disk_cache=db)
+    fb2 = ev2(text)
+    assert ev2.compile_count == 0                # served from disk
+    assert ev2.stats()["disk_hits"] == 1
+    assert fb2.score == fb1.score
+    assert fb2.report is not None
+    rr = ev2.report_for(text)
+    assert rr is not None and rr.step_time_s == fb1.score
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_warm_cache_identical_trajectory(tmp_path):
+    from repro.asi.adapters_lm import LMCellWorkload
+    from repro.asi.tuner import Tuner
+    ck = str(tmp_path / "sess.json")
+
+    wl = LMCellWorkload("stablelm-1.6b", "train_4k", smoke=True)
+    partial = Tuner(wl, strategy="trace", iterations=2, batch=2, seed=0,
+                    checkpoint=ck).run()
+    assert os.path.exists(ck + ".evalcache")     # cache-aware checkpoint
+
+    # resume on a *fresh* workload (fresh engine, warm disk cache)
+    wl2 = LMCellWorkload("stablelm-1.6b", "train_4k", smoke=True)
+    resumed = Tuner.from_checkpoint(ck, iterations=4, workload=wl2).resume()
+    assert resumed.trajectory[:2] == partial.trajectory
+
+    # the uninterrupted run must match the resumed one bit-for-bit
+    wl3 = LMCellWorkload("stablelm-1.6b", "train_4k", smoke=True)
+    straight = Tuner(wl3, strategy="trace", iterations=4, batch=2,
+                     seed=0).run()
+    assert straight.trajectory == resumed.trajectory
+    # warm cache: the resumed engine compiled at most the genuinely new
+    # plans of iterations 3-4, never the replayed ones
+    ev2 = wl2.evaluator()
+    ev3 = wl3.evaluator()
+    assert ev2.compile_count <= ev3.compile_count
+
+    with open(ck) as f:
+        payload = json.load(f)
+    assert payload["session"]["iteration"] == 4
