@@ -8,6 +8,7 @@
     (ours)   kernel_microbench    Pallas kernel wall time (interpret)
     (ours)   evaluator_throughput tiered eval engine: cold vs warm evals/s
     (ours)   agent_overhead       mapper generate+compile latency
+    (ours)   baseline_comparison  baseline-vs-ASI harness (repro.experiments)
 
 Output: ``name,us_per_call,derived`` CSV rows.
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -391,6 +392,35 @@ def bench_evaluator_throughput(out_json="BENCH_evalengine.json"):
 
 
 # ---------------------------------------------------------------------------
+def bench_baseline_comparison(out_json="BENCH_experiments.json"):
+    """(ours) Baseline-vs-ASI harness smoke: the agentic optimizer against
+    the scalar auto-tuner baselines on the fast-eval workloads, with the
+    determinism checks on.  Writes ``BENCH_experiments.json``."""
+    from repro.experiments import ExperimentConfig, run_experiments
+
+    t0 = time.perf_counter()
+    payload = run_experiments(ExperimentConfig(out=out_json))
+    us = (time.perf_counter() - t0) * 1e6
+    def fmt(x):
+        return "none" if x is None else f"{x:.6f}"
+
+    for wname, row in payload["workloads"].items():
+        verdict = ("win" if row["asi_beats_all_scalar"]
+                   else "tie" if row["asi_ties_scalar"] else "LOSS")
+        _emit(f"baseline_comparison/{wname}", 0.0,
+              f"asi_best={fmt(row['asi_best'])};"
+              f"scalar_best={fmt(row['scalar_best'])};{verdict};"
+              f"iters_to_beat={row['asi_iterations_to_beat']}")
+    s = payload["summary"]
+    _emit("baseline_comparison/summary", us,
+          f"wins={s['asi_wins']}/{s['n_workloads']};ties={s['asi_ties']};"
+          f"deterministic={s['deterministic']};written={out_json}")
+    assert s["deterministic"] is True, \
+        "same-seed rerun or LLM replay diverged (or checks did not run)"
+    assert s["asi_wins"] >= 3, s
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -420,6 +450,7 @@ SECTIONS = {
     "asi_batching": bench_asi_batching,
     "evaluator_throughput": bench_evaluator_throughput,
     "agent_overhead": bench_agent_overhead,
+    "baseline_comparison": bench_baseline_comparison,
 }
 
 

@@ -34,6 +34,7 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Union
 
 from ..core.agent.autoguide import ExecutionReport
+from ..core.agent.llm import rng_state_from_json, rng_state_to_json
 from ..core.agent.loop import TuneSession, _norm, run_loop
 from ..core.agent.optimizers import SEARCHES
 from ..core.agent.trace_lite import TraceRecord
@@ -44,8 +45,6 @@ STRATEGIES = tuple(SEARCHES)
 # v1 sessions (no reports) still load.
 _CKPT_VERSION = 2
 _CKPT_READABLE = (1, 2)
-# AnnealingSearch proposal state that must survive a checkpoint.
-_ANNEAL_ATTRS = ("_current", "_current_score", "_step", "t0", "cooling")
 
 
 # ---------------------------------------------------------------------------
@@ -92,27 +91,17 @@ def _session_from_json(d: Dict) -> TuneSession:
 
 
 def _search_state(search) -> Dict:
-    st = search.rng.getstate()
-    out = {"rng_state": [st[0], list(st[1]), st[2]]}
-    for a in _ANNEAL_ATTRS:
-        if hasattr(search, a):
-            v = getattr(search, a)
-            # annealing's incumbent score starts at inf; keep strict JSON
-            if isinstance(v, float) and v == float("inf"):
-                v = {"__inf__": True}
-            out[a] = v
+    """RNG state plus the search's own ``extra_state()`` (flat, so the
+    attribute-per-key layout of pre-hook checkpoints still round-trips)."""
+    out = {"rng_state": rng_state_to_json(search.rng)}
+    out.update(search.extra_state())
     return out
 
 
 def _restore_search_state(search, d: Dict) -> None:
-    st = d["rng_state"]
-    search.rng.setstate((st[0], tuple(st[1]), st[2]))
-    for a in _ANNEAL_ATTRS:
-        if a in d and hasattr(search, a):
-            v = d[a]
-            if isinstance(v, dict) and v.get("__inf__"):
-                v = float("inf")
-            setattr(search, a, v)
+    rng_state_from_json(search.rng, d["rng_state"])
+    search.load_extra_state({k: v for k, v in d.items()
+                             if k != "rng_state"})
 
 
 @dataclass
@@ -129,6 +118,11 @@ class Tuner:
     seed: int = 0
     feedback_level: str = "full"
     checkpoint: Optional[str] = None
+    #: Proposal-backend override (e.g. a ScriptedLLM / ReplayLLM for
+    #: deterministic replay, or a RecordingLLM wrapper to capture a run);
+    #: None uses the workload's own backend.  Runtime injection only --
+    #: never serialized into checkpoints.
+    llm: Optional[object] = None
 
     def __post_init__(self):
         if isinstance(self.workload, str):
@@ -149,8 +143,8 @@ class Tuner:
         wl = self.workload
         return SEARCHES[self.strategy](
             seed=self.seed, feedback_level=self.feedback_level,
-            llm=wl.llm(), random_fn=wl.random_decisions,
-            neighbor_fn=wl.neighbors)
+            llm=self.llm if self.llm is not None else wl.llm(),
+            random_fn=wl.random_decisions, neighbor_fn=wl.neighbors)
 
     def _save(self, search, session: TuneSession) -> None:
         payload = {
@@ -246,12 +240,12 @@ class Tuner:
 def tune(workload: Union[str, Workload], strategy: str = "trace",
          iterations: int = 10, batch: int = 1, seed: int = 0,
          feedback_level: str = "full", start: Optional[Dict] = None,
-         checkpoint: Optional[str] = None):
+         checkpoint: Optional[str] = None, llm: Optional[object] = None):
     """Tune ``workload`` and return a ``SearchResult`` (the single entry
     point the CLI, examples, benchmarks, and legacy shims go through)."""
     return Tuner(workload, strategy=strategy, iterations=iterations,
                  batch=batch, seed=seed, feedback_level=feedback_level,
-                 checkpoint=checkpoint).run(start=start)
+                 checkpoint=checkpoint, llm=llm).run(start=start)
 
 
 def resume(checkpoint: str, iterations: Optional[int] = None,

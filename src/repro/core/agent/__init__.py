@@ -2,16 +2,21 @@ from .agent import MapperAgent
 from .autoguide import ErrorCategory, ExecutionReport
 from .feedback import (FEEDBACK_LEVELS, Feedback, enhance, error_feedback,
                        performance_feedback)
-from .llm import HeuristicLLM, ScriptedLLM, LLMClient
-from .optimizers import (AnnealingSearch, OPROSearch, RandomSearch,
-                         SEARCHES, Search, SearchResult, TraceSearch)
+from .llm import (HeuristicLLM, LLMClient, RecordingLLM, ReplayLLM,
+                  ReplayMismatch, ScriptedLLM)
+from .optimizers import (AnnealingSearch, EpsilonGreedySearch,
+                         HillClimbSearch, OPROSearch, RandomSearch,
+                         SCALAR_BASELINES, SEARCHES, Search, SearchResult,
+                         TraceSearch)
 from .trace_lite import Bundle, Module, TraceGraph, TraceRecord
 
 __all__ = [
     "MapperAgent", "ErrorCategory", "ExecutionReport", "FEEDBACK_LEVELS",
     "Feedback", "enhance", "performance_feedback",
     "error_feedback", "HeuristicLLM", "ScriptedLLM", "LLMClient",
+    "RecordingLLM", "ReplayLLM", "ReplayMismatch",
     "RandomSearch", "OPROSearch", "TraceSearch", "AnnealingSearch",
+    "HillClimbSearch", "EpsilonGreedySearch", "SCALAR_BASELINES",
     "SEARCHES", "Search", "SearchResult", "Bundle", "Module", "TraceGraph",
     "TraceRecord",
 ]

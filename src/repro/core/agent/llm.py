@@ -7,10 +7,24 @@ and applies the suggestions via keyword rules (i.e. the paper's
 "Suggest" channel closed-loop).  A real client implements
 :class:`LLMClient.propose` with an API call; everything else (agent,
 feedback, optimizers, evaluators) is backend-agnostic.
+
+Deterministic replay (the experiment harness, ``repro.experiments``):
+
+* :class:`RecordingLLM` wraps any client and captures every
+  (prompt, decisions, proposal) exchange to a JSON-able log;
+* :class:`ReplayLLM` plays such a log back bit-for-bit, verifying at
+  each call that the run asks the same questions it did when recorded
+  (prompt digest + input decisions), so a replayed trajectory is
+  guaranteed identical or fails loudly with :class:`ReplayMismatch`;
+* :class:`ScriptedLLM` replays a hand-written list of decision edits
+  (golden-trajectory tests / ablations).
 """
 
 from __future__ import annotations
 
+import copy
+import hashlib
+import json
 import random
 import re
 from typing import Dict, List, Optional, Protocol, Tuple
@@ -72,7 +86,6 @@ class HeuristicLLM:
 
     def propose(self, prompt: str, decisions: Dict[str, Dict],
                 rng: random.Random) -> Dict[str, Dict]:
-        import copy
         out = copy.deepcopy(decisions)
         fired = False
         for pat, action in self._RULES:
@@ -98,7 +111,12 @@ class HeuristicLLM:
 
 
 class ScriptedLLM:
-    """Replay a fixed list of decision edits (tests / ablations)."""
+    """Replay a fixed list of decision edits (tests / ablations).
+
+    An exhausted script returns the decisions unchanged, which the loop's
+    dedup pass turns into a seeded single-mutation exploration -- still
+    fully deterministic for a fixed seed.
+    """
 
     name = "scripted"
 
@@ -106,9 +124,123 @@ class ScriptedLLM:
         self.edits = list(edits)
 
     def propose(self, prompt, decisions, rng):
-        import copy
         out = copy.deepcopy(decisions)
         if self.edits:
             mod, key, val = self.edits.pop(0)
             out[mod][key] = val
         return out
+
+
+def _jnorm(obj):
+    """JSON-normal form (tuples -> lists, keys -> str) for comparing a
+    live exchange against one that round-tripped through a JSON log.
+    Key order is preserved, NOT sorted: a replayed proposal must render
+    its mapper statements in the recorded order, or the replay is only
+    plan-equivalent instead of bit-for-bit."""
+    return json.loads(json.dumps(obj, default=str))
+
+
+def _prompt_digest(prompt: str) -> str:
+    return hashlib.sha256(prompt.encode()).hexdigest()[:16]
+
+
+def rng_state_to_json(rng: random.Random) -> list:
+    """``random.Random`` state in strict-JSON form (also used by the
+    Tuner's checkpoint format -- one encoding, everywhere)."""
+    st = rng.getstate()
+    return [st[0], list(st[1]), st[2]]
+
+
+def rng_state_from_json(rng: random.Random, st: list) -> None:
+    rng.setstate((st[0], tuple(st[1]), st[2]))
+
+
+class ReplayMismatch(RuntimeError):
+    """A replayed run diverged from its recording."""
+
+
+class RecordingLLM:
+    """Transparent wrapper: capture every proposal exchange of ``inner``.
+
+    The log (``calls``) serializes with :meth:`save` / :meth:`to_json`
+    and feeds :class:`ReplayLLM`, so an agentic tuning run -- including
+    one driven by a real API-backed client -- becomes a reproducible
+    artifact.
+    """
+
+    def __init__(self, inner: LLMClient):
+        self.inner = inner
+        self.name = f"recording({getattr(inner, 'name', '?')})"
+        self.calls: List[Dict] = []
+
+    def propose(self, prompt, decisions, rng):
+        out = self.inner.propose(prompt, decisions, rng)
+        entry = {"prompt_digest": _prompt_digest(prompt),
+                 "decisions": _jnorm(decisions),
+                 "proposal": _jnorm(out)}
+        if rng is not None:
+            # The inner client may draw from the shared search rng (the
+            # heuristic backend's exploration fallback does).  Capture
+            # the post-call state so ReplayLLM leaves every downstream
+            # consumer of the same rng -- the loop's dedup mutations,
+            # TraceSearch's neighbor fallback -- an identical stream.
+            entry["rng_state_after"] = rng_state_to_json(rng)
+        self.calls.append(entry)
+        return out
+
+    def to_json(self) -> Dict:
+        return {"version": 1,
+                "inner": getattr(self.inner, "name", "?"),
+                "calls": self.calls}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+
+class ReplayLLM:
+    """Replay a :class:`RecordingLLM` log bit-for-bit.
+
+    ``strict`` (default) verifies at every call that the prompt digest
+    and input decisions match the recording -- any divergence (changed
+    seed, evaluator, feedback rendering, proposal consumer) raises
+    :class:`ReplayMismatch` naming the call index and field rather than
+    silently producing a different trajectory.
+    """
+
+    name = "replay"
+
+    def __init__(self, calls: List[Dict], strict: bool = True):
+        self.calls = list(calls)
+        self.strict = strict
+        self.cursor = 0
+
+    @classmethod
+    def load(cls, path: str, strict: bool = True) -> "ReplayLLM":
+        with open(path) as f:
+            log = json.load(f)
+        if log.get("version") != 1:
+            raise ValueError(f"unsupported LLM log version in {path}")
+        return cls(log["calls"], strict=strict)
+
+    def propose(self, prompt, decisions, rng):
+        if self.cursor >= len(self.calls):
+            raise ReplayMismatch(
+                f"recording exhausted after {len(self.calls)} proposals; "
+                "the replayed run asked for more")
+        entry = self.calls[self.cursor]
+        if self.strict:
+            if _prompt_digest(prompt) != entry["prompt_digest"]:
+                raise ReplayMismatch(
+                    f"call {self.cursor}: prompt diverged from the "
+                    "recording (digest mismatch)")
+            if _jnorm(decisions) != entry["decisions"]:
+                raise ReplayMismatch(
+                    f"call {self.cursor}: input decisions diverged from "
+                    "the recording")
+        self.cursor += 1
+        if rng is not None and "rng_state_after" in entry:
+            # leave the shared rng exactly where the recorded client
+            # left it, draws-consumed and all
+            rng_state_from_json(rng, entry["rng_state_after"])
+        return copy.deepcopy(entry["proposal"])

@@ -6,9 +6,19 @@
 * ``TraceSearch`` -- Trace (Cheng et al.): feedback is propagated to the
   *responsible bundle* (per-module credit assignment from the roofline
   bottleneck / error node), and only implicated bundles are mutated.
-* ``RandomSearch`` -- the paper's random-mapper baseline.
-* ``AnnealingSearch`` -- classic single-mutation simulated annealing
-  (a non-LLM discrete-optimization baseline, beyond the paper).
+
+Scalar-feedback baselines (the classical auto-tuner arm of the
+baseline-vs-ASI comparison, ``repro.experiments``): these consume ONLY
+``record.score`` -- never the feedback text or the ExecutionReport -- so
+they stand in for OpenTuner-style tuners that see a number per trial.
+
+* ``RandomSearch``        -- the paper's random-mapper baseline.
+* ``HillClimbSearch``     -- greedy single-mutation hill climbing with
+  random restarts after ``patience`` non-improving steps.
+* ``AnnealingSearch``     -- classic single-mutation simulated annealing.
+* ``EpsilonGreedySearch`` -- per-axis epsilon-greedy bandit: each
+  (bundle, key, value) assignment is an arm credited with the mean score
+  of the trials that used it.
 
 All drive the same loop (paper Fig. 5b):
     mapper = agent(app); feedback = evaluate(mapper);
@@ -18,8 +28,11 @@ All drive the same loop (paper Fig. 5b):
 
 from __future__ import annotations
 
+import copy
+import json
 import math
 import random
+import re
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -74,6 +87,31 @@ class Search:
     # -- subclass hook -------------------------------------------------------
     def propose(self, agent: MapperAgent, graph: TraceGraph) -> Dict:
         raise NotImplementedError
+
+    # -- checkpointable proposal state (JSON-safe; rng is handled by the
+    # Tuner separately).  Subclasses with cross-iteration state beyond
+    # the graph override both; the encoding helpers keep inf strict-JSON.
+    _STATE_ATTRS: tuple = ()
+
+    @staticmethod
+    def _enc(v):
+        if isinstance(v, float) and v == float("inf"):
+            return {"__inf__": True}
+        return v
+
+    @staticmethod
+    def _dec(v):
+        if isinstance(v, dict) and v.get("__inf__"):
+            return float("inf")
+        return v
+
+    def extra_state(self) -> Dict:
+        return {a: self._enc(getattr(self, a)) for a in self._STATE_ATTRS}
+
+    def load_extra_state(self, d: Dict) -> None:
+        for a in self._STATE_ATTRS:
+            if a in d:
+                setattr(self, a, self._dec(d[a]))
 
     # -- main loop (paper Fig. 5b) ------------------------------------------
     def run(self, agent: MapperAgent,
@@ -155,7 +193,6 @@ class TraceSearch(Search):
     name = "trace"
 
     def propose(self, agent, graph):
-        import copy, re
         base = graph.best() or graph.last()
         decisions = copy.deepcopy(base.values if base else agent.decisions())
         last = graph.last()
@@ -189,6 +226,9 @@ class TraceSearch(Search):
 
 class AnnealingSearch(Search):
     name = "annealing"
+    # t0/cooling ride along so a resumed session anneals identically
+    # even if the class defaults ever change
+    _STATE_ATTRS = ("_current", "_current_score", "_step", "t0", "cooling")
 
     def __init__(self, seed: int = 0, feedback_level: str = "full",
                  llm=None, t0: float = 1.0, cooling: float = 0.7, **kw):
@@ -215,5 +255,113 @@ class AnnealingSearch(Search):
         return self.neighbor_fn(base, self.rng, k=1)
 
 
+class HillClimbSearch(Search):
+    """Greedy hill climbing with random restarts (scalar baseline).
+
+    Accept the last candidate as the incumbent iff it strictly improved;
+    after ``patience`` consecutive non-improving steps, restart from a
+    uniform random point.  Proposals are single mutations of the
+    incumbent.
+    """
+
+    name = "hillclimb"
+    _STATE_ATTRS = ("_best", "_best_score", "_stall", "restarts", "patience")
+
+    def __init__(self, seed: int = 0, feedback_level: str = "full",
+                 llm=None, patience: int = 3, **kw):
+        super().__init__(seed, feedback_level, llm, **kw)
+        self.patience = patience
+        self.restarts = 0
+        self._best: Optional[Dict] = None
+        self._best_score = float("inf")
+        self._stall = 0
+
+    def propose(self, agent, graph):
+        last = graph.last()
+        if last is not None:
+            if last.score is not None and last.score < self._best_score:
+                self._best = last.values
+                self._best_score = last.score
+                self._stall = 0
+            else:
+                self._stall += 1
+        if self._stall >= self.patience:
+            self.restarts += 1
+            self._stall = 0
+            self._best = None
+            self._best_score = float("inf")
+            return self.random_fn(self.rng.randrange(1 << 30))
+        base = self._best if self._best is not None else agent.decisions()
+        return self.neighbor_fn(base, self.rng, k=1)
+
+
+class EpsilonGreedySearch(Search):
+    """Per-axis epsilon-greedy bandit (scalar baseline).
+
+    Every (bundle, key, value) assignment is an arm whose estimate is
+    the mean score of the scored trials that used it; each proposal
+    picks, per axis, the best-estimated value (unseen values are
+    optimistic: tried before re-exploiting known ones) or, with
+    probability ``epsilon``, a uniform random one.  All cross-iteration
+    knowledge lives in the graph, so the only checkpoint state is the
+    RNG.
+    """
+
+    name = "bandit"
+
+    def __init__(self, seed: int = 0, feedback_level: str = "full",
+                 llm=None, epsilon: float = 0.2, **kw):
+        super().__init__(seed, feedback_level, llm, **kw)
+        self.epsilon = epsilon
+
+    @staticmethod
+    def _arm(value) -> str:
+        return json.dumps(value, sort_keys=True, default=str)
+
+    def propose(self, agent, graph):
+        # mean score per (bundle, key, value-arm), from the whole graph
+        sums: Dict = {}
+        counts: Dict = {}
+        for rec in graph.records:
+            if rec.score is None:
+                continue
+            for bname, bvals in rec.values.items():
+                if not isinstance(bvals, dict):
+                    continue
+                for key, val in bvals.items():
+                    k = (bname, key, self._arm(val))
+                    sums[k] = sums.get(k, 0.0) + rec.score
+                    counts[k] = counts.get(k, 0) + 1
+        out = copy.deepcopy(agent.decisions())
+        for bundle in agent.bundles():
+            choices = out.get(bundle.name)
+            if not isinstance(choices, dict):
+                continue
+            for key, allowed in bundle.options.items():
+                allowed = list(allowed)
+                if key not in choices or len(allowed) < 2:
+                    continue
+                if self.rng.random() < self.epsilon:
+                    choices[key] = self.rng.choice(allowed)
+                    continue
+                untried = [v for v in allowed
+                           if (bundle.name, key, self._arm(v))
+                           not in counts]
+                if untried:
+                    choices[key] = self.rng.choice(untried)
+                    continue
+                choices[key] = min(
+                    allowed,
+                    key=lambda v: (sums[(bundle.name, key, self._arm(v))]
+                                   / counts[(bundle.name, key,
+                                             self._arm(v))]))
+        return out
+
+
+#: Strategies that consume only the scalar score (the classical-tuner
+#: arm of the baseline-vs-ASI comparison); everything else is agentic.
+SCALAR_BASELINES = ("random", "hillclimb", "annealing", "bandit")
+
 SEARCHES = {c.name: c for c in
-            (RandomSearch, OPROSearch, TraceSearch, AnnealingSearch)}
+            (RandomSearch, OPROSearch, TraceSearch, AnnealingSearch,
+             HillClimbSearch, EpsilonGreedySearch)}

@@ -1,0 +1,39 @@
+"""repro.experiments -- the baseline-vs-ASI comparison harness.
+
+The paper's headline claim is comparative: the agentic optimizer (full
+Agent-System-Interface feedback) beats scalar auto-tuners within a
+handful of iterations and approaches expert mappers.  This package makes
+that claim executable and regression-testable:
+
+* a sweep runner over {optimizer x workload x feedback-level} on the
+  evalengine fast path, all through the one ``repro.asi.tune`` front
+  door;
+* scalar baselines (random, hill-climbing with restarts, simulated
+  annealing, epsilon-greedy bandit -- ``SCALAR_BASELINES`` in
+  :mod:`repro.core.agent.optimizers`) run at ``feedback_level='scalar'``
+  so they see exactly what an OpenTuner-style tuner would: one number
+  per trial;
+* deterministic replay: every run is seeded end-to-end, and the agentic
+  arm is additionally captured through a
+  :class:`~repro.core.agent.llm.RecordingLLM` and replayed through a
+  :class:`~repro.core.agent.llm.ReplayLLM` to prove the trajectory is a
+  reproducible artifact;
+* a ``BENCH_experiments.json`` summary plus a paper-style comparison
+  table (normalized to the workload's expert mapper when it has one).
+
+CLI::
+
+    python -m repro.experiments --smoke
+    python -m repro.experiments --workloads circuit pennant \
+        --seeds 0 1 2 --iters 10 --out BENCH_experiments.json
+
+See docs/experiments.md for the harness walkthrough.
+"""
+
+from .runner import (DEFAULT_OPTIMIZERS, SMOKE_WORKLOADS, ExperimentConfig,
+                     OptimizerSpec, format_table, run_experiments)
+
+__all__ = [
+    "DEFAULT_OPTIMIZERS", "ExperimentConfig", "OptimizerSpec",
+    "SMOKE_WORKLOADS", "format_table", "run_experiments",
+]

@@ -1,0 +1,100 @@
+"""CLI for the baseline-vs-ASI experiment harness.
+
+    python -m repro.experiments --smoke
+    python -m repro.experiments --workloads circuit pennant --min-wins 2
+    python -m repro.experiments --workloads circuit --ablate-feedback
+    python -m repro.experiments --seeds 0 1 2 --iters 10 --out bench.json
+
+Exit code is non-zero when --min-wins is not met or a determinism check
+fails, so CI can gate on the comparison.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .runner import (DEFAULT_OPTIMIZERS, SMOKE_WORKLOADS, ExperimentConfig,
+                     format_table, run_experiments)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="Sweep {optimizer x workload x feedback-level} and "
+                    "compare the agentic ASI optimizer against scalar "
+                    "auto-tuner baselines.")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"default fast sweep: {', '.join(SMOKE_WORKLOADS)}")
+    ap.add_argument("--workloads", nargs="+", default=None,
+                    help="registry names (default: the smoke set)")
+    ap.add_argument("--optimizers", nargs="+", default=None,
+                    help="subset of optimizer arms by name "
+                         f"(default: {', '.join(o.name for o in DEFAULT_OPTIMIZERS)})")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--seeds", nargs="+", type=int, default=[0])
+    ap.add_argument("--ablate-feedback", action="store_true",
+                    help="sweep every optimizer across all four feedback "
+                         "levels (Fig. 8 axis) instead of each arm's own")
+    ap.add_argument("--out", default="BENCH_experiments.json",
+                    help="summary JSON path (default: "
+                         "BENCH_experiments.json)")
+    ap.add_argument("--min-wins", type=int, default=None,
+                    help="exit 1 unless the ASI arm strictly beats every "
+                         "scalar baseline on at least this many workloads")
+    ap.add_argument("--no-determinism-check", action="store_true",
+                    help="skip the same-seed rerun and LLM record/replay "
+                         "verification")
+    args = ap.parse_args(argv)
+
+    optimizers = DEFAULT_OPTIMIZERS
+    if args.optimizers:
+        by_name = {o.name: o for o in DEFAULT_OPTIMIZERS}
+        unknown = [n for n in args.optimizers if n not in by_name]
+        if unknown:
+            ap.error(f"unknown optimizer(s) {unknown}; choose from "
+                     f"{sorted(by_name)}")
+        optimizers = tuple(by_name[n] for n in args.optimizers)
+
+    cfg = ExperimentConfig(
+        workloads=tuple(args.workloads) if args.workloads
+        else SMOKE_WORKLOADS,
+        optimizers=optimizers,
+        iterations=args.iters,
+        seeds=tuple(args.seeds),
+        feedback_levels=(("scalar", "system", "explain", "full")
+                         if args.ablate_feedback else None),
+        check_determinism=not args.no_determinism_check,
+        check_llm_replay=not args.no_determinism_check,
+        out=args.out,
+    )
+    # validate names up front: a KeyError out of the sweep itself is a
+    # bug that deserves its traceback, not a terse config error
+    from ..asi import registry
+    known = registry.names()
+    unknown = [w for w in cfg.workloads if w not in known]
+    if unknown:
+        print(f"error: unknown workload(s) {unknown}; see "
+              "python -m repro.tune --list", file=sys.stderr)
+        return 2
+    payload = run_experiments(cfg)
+
+    print(format_table(payload))
+    if args.out:
+        print(f"\nwrote {args.out}")
+
+    s = payload["summary"]
+    if s["deterministic"] is False:
+        print("FAIL: same-seed rerun or LLM replay diverged",
+              file=sys.stderr)
+        return 1
+    if args.min_wins is not None and s["asi_wins"] < args.min_wins:
+        print(f"FAIL: ASI beat every scalar baseline on only "
+              f"{s['asi_wins']} workloads (< {args.min_wins})",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

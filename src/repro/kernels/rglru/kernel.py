@@ -32,8 +32,10 @@ def _rglru_kernel(a_ref, b_ref, o_ref, h_scr, *, blk: int):
 
     def body(i, h):
         h = a[i] * h + b[i]
-        pl.store(o_ref, (0, pl.dslice(i, 1), slice(None)),
-                 h[None, None, :].astype(o_ref.dtype)[0])
+        # slice(0, 1) rather than a bare 0: int indices trip the
+        # state-discharge rule in this jax version's interpret path
+        pl.store(o_ref, (slice(0, 1), pl.dslice(i, 1), slice(None)),
+                 h[None, None, :].astype(o_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, blk, body, h_scr[0])

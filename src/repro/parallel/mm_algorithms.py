@@ -38,6 +38,19 @@ def _mesh2(mesh: Mesh) -> Tuple[str, str]:
     return mesh.axis_names[-2], mesh.axis_names[-1]
 
 
+def _to_varying(x: jax.Array, axes: Tuple[str, ...]) -> jax.Array:
+    """Mark a replicated per-shard value as varying over ``axes``.
+
+    jax >= 0.6 spells this ``lax.pcast(..., to='varying')`` (earlier
+    ``lax.pvary``); on older releases the rep checker joins replicated
+    and varying values implicitly, so identity is correct."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axes)
+    return x
+
+
 def cannon_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
     """Cannon's algorithm on a square (p, p) mesh."""
     ax, ay = _mesh2(mesh)
@@ -62,7 +75,7 @@ def cannon_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
         a = skew(a, True)
         b = skew(b, False)
         c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
-        c = jax.lax.pcast(c, (ax, ay), to='varying')
+        c = _to_varying(c, (ax, ay))
 
         shift_a = [((i0 * p + (j0 + 1) % p), i0 * p + j0)
                    for i0 in range(p) for j0 in range(p)]
@@ -95,7 +108,7 @@ def summa_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
         b_col = jax.lax.all_gather(b, ax, axis=0, tiled=True)  # [K, nb]
         kb = a_row.shape[1] // (px * py)
         c = jnp.zeros((a_row.shape[0], b_col.shape[1]), jnp.float32)
-        c = jax.lax.pcast(c, (ax, ay), to='varying')
+        c = _to_varying(c, (ax, ay))
 
         def body(k, c):
             ak = jax.lax.dynamic_slice_in_dim(a_row, k * kb, kb, 1)
@@ -142,7 +155,7 @@ def pumma_mm(A: jax.Array, B: jax.Array, mesh: Mesh) -> jax.Array:
         ring_b = [((((i0 + 1) % p) * p + j0), i0 * p + j0)
                   for i0 in range(p) for j0 in range(p)]
         c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
-        c = jax.lax.pcast(c, (ax, ay), to='varying')
+        c = _to_varying(c, (ax, ay))
 
         def body(step, carry):
             a, b, c = carry
@@ -212,7 +225,7 @@ def solomonik_mm(A: jax.Array, B: jax.Array, mesh3: Mesh) -> jax.Array:
         ring_b = [((((i0 + 1) % p) * p + j0), i0 * p + j0)
                   for i0 in range(p) for j0 in range(p)]
         c = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
-        c = jax.lax.pcast(c, (ac, ax, ay), to='varying')
+        c = _to_varying(c, (ac, ax, ay))
 
         def body(step, carry):
             a, b, c = carry

@@ -88,6 +88,12 @@ def main(argv=None) -> int:
     ap.add_argument("--checkpoint", default=None,
                     help="write a resumable JSON session here every "
                          "iteration")
+    ap.add_argument("--record-llm", default=None, metavar="LOG",
+                    help="capture every LLM proposal exchange to this "
+                         "JSON log (replayable via --replay-llm)")
+    ap.add_argument("--replay-llm", default=None, metavar="LOG",
+                    help="drive the run from a recorded proposal log, "
+                         "bit-for-bit (fails loudly on divergence)")
     ap.add_argument("--resume", default=None, metavar="CHECKPOINT",
                     help="resume a checkpointed session")
     ap.add_argument("--out", default=None,
@@ -110,6 +116,8 @@ def main(argv=None) -> int:
                       ("seed", args.seed),
                       ("feedback-level", args.feedback_level),
                       ("checkpoint", args.checkpoint),
+                      ("record-llm", args.record_llm),
+                      ("replay-llm", args.replay_llm),
                       ("workload", args.workload)] if v is not None]
             if fixed:
                 ap.error(f"--resume takes these from the checkpoint; "
@@ -127,11 +135,27 @@ def main(argv=None) -> int:
             args.strategy = args.strategy or "trace"
             args.batch = 1 if args.batch is None else args.batch
             args.seed = 0 if args.seed is None else args.seed
+            if args.record_llm and args.replay_llm:
+                ap.error("--record-llm and --replay-llm are mutually "
+                         "exclusive")
+            llm = recorder = None
+            if args.replay_llm:
+                from .core.agent.llm import ReplayLLM
+                llm = ReplayLLM.load(args.replay_llm)
+            elif args.record_llm:
+                from .asi import registry
+                from .core.agent.llm import RecordingLLM
+                llm = recorder = RecordingLLM(
+                    registry.get(args.workload).llm())
             res = tune(args.workload, strategy=args.strategy,
                        iterations=args.iters, batch=args.batch,
                        seed=args.seed,
                        feedback_level=args.feedback_level or "full",
-                       checkpoint=args.checkpoint)
+                       checkpoint=args.checkpoint, llm=llm)
+            if recorder is not None:
+                recorder.save(args.record_llm)
+                print(f"recorded {len(recorder.calls)} LLM proposals "
+                      f"-> {args.record_llm}", file=sys.stderr)
         else:
             ap.error("one of --list, --workload, or --resume is required")
             return 2

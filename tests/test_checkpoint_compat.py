@@ -1,0 +1,121 @@
+"""Checkpoint compatibility + cache-aware replay.
+
+``tests/fixtures/checkpoint_v{1,2}.json`` are COMMITTED Tuner sessions
+(matmul/cannon, annealing, seed 7, 3 of 6 iterations; v1 is the
+pre-AutoGuide-v2 layout without per-record reports).  They must keep
+loading and resuming under the current code: breaking them strands every
+user's on-disk session.  The second half asserts the cache-aware side of
+checkpointing -- a repeated session replays every score from the
+``.evalcache`` sidecar with ZERO recompiles.
+
+If the checkpoint schema version is deliberately bumped, regenerate the
+fixtures (see the header of this file's git history) and extend
+``_CKPT_READABLE`` rather than dropping the old version.
+"""
+
+import json
+import os
+import shutil
+
+import pytest
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+
+
+def _fixture_copy(tmp_path, name):
+    """Resume writes back to the checkpoint path; never the committed one."""
+    src = os.path.join(FIXTURES, name)
+    dst = str(tmp_path / name)
+    shutil.copy(src, dst)
+    return dst
+
+
+@pytest.mark.parametrize("name", ["checkpoint_v1.json",
+                                  "checkpoint_v2.json"])
+def test_committed_checkpoint_loads_and_resumes(tmp_path, name):
+    from repro.asi import Tuner
+
+    path = _fixture_copy(tmp_path, name)
+    with open(path) as f:
+        frozen = json.load(f)
+
+    tuner = Tuner.from_checkpoint(path)
+    assert tuner.workload.name == "matmul/cannon"
+    assert tuner.strategy == "annealing"
+    res = tuner.resume()
+
+    # the resumed run continues to the session's own target...
+    assert len(res.trajectory) == frozen["iterations"]
+    # ...preserving the frozen prefix bit-for-bit
+    frozen_traj = [float("inf") if t is None else t
+                   for t in frozen["session"]["trajectory"]]
+    assert res.trajectory[:len(frozen_traj)] == frozen_traj
+    # best-so-far stays monotone through the resume boundary
+    finite = [t for t in res.trajectory if t != float("inf")]
+    assert all(b <= a for a, b in zip(finite, finite[1:]))
+    assert res.best_score <= frozen_traj[-1]
+
+
+def test_v1_and_v2_fixtures_resume_identically(tmp_path):
+    """The report payload added in v2 must not influence the annealing
+    trajectory: both fixture versions resume to the same result."""
+    from repro.asi import Tuner
+
+    res = [Tuner.from_checkpoint(
+        _fixture_copy(tmp_path, f"checkpoint_v{v}.json")).resume()
+        for v in (1, 2)]
+    assert res[0].trajectory == res[1].trajectory
+    assert res[0].best_mapper == res[1].best_mapper
+
+
+def test_unsupported_version_rejected(tmp_path):
+    from repro.asi import Tuner
+
+    path = _fixture_copy(tmp_path, "checkpoint_v2.json")
+    with open(path) as f:
+        payload = json.load(f)
+    payload["version"] = 99
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    with pytest.raises(ValueError, match="unsupported checkpoint version"):
+        Tuner.from_checkpoint(path)
+
+
+def test_new_baseline_state_survives_checkpoint(tmp_path):
+    """hillclimb's incumbent/stall state rides the generalized
+    extra_state hook: an interrupted+resumed run equals a straight one."""
+    from repro.asi import Tuner
+
+    ck = str(tmp_path / "hc.json")
+    Tuner("matmul/cannon", strategy="hillclimb", iterations=3, seed=3,
+          checkpoint=ck).run()
+    with open(ck) as f:
+        state = json.load(f)["search_state"]
+    assert "_best_score" in state and "_stall" in state
+    resumed = Tuner.from_checkpoint(ck, iterations=7).resume()
+    straight = Tuner("matmul/cannon", strategy="hillclimb", iterations=7,
+                     seed=3).run()
+    assert resumed.trajectory == straight.trajectory
+
+
+@pytest.mark.slow
+def test_repeated_session_reuses_evalcache_zero_recompiles(tmp_path):
+    """A re-run of a checkpointed LM session replays every score from the
+    ``.evalcache`` sidecar: the fresh engine performs ZERO compiles."""
+    from repro.asi import Tuner
+    from repro.asi.adapters_lm import LMCellWorkload
+
+    ck = str(tmp_path / "lm.json")
+    wl1 = LMCellWorkload("stablelm-1.6b", "train_4k", smoke=True)
+    first = Tuner(wl1, strategy="trace", iterations=3, seed=0,
+                  checkpoint=ck).run()
+    assert os.path.exists(ck + ".evalcache")
+    assert wl1.evaluator().compile_count > 0
+
+    wl2 = LMCellWorkload("stablelm-1.6b", "train_4k", smoke=True)
+    repeat = Tuner(wl2, strategy="trace", iterations=3, seed=0,
+                   checkpoint=ck).run()
+    assert repeat.trajectory == first.trajectory
+    assert wl2.evaluator().compile_count == 0, (
+        "repeated session recompiled despite a warm .evalcache")

@@ -1,0 +1,235 @@
+"""The baseline-vs-ASI experiment harness + record/replay layer.
+
+Covers the scalar baselines behind the unified Tuner interface, the
+RecordingLLM/ReplayLLM determinism guarantees, the sweep runner's
+summary/verdict schema, the comparison table, and the CLI exit codes
+CI gates on.
+"""
+
+import json
+
+import pytest
+
+from repro.core.agent.llm import (HeuristicLLM, RecordingLLM, ReplayLLM,
+                                  ReplayMismatch, ScriptedLLM)
+from repro.core.agent.optimizers import SCALAR_BASELINES, SEARCHES
+from repro.experiments import (DEFAULT_OPTIMIZERS, ExperimentConfig,
+                               OptimizerSpec, format_table,
+                               run_experiments)
+
+
+# ---------------------------------------------------------------------------
+# scalar baselines behind the one Tuner front door
+# ---------------------------------------------------------------------------
+def test_scalar_baselines_registered():
+    for name in SCALAR_BASELINES:
+        assert name in SEARCHES
+    from repro.asi import STRATEGIES
+    assert set(SCALAR_BASELINES) <= set(STRATEGIES)
+
+
+@pytest.mark.parametrize("strategy", ["hillclimb", "bandit"])
+def test_new_baselines_tune_and_reproduce(strategy):
+    from repro.asi import tune
+    kw = dict(strategy=strategy, iterations=6, seed=1,
+              feedback_level="scalar")
+    a = tune("circuit", **kw)
+    b = tune("circuit", **kw)
+    assert a.trajectory == b.trajectory          # seeded determinism
+    assert a.best_score is not None
+    finite = [t for t in a.trajectory if t != float("inf")]
+    assert all(y <= x for x, y in zip(finite, finite[1:]))  # monotone
+
+
+def test_hillclimb_restarts_after_stalls():
+    from repro.asi import tune
+    res = tune("matmul/cannon", strategy="hillclimb", iterations=12, seed=0,
+               feedback_level="scalar")
+    # 7 arms, 12 iterations, restarts on: the space gets re-explored and
+    # the single optimum is found
+    assert res.best_score == min(
+        r.score for r in res.graph.records if r.score is not None)
+
+
+def test_bandit_exploits_observed_arms():
+    """After the graph holds scored trials, the bandit's greedy arm is
+    the best-observed value, not an unseen or worse one."""
+    from repro.asi import registry
+    from repro.core.agent.optimizers import EpsilonGreedySearch
+    from repro.core.agent.trace_lite import TraceGraph, TraceRecord
+
+    wl = registry.get("matmul/cannon")
+    search = EpsilonGreedySearch(seed=0, epsilon=0.0,  # pure exploitation
+                                 random_fn=wl.random_decisions,
+                                 neighbor_fn=wl.neighbors)
+    graph = TraceGraph()
+    for fn, score in [("cyclic1d", 3.0), ("block2d", 1.0),
+                      ("linearize", 2.0)]:
+        graph.add(TraceRecord(
+            values={"index_task_map_decision":
+                    {"fn": fn, "index_tasks": ["mm_tiles"]}},
+            outputs={}, mapper=fn, score=score))
+    agent = wl.make_agent()
+    # exhaust the optimistic first looks at the four unseen arms, feeding
+    # them bad scores; after that, pure exploitation must pick block2d
+    for _ in range(4):
+        prop = search.propose(agent, graph)
+        graph.add(TraceRecord(values=prop, outputs={}, mapper=str(prop),
+                              score=100.0))
+    prop = search.propose(agent, graph)
+    assert prop["index_task_map_decision"]["fn"] == "block2d"
+
+
+# ---------------------------------------------------------------------------
+# record / replay
+# ---------------------------------------------------------------------------
+def test_recording_is_transparent_and_replay_identical(tmp_path):
+    from repro.asi import registry, tune
+    wl = "matmul/cosma"
+    plain = tune(wl, strategy="trace", iterations=6, seed=2)
+    rec = RecordingLLM(registry.get(wl).llm())
+    recorded = tune(wl, strategy="trace", iterations=6, seed=2, llm=rec)
+    assert recorded.trajectory == plain.trajectory
+    assert rec.calls
+
+    log = tmp_path / "llm.json"
+    rec.save(str(log))
+    replayed = tune(wl, strategy="trace", iterations=6, seed=2,
+                    llm=ReplayLLM.load(str(log)))
+    assert replayed.trajectory == plain.trajectory
+    assert replayed.best_mapper == plain.best_mapper
+
+
+def test_replay_restores_shared_rng_stream():
+    """The heuristic backend's exploration fallback draws from the shared
+    search rng; replay must leave that stream exactly where the recording
+    did or downstream consumers (dedup mutations, neighbor fallbacks)
+    diverge.  matmul/cosma at 10 iterations hits the fallback repeatedly
+    -- the exact case that once raised a spurious ReplayMismatch."""
+    from repro.asi import registry, tune
+    wl = "matmul/cosma"
+    plain = tune(wl, strategy="trace", iterations=10, seed=0)
+    rec = RecordingLLM(registry.get(wl).llm())
+    assert tune(wl, strategy="trace", iterations=10, seed=0,
+                llm=rec).trajectory == plain.trajectory
+    replayed = tune(wl, strategy="trace", iterations=10, seed=0,
+                    llm=ReplayLLM(rec.calls, strict=True))
+    assert replayed.trajectory == plain.trajectory
+    assert replayed.best_mapper == plain.best_mapper
+
+
+def test_replay_divergence_fails_loudly():
+    from repro.asi import registry, tune
+    wl = "matmul/cosma"
+    rec = RecordingLLM(registry.get(wl).llm())
+    tune(wl, strategy="trace", iterations=6, seed=2, llm=rec)
+    with pytest.raises(ReplayMismatch):
+        # a different feedback level renders different prompts than the
+        # recording saw (a changed seed alone converges back onto the
+        # recorded path: replay restores the recorded rng stream)
+        tune(wl, strategy="trace", iterations=6, seed=2,
+             feedback_level="system", llm=ReplayLLM(rec.calls, strict=True))
+
+
+def test_replay_exhaustion_raises():
+    replay = ReplayLLM([], strict=False)
+    with pytest.raises(ReplayMismatch, match="exhausted"):
+        replay.propose("p", {}, None)
+
+
+def test_recording_wraps_any_client():
+    import random
+    rec = RecordingLLM(ScriptedLLM([("m", "k", "v")]))
+    out = rec.propose("prompt", {"m": {"k": "old"}}, random.Random(0))
+    assert out == {"m": {"k": "v"}}
+    assert rec.calls[0]["proposal"] == {"m": {"k": "v"}}
+    assert rec.calls[0]["decisions"] == {"m": {"k": "old"}}
+    # heuristic backend under recording: same rule table, same output
+    h, rh = HeuristicLLM(), RecordingLLM(HeuristicLLM())
+    d = {"task_decision": {"mlp": "DP"}}
+    prompt = "Move more stages to TP"
+    assert (h.propose(prompt, d, random.Random(1))
+            == rh.propose(prompt, d, random.Random(1)))
+
+
+# ---------------------------------------------------------------------------
+# sweep runner + table + CLI
+# ---------------------------------------------------------------------------
+_FAST_CFG = dict(
+    workloads=("matmul/cannon", "circuit"),
+    optimizers=(OptimizerSpec("asi-trace", "trace", "full", agentic=True),
+                OptimizerSpec("random", "random", "scalar")),
+    iterations=6, seeds=(0,))
+
+
+def test_run_experiments_schema_and_verdicts(tmp_path):
+    out = str(tmp_path / "bench.json")
+    payload = run_experiments(ExperimentConfig(**_FAST_CFG, out=out))
+    with open(out) as f:
+        assert json.load(f) == payload
+
+    assert payload["summary"]["n_workloads"] == 2
+    assert payload["summary"]["deterministic"] is True
+    assert payload["checks"]["rerun_identical"] is True
+    assert payload["checks"]["llm_replay"]["replay_identical"] is True
+    for row in payload["workloads"].values():
+        assert set(row["optimizers"]) == {"asi-trace", "random"}
+        for opt in row["optimizers"].values():
+            run = opt["per_seed"]["0"]
+            assert len(run["trajectory"]) == 6
+            assert run["iterations_to_best"] <= 6
+        assert row["asi_beats_all_scalar"] or row["asi_ties_scalar"] or \
+            row["asi_best"] > row["scalar_best"]
+
+
+def test_feedback_level_ablation_expands_specs():
+    cfg = ExperimentConfig(
+        workloads=("matmul/cannon",),
+        optimizers=(OptimizerSpec("trace", "trace", "full", agentic=True),),
+        iterations=4, seeds=(0,), feedback_levels=("scalar", "full"),
+        check_determinism=False, check_llm_replay=False, out=None)
+    payload = run_experiments(cfg)
+    names = set(payload["workloads"]["matmul/cannon"]["optimizers"])
+    assert names == {"trace@scalar", "trace@full"}
+
+
+def test_format_table_renders_all_arms(tmp_path):
+    payload = run_experiments(ExperimentConfig(
+        **_FAST_CFG, check_determinism=False, check_llm_replay=False,
+        out=None))
+    table = format_table(payload)
+    for name in ("asi-trace", "random", "matmul/cannon", "circuit"):
+        assert name in table
+    assert "deterministic" in table
+
+
+def test_cli_smoke_and_min_wins_gate(tmp_path, capsys):
+    from repro.experiments.__main__ import main
+    out = str(tmp_path / "bench.json")
+    argv = ["--workloads", "circuit", "--iters", "6", "--out", out]
+    assert main(argv) == 0
+    assert "wrote" in capsys.readouterr().out
+    # circuit: ASI strictly wins at seed 0, so --min-wins 1 passes
+    assert main(argv + ["--min-wins", "1"]) == 0
+    # an impossible bar fails with exit 1
+    assert main(argv + ["--min-wins", "2"]) == 1
+
+
+def test_cli_rejects_unknown_optimizer():
+    from repro.experiments.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["--optimizers", "nope"])
+
+
+def test_cli_rejects_unknown_workload(capsys):
+    from repro.experiments.__main__ import main
+    assert main(["--workloads", "not/a/workload"]) == 2
+    assert "unknown workload" in capsys.readouterr().err
+
+
+def test_default_optimizers_cover_both_arms():
+    agentic = [o for o in DEFAULT_OPTIMIZERS if o.agentic]
+    scalar = [o for o in DEFAULT_OPTIMIZERS if not o.agentic]
+    assert {o.strategy for o in scalar} == set(SCALAR_BASELINES)
+    assert all(o.feedback_level == "scalar" for o in scalar)
+    assert agentic and all(o.feedback_level == "full" for o in agentic)

@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) for the evalengine invariants the
+tuning hot path leans on:
+
+* Tier-0 soundness: plan-equivalent mapper mutations -- comments,
+  whitespace, statement reordering, shadowed duplicate statements --
+  ALWAYS collide to the same fingerprint (a miss here only wastes a
+  compile, but the reverse property, semantic changes never colliding,
+  would corrupt scores; both directions are exercised).
+* LRU bounds: under arbitrary interleavings of put/get/peek the size
+  bound is never exceeded, and contents always match a reference model.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (CI installs it)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.evalengine import LRUCache  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Tier 0: plan-equivalent mutations always collide
+# ---------------------------------------------------------------------------
+BASE_LINES = (
+    "Task * TP;",
+    "Region step weights TP FBMEM;",
+    "Region step activations TP REMAT;",
+    "Region decode kv_cache TP FBMEM;",
+    "Layout decode kv_cache * C_order;",
+)
+
+_CTX = None
+
+
+def _ctx():
+    """One CellContext for the whole module (building it compiles the
+    cell's config graph; fingerprinting itself never touches devices)."""
+    global _CTX
+    if _CTX is None:
+        from repro.core.evalengine import AbstractMesh, CellContext
+        _CTX = CellContext.build(
+            "stablelm-1.6b", "train_4k",
+            mesh=AbstractMesh((16, 16), ("data", "model")))
+    return _CTX
+
+
+@st.composite
+def equivalent_mutation(draw):
+    """A textual mutation of BASE_LINES that cannot change the plan:
+    permuted statements, inserted comments/blank lines, trailing
+    whitespace, and duplicated statements (the later identical statement
+    shadows harmlessly)."""
+    lines = list(draw(st.permutations(BASE_LINES)))
+    dupes = draw(st.lists(st.sampled_from(BASE_LINES), max_size=3))
+    lines.extend(dupes)
+    out = []
+    for line in lines:
+        for _ in range(draw(st.integers(0, 2))):
+            out.append(draw(st.sampled_from(
+                ["", "# comment", "   ", "# another comment"])))
+        out.append(line + draw(st.sampled_from(["", "  ", "   # tail"])))
+    return "\n".join(out) + draw(st.sampled_from(["", "\n", "\n\n"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(equivalent_mutation())
+def test_plan_equivalent_mutations_always_collide(mutant):
+    ctx = _ctx()
+    base_fp = ctx.fingerprint(ctx.compile_mapper("\n".join(BASE_LINES)))
+    assert ctx.fingerprint(ctx.compile_mapper(mutant)) == base_fp, mutant
+
+
+@settings(max_examples=10, deadline=None)
+@given(equivalent_mutation(),
+       st.sampled_from([
+           ("Region step weights TP FBMEM;",
+            "Region step weights TP ZCMEM;"),
+           ("Layout decode kv_cache * C_order;",
+            "Layout decode kv_cache * F_order;"),
+           ("Region step activations TP REMAT;",
+            "Region step activations TP FBMEM;"),
+       ]))
+def test_semantic_changes_never_collide(mutant, edit):
+    """The dual property: a real semantic edit applied to any equivalent
+    mutation moves the fingerprint away from the base plan's."""
+    ctx = _ctx()
+    old, new = edit
+    hypothesis.assume(old in mutant)
+    base_fp = ctx.fingerprint(ctx.compile_mapper("\n".join(BASE_LINES)))
+    changed = mutant.replace(old, new)
+    assert ctx.fingerprint(ctx.compile_mapper(changed)) != base_fp
+
+
+# ---------------------------------------------------------------------------
+# LRU: bound + model conformance under random op sequences
+# ---------------------------------------------------------------------------
+_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 30), st.integers()),
+        st.tuples(st.just("get"), st.integers(0, 30)),
+        st.tuples(st.just("peek"), st.integers(0, 30)),
+    ),
+    max_size=200)
+
+
+@settings(max_examples=100, deadline=None)
+@given(maxsize=st.integers(1, 8), ops=_ops)
+def test_lru_bound_never_exceeded_and_matches_model(maxsize, ops):
+    from collections import OrderedDict
+    cache = LRUCache(maxsize=maxsize)
+    model: OrderedDict = OrderedDict()
+    for op in ops:
+        if op[0] == "put":
+            _, k, v = op
+            if k in model:
+                model.move_to_end(k)
+            model[k] = v
+            while len(model) > maxsize:
+                model.popitem(last=False)
+            cache.put(k, v)
+        elif op[0] == "get":
+            _, k = op
+            expect = model.get(k)
+            if k in model:
+                model.move_to_end(k)
+            assert cache.get(k) == expect
+        else:  # peek refreshes nothing
+            _, k = op
+            assert cache.peek(k) == model.get(k)
+        assert len(cache) <= maxsize
+    assert sorted(iter(cache)) == sorted(model)
+    # eviction counter equals how many entries fell off the model's end
+    puts = sum(1 for op in ops if op[0] == "put")
+    assert cache.stats()["evictions"] <= puts
+
+
+@settings(max_examples=50, deadline=None)
+@given(maxsize=st.integers(1, 6),
+       keys=st.lists(st.integers(0, 10), min_size=1, max_size=50))
+def test_lru_recency_order_matches_model(maxsize, keys):
+    """After any put sequence, the survivors are exactly the maxsize
+    most-recently-put distinct keys."""
+    cache = LRUCache(maxsize=maxsize)
+    for k in keys:
+        cache.put(k, k)
+    expect = []
+    for k in reversed(keys):
+        if k not in expect:
+            expect.append(k)
+        if len(expect) == maxsize:
+            break
+    assert sorted(iter(cache)) == sorted(expect)

@@ -5,8 +5,8 @@ Checks, with no third-party deps and no imports of the package itself:
 
 1. every relative markdown link in docs/*.md and README.md resolves to
    an existing file (anchors are checked against the target's headings);
-2. every public ``repro.asi`` symbol (its ``__all__``, read statically
-   via ast) is mentioned somewhere in docs/*.md.
+2. every public ``repro.asi`` and ``repro.experiments`` symbol (their
+   ``__all__``, read statically via ast) is mentioned in docs/*.md.
 
 Exit 0 when clean; prints one line per violation and exits 1 otherwise.
 """
@@ -20,7 +20,12 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ROOT / "docs"
-ASI_INIT = ROOT / "src" / "repro" / "asi" / "__init__.py"
+# public packages whose __all__ must be covered by the docs tree
+PUBLIC_INITS = {
+    "repro.asi": ROOT / "src" / "repro" / "asi" / "__init__.py",
+    "repro.experiments":
+        ROOT / "src" / "repro" / "experiments" / "__init__.py",
+}
 
 # [text](target) -- ignore images and external/mail links
 _LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
@@ -60,21 +65,22 @@ def check_links(files) -> list:
     return errors
 
 
-def public_asi_symbols() -> list:
-    tree = ast.parse(ASI_INIT.read_text())
+def public_symbols(init: Path) -> list:
+    tree = ast.parse(init.read_text())
     for node in ast.walk(tree):
         if (isinstance(node, ast.Assign) and len(node.targets) == 1
                 and isinstance(node.targets[0], ast.Name)
                 and node.targets[0].id == "__all__"):
             return [ast.literal_eval(elt) for elt in node.value.elts]
-    raise SystemExit(f"could not find __all__ in {ASI_INIT}")
+    raise SystemExit(f"could not find __all__ in {init}")
 
 
 def check_api_coverage(doc_files) -> list:
     blob = "\n".join(f.read_text() for f in doc_files)
-    return [f"docs/: public repro.asi symbol {sym!r} is not mentioned "
+    return [f"docs/: public {pkg} symbol {sym!r} is not mentioned "
             "in any docs/*.md"
-            for sym in public_asi_symbols() if sym not in blob]
+            for pkg, init in sorted(PUBLIC_INITS.items())
+            for sym in public_symbols(init) if sym not in blob]
 
 
 def main() -> int:
@@ -87,8 +93,10 @@ def main() -> int:
     for e in errors:
         print(e, file=sys.stderr)
     if not errors:
-        print(f"docs lint OK: {len(doc_files)} docs pages, "
-              f"{len(public_asi_symbols())} repro.asi symbols covered")
+        n_syms = sum(len(public_symbols(i)) for i in PUBLIC_INITS.values())
+        print(f"docs lint OK: {len(doc_files)} docs pages, {n_syms} "
+              f"public symbols covered "
+              f"({', '.join(sorted(PUBLIC_INITS))})")
     return 1 if errors else 0
 
 
