@@ -9,6 +9,8 @@
     (ours)   evaluator_throughput tiered eval engine: cold vs warm evals/s
     (ours)   agent_overhead       mapper generate+compile latency
     (ours)   baseline_comparison  baseline-vs-ASI harness (repro.experiments)
+    (ours)   service              mapper store resolve latency + tuning
+                                  service jobs/min (repro.service)
 
 Output: ``name,us_per_call,derived`` CSV rows.
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -421,6 +423,83 @@ def bench_baseline_comparison(out_json="BENCH_experiments.json"):
 
 
 # ---------------------------------------------------------------------------
+def bench_service(out_json="BENCH_service.json"):
+    """(ours) The serving-side mapper registry and the async tuning
+    service: store-resolve latency over a populated registry (the
+    per-request cost ``Engine.from_store`` pays), preset-fallback
+    resolution on a miss, and end-to-end tuning jobs/min on the smoke
+    workloads.  Writes ``BENCH_service.json``."""
+    import json
+    import shutil
+    import tempfile
+
+    from repro.service import (MapperArtifact, MapperStore, TuningService,
+                               resolve_mapper)
+
+    tmp = tempfile.mkdtemp(prefix="bench_service_")
+    try:
+        # -- store resolution latency over a realistically-full registry
+        store = MapperStore(f"{tmp}/resolve.db")
+        rng = random.Random(0)
+        n_keys, per_key = 20, 10
+        for w in range(n_keys):
+            for v in range(per_key):
+                store.put(MapperArtifact.build(
+                    workload=f"wl-{w}", substrate="app", mesh="2x4",
+                    mapper=f"Task t{v} GPU;  # wl-{w}",
+                    score=rng.uniform(0.5, 2.0),
+                    provenance={"source": "bench"}))
+        n = 500
+        t0 = time.perf_counter()
+        for i in range(n):
+            art = store.best(f"wl-{i % n_keys}", "2x4")
+            assert art is not None
+        resolve_us = (time.perf_counter() - t0) / n * 1e6
+        _emit("service/store_resolve", resolve_us,
+              f"artifacts={len(store)};per_s={1e6 / resolve_us:.0f}")
+
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = resolve_mapper(store, "circuit")   # miss -> expert preset
+        fallback_us = (time.perf_counter() - t0) / n * 1e6
+        assert r.origin == "preset"
+        _emit("service/preset_fallback", fallback_us,
+              f"per_s={1e6 / fallback_us:.0f}")
+
+        # -- tuning-service throughput on the smoke workloads
+        jobs_store = MapperStore(f"{tmp}/jobs.db")
+        workloads = ("circuit", "pennant", "matmul/cannon", "matmul/cosma")
+        t0 = time.perf_counter()
+        with TuningService(jobs_store, workers=2) as service:
+            jobs = [service.submit(w, iterations=5) for w in workloads]
+            service.drain()
+        wall_s = time.perf_counter() - t0
+        n_done = sum(1 for j in jobs if j.state == "done")
+        jobs_per_min = n_done / wall_s * 60.0
+        _emit("service/jobs", wall_s / max(n_done, 1) * 1e6,
+              f"done={n_done}/{len(jobs)};jobs_per_min={jobs_per_min:.1f};"
+              f"artifacts={len(jobs_store)}")
+        assert n_done == len(jobs) == len(jobs_store), \
+            [j.summary() for j in jobs]
+
+        payload = {
+            "store_resolve_us": resolve_us,
+            "store_resolves_per_s": 1e6 / resolve_us,
+            "store_artifacts": len(store),
+            "preset_fallback_us": fallback_us,
+            "jobs_workloads": list(workloads),
+            "jobs_done": n_done,
+            "jobs_wall_s": wall_s,
+            "jobs_per_min": jobs_per_min,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        _emit("service/summary", 0.0, f"written={out_json}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -451,6 +530,7 @@ SECTIONS = {
     "evaluator_throughput": bench_evaluator_throughput,
     "agent_overhead": bench_agent_overhead,
     "baseline_comparison": bench_baseline_comparison,
+    "service": bench_service,
 }
 
 

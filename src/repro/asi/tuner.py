@@ -123,6 +123,11 @@ class Tuner:
     #: None uses the workload's own backend.  Runtime injection only --
     #: never serialized into checkpoints.
     llm: Optional[object] = None
+    #: Mapper artifact registry (:class:`repro.service.MapperStore`):
+    #: when set, every completed run publishes its winner -- DSL source,
+    #: plan fingerprint, score, provenance -- through the service layer's
+    #: one publishing path.  Runtime wiring only, never checkpointed.
+    store: Optional[object] = None
 
     def __post_init__(self):
         if isinstance(self.workload, str):
@@ -187,9 +192,17 @@ class Tuner:
         if session.iteration:   # resumed: restore the agent's position
             agent.set_decisions(session.graph.records[-1].values)
         on_it = (lambda s: self._save(search, s)) if self.checkpoint else None
-        return run_loop(search, agent, wl.evaluator(), self.iterations,
-                        self.batch, parallel_safe=wl.parallel_safe,
-                        session=session, on_iteration=on_it)
+        result = run_loop(search, agent, wl.evaluator(), self.iterations,
+                          self.batch, parallel_safe=wl.parallel_safe,
+                          session=session, on_iteration=on_it)
+        if self.store is not None:
+            from ..service.store import publish_result
+            publish_result(self.store, wl, result, provenance={
+                "source": "tuner", "strategy": self.strategy,
+                "feedback_level": self.feedback_level, "seed": self.seed,
+                "iterations": self.iterations, "batch": self.batch,
+                "checkpoint": self.checkpoint})
+        return result
 
     @classmethod
     def from_checkpoint(cls, path: str, iterations: Optional[int] = None,
@@ -240,12 +253,14 @@ class Tuner:
 def tune(workload: Union[str, Workload], strategy: str = "trace",
          iterations: int = 10, batch: int = 1, seed: int = 0,
          feedback_level: str = "full", start: Optional[Dict] = None,
-         checkpoint: Optional[str] = None, llm: Optional[object] = None):
+         checkpoint: Optional[str] = None, llm: Optional[object] = None,
+         store: Optional[object] = None):
     """Tune ``workload`` and return a ``SearchResult`` (the single entry
-    point the CLI, examples, benchmarks, and legacy shims go through)."""
+    point the CLI, examples, benchmarks, and legacy shims go through).
+    ``store`` publishes the winner to a mapper artifact registry."""
     return Tuner(workload, strategy=strategy, iterations=iterations,
                  batch=batch, seed=seed, feedback_level=feedback_level,
-                 checkpoint=checkpoint, llm=llm).run(start=start)
+                 checkpoint=checkpoint, llm=llm, store=store).run(start=start)
 
 
 def resume(checkpoint: str, iterations: Optional[int] = None,

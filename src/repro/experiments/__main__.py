@@ -39,6 +39,9 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="BENCH_experiments.json",
                     help="summary JSON path (default: "
                          "BENCH_experiments.json)")
+    ap.add_argument("--publish-store", default=None, metavar="PATH",
+                    help="publish each workload's sweep winner to this "
+                         "mapper artifact store (see repro.service)")
     ap.add_argument("--min-wins", type=int, default=None,
                     help="exit 1 unless the ASI arm strictly beats every "
                          "scalar baseline on at least this many workloads")
@@ -67,6 +70,7 @@ def main(argv=None) -> int:
         check_determinism=not args.no_determinism_check,
         check_llm_replay=not args.no_determinism_check,
         out=args.out,
+        publish_store=args.publish_store,
     )
     # validate names up front: a KeyError out of the sweep itself is a
     # bug that deserves its traceback, not a terse config error

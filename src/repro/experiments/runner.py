@@ -63,6 +63,11 @@ class ExperimentConfig:
     #: bit-for-bit through a ReplayLLM (the record/replay guarantee).
     check_llm_replay: bool = True
     out: Optional[str] = "BENCH_experiments.json"
+    #: Mapper artifact registry (a :class:`repro.service.MapperStore` or
+    #: its path): each workload's sweep winner -- best mapper over every
+    #: arm and seed -- is published through the service layer, so sweep
+    #: results feed serving exactly like TuningService jobs do.
+    publish_store: Optional[object] = None
 
 
 def _specs(cfg: ExperimentConfig) -> List[OptimizerSpec]:
@@ -94,9 +99,12 @@ def _tune_once(workload: str, spec: OptimizerSpec, iterations: int,
     best = _null(res.best_score)
     finite = [t for t in traj if t is not None]
     iters_to_best = (traj.index(min(finite)) + 1) if finite else None
+    # best_mapper is popped by the caller before the row enters the JSON
+    # payload (sources are artifacts for the store, not bench rows)
     return {"best": best, "trajectory": traj,
             "iterations_to_best": iters_to_best,
-            "evaluations": len(res.graph.records), "wall_s": wall_s}
+            "evaluations": len(res.graph.records), "wall_s": wall_s,
+            "best_mapper": res.best_mapper}
 
 
 def _expert_score(workload: str) -> Optional[float]:
@@ -176,11 +184,26 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
         "workloads": {},
     }
 
+    store = None
+    if cfg.publish_store is not None:
+        from ..service import MapperStore
+        store = (cfg.publish_store
+                 if isinstance(cfg.publish_store, MapperStore)
+                 else MapperStore(cfg.publish_store))
+
     for wname in cfg.workloads:
         rows: Dict[str, Dict] = {}
+        winner: Optional[Dict] = None
         for spec in specs:
-            runs = {str(seed): _tune_once(wname, spec, cfg.iterations, seed)
-                    for seed in cfg.seeds}
+            runs: Dict[str, Dict] = {}
+            for seed in cfg.seeds:
+                r = _tune_once(wname, spec, cfg.iterations, seed)
+                mapper = r.pop("best_mapper")
+                if r["best"] is not None and (
+                        winner is None or r["best"] < winner["score"]):
+                    winner = {"score": r["best"], "mapper": mapper,
+                              "optimizer": spec, "seed": seed}
+                runs[str(seed)] = r
             rows[spec.name] = {"strategy": spec.strategy,
                                "feedback_level": spec.feedback_level,
                                "agentic": spec.agentic,
@@ -208,6 +231,25 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
                             if iters_to_beat is None or i + 1 < iters_to_beat:
                                 iters_to_beat = i + 1
                             break
+        artifact_id = None
+        if store is not None and winner is not None:
+            from types import SimpleNamespace
+
+            from ..asi import registry
+            from ..service import publish_result
+            spec = winner["optimizer"]
+            art = publish_result(store, registry.get(wname),
+                                 SimpleNamespace(
+                                     best_score=winner["score"],
+                                     best_mapper=winner["mapper"]),
+                                 provenance={"source": "experiments",
+                                             "optimizer": spec.name,
+                                             "strategy": spec.strategy,
+                                             "feedback_level":
+                                                 spec.feedback_level,
+                                             "seed": winner["seed"],
+                                             "iterations": cfg.iterations})
+            artifact_id = art.id if art is not None else None
         payload["workloads"][wname] = {
             "expert_score": _expert_score(wname),
             "optimizers": rows,
@@ -216,6 +258,7 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
             "asi_beats_all_scalar": beats,
             "asi_ties_scalar": ties,
             "asi_iterations_to_beat": iters_to_beat,
+            "artifact_id": artifact_id,
         }
 
     checks: Dict = {}

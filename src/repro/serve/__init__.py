@@ -1,0 +1,11 @@
+"""repro.serve -- the batched serving engine.
+
+``Engine`` runs prefill + greedy decode under a mapping plan;
+``Engine.from_store`` resolves that plan from the mapper artifact
+registry (artifact -> expert preset -> optional tune-on-miss), closing
+the loop from tuning to serving.  See docs/serving.md.
+"""
+
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

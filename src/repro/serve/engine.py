@@ -1,4 +1,10 @@
-"""Batched serving engine: prefill + greedy decode under a mapping plan."""
+"""Batched serving engine: prefill + greedy decode under a mapping plan.
+
+The mapper can be given as raw DSL source, or resolved from the mapper
+artifact registry with :meth:`Engine.from_store` (artifact -> expert
+preset -> optional background tune-on-miss; see
+:mod:`repro.service.resolve` and docs/serving.md).
+"""
 
 from __future__ import annotations
 
@@ -23,10 +29,15 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, model: Model, mesh, mapper_src: str,
-                 cfg: Optional[ServeConfig] = None):
+                 cfg: Optional[ServeConfig] = None, *, params=None):
         self.model = model
         self.mesh = mesh
         self.cfg = cfg or ServeConfig()
+        self.mapper_src = mapper_src
+        #: How the mapper was resolved (set by from_store); None when
+        #: the caller passed raw DSL source.
+        self.resolution = None
+        self._params = params
         plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
         self.rules = rules_from_plan(plan, mesh, "decode")
         self.order = cache_order_from_plan(plan)
@@ -35,8 +46,56 @@ class Engine:
         self.serve_step = jax.jit(
             make_serve_step(model, self.rules, self.order))
 
+    @classmethod
+    def from_store(cls, workload, mesh=None, *, store=None, params=None,
+                   model: Optional[Model] = None,
+                   cfg: Optional[ServeConfig] = None, service=None,
+                   tune_on_miss: bool = False, smoke: bool = False
+                   ) -> "Engine":
+        """Build an engine whose mapper comes from the artifact registry.
+
+        ``workload`` is a registry name or ``Workload`` instance;
+        ``store`` a :class:`~repro.service.MapperStore` (or its path).
+        Resolution order is artifact for ``(workload, mesh geometry)``,
+        else the expert serve preset -- so serving always starts, even
+        from an empty store.  With ``tune_on_miss`` and a
+        :class:`~repro.service.TuningService`, a miss also enqueues a
+        background tuning job (deduped by store key); the enqueued job
+        rides on ``engine.resolution.job``.
+
+        ``model`` defaults from the workload name for LM cells
+        (``lm/<arch>/...``, honouring ``smoke``); other substrates must
+        pass one.  ``mesh`` defaults to the host mesh.
+        """
+        from ..service import MapperStore, resolve_mapper
+        if isinstance(store, str):
+            store = MapperStore(store)
+        if mesh is None:
+            from ..launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        resolution = resolve_mapper(store, workload, mesh, step="decode",
+                                    service=service,
+                                    tune_on_miss=tune_on_miss)
+        if model is None:
+            name = (workload if isinstance(workload, str)
+                    else workload.name)
+            if not name.startswith("lm/"):
+                raise ValueError(
+                    f"Engine.from_store needs model= for non-LM workload "
+                    f"{name!r} (only lm/<arch>/... names imply a model)")
+            from ..configs import get_config
+            model = Model(get_config(name.split("/")[1], smoke=smoke))
+        engine = cls(model, mesh, resolution.mapper, cfg, params=params)
+        engine.resolution = resolution
+        return engine
+
     def generate(self, tokens, enc_frames=None) -> Dict:
         """tokens: [B, S_prompt] int32.  Returns generated ids [B, N]."""
+        if self._params is None:
+            raise RuntimeError(
+                "Engine has no parameters: pass params= to the "
+                "constructor (or Engine.from_store) or call "
+                "load_params() before generate()")
         b, s = tokens.shape
         caches = self.model.init_serve_caches(
             b, self.cfg.max_len, order=self.order,

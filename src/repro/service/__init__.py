@@ -1,0 +1,34 @@
+"""repro.service -- the mapper artifact registry + async tuning service.
+
+The layer that closes the loop from tuning to serving: tuned mappers
+become first-class, portable artifacts instead of dying inside Tuner
+checkpoints.
+
+* :class:`MapperStore` -- content-addressed, versioned artifact store
+  (sqlite index + JSON blobs) keyed by ``(workload, mesh geometry)``;
+  each :class:`MapperArtifact` records DSL source, plan fingerprint,
+  score, and provenance.  ``best()`` is the serving-side lookup.
+* :class:`TuningService` -- a thread-pool job queue
+  (``submit``/``status``/``cancel``/``drain``) running ``asi.Tuner``
+  jobs concurrently, deduping in-flight jobs by store key, resuming from
+  Tuner checkpoints, and publishing winners via :func:`publish_result`
+  (the same path the ``Tuner(store=...)`` hook and the
+  ``repro.experiments`` sweep use).
+* :func:`resolve_mapper` -- artifact -> expert preset -> default
+  resolution (plus optional tune-on-miss), so serving always has a
+  mapper; ``repro.serve.Engine.from_store`` is the consumer.
+
+CLI: ``python -m repro.service {submit,status,best,export,gc}``.
+See docs/serving.md.
+"""
+
+from .jobs import JOB_STATES, Job, JobSpec, TuningService
+from .resolve import Resolution, preset_mapper, resolve_mapper
+from .store import (MapperArtifact, MapperStore, mapper_fingerprint,
+                    mesh_key, publish_result, workload_mesh)
+
+__all__ = [
+    "JOB_STATES", "Job", "JobSpec", "MapperArtifact", "MapperStore",
+    "Resolution", "TuningService", "mapper_fingerprint", "mesh_key",
+    "preset_mapper", "publish_result", "resolve_mapper", "workload_mesh",
+]

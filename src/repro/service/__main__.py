@@ -1,0 +1,199 @@
+"""CLI for the mapper artifact registry + tuning service.
+
+    python -m repro.service submit circuit pennant --iters 5 --wait
+    python -m repro.service status
+    python -m repro.service best --workload circuit
+    python -m repro.service export <artifact-id> --out artifact.json
+    python -m repro.service gc --keep 2
+
+The store path defaults to ``$REPRO_MAPPER_STORE`` or
+``mapper_store.db`` in the working directory; every subcommand takes
+``--store`` to override.  ``submit`` without ``--wait`` still drains
+before exiting (a CLI process cannot leave detached threads behind); use
+the :class:`~repro.service.TuningService` API for long-lived services.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import MapperStore, TuningService
+
+DEFAULT_STORE = os.environ.get("REPRO_MAPPER_STORE", "mapper_store.db")
+
+
+def _fmt_score(score) -> str:
+    return "-" if score is None else f"{score:.6g}"
+
+
+def cmd_submit(args) -> int:
+    from ..asi import registry
+    known = registry.names()
+    unknown = [w for w in args.workloads if w not in known]
+    if unknown:
+        print(f"error: unknown workload(s) {unknown}; see "
+              "python -m repro.tune --list", file=sys.stderr)
+        return 2
+    service = TuningService(MapperStore(args.store), workers=args.workers,
+                            checkpoint_dir=args.checkpoint_dir)
+    timed_out = 0
+    with service:
+        jobs = [service.submit(w, strategy=args.strategy,
+                               iterations=args.iters, batch=args.batch,
+                               seed=args.seed,
+                               feedback_level=args.feedback_level)
+                for w in args.workloads]
+        for job in jobs:
+            print(f"{job.id}  {job.workload}@{job.key[1]}  {job.state}")
+        try:
+            service.drain(timeout=args.timeout or None)
+        except TimeoutError:
+            # tuning threads cannot be killed mid-compile, so the flag
+            # bounds the *reported* outcome (exit 1), not the wait:
+            # closing the pool below still joins the running jobs
+            timed_out = sum(1 for j in jobs if not j.done())
+            print(f"timeout: {timed_out} job(s) still running after "
+                  f"{args.timeout:g}s; waiting for them to finish",
+                  file=sys.stderr)
+            service.drain()
+    failed = 0
+    for job in jobs:
+        line = (f"{job.id}  {job.workload}  {job.state}  "
+                f"best={_fmt_score(job.best_score)}  "
+                f"artifact={job.artifact_id or '-'}")
+        if job.resumed:
+            line += "  (resumed)"
+        print(line)
+        if job.state != "done":
+            failed += 1
+            if job.error:
+                print(job.error, file=sys.stderr)
+    return 1 if failed or timed_out else 0
+
+
+def cmd_status(args) -> int:
+    store = MapperStore(args.store)
+    rows = store.summary()
+    if not rows:
+        print(f"{args.store}: empty store")
+        return 0
+    w = max(len("workload"), *(len(r["workload"]) for r in rows)) + 2
+    m = max(len("mesh"), *(len(r["mesh"]) for r in rows)) + 2
+    print("workload".ljust(w) + "mesh".ljust(m)
+          + "artifacts".rjust(10) + "best".rjust(14) + "  best_id")
+    for r in rows:
+        print(r["workload"].ljust(w) + r["mesh"].ljust(m)
+              + str(r["artifacts"]).rjust(10)
+              + _fmt_score(r["best_score"]).rjust(14)
+              + f"  {(r['best_id'] or '-')[:12]}")
+    print(f"{len(store)} artifact(s) across {len(rows)} key(s)")
+    return 0
+
+
+def cmd_best(args) -> int:
+    store = MapperStore(args.store)
+    art = store.best(args.workload, args.mesh)
+    if art is None:
+        print(f"no scored artifact for {args.workload!r}"
+              + (f" @ {args.mesh}" if args.mesh else ""), file=sys.stderr)
+        return 1
+    print(f"id:          {art.id}")
+    print(f"workload:    {art.workload}  ({art.substrate})")
+    print(f"mesh:        {art.mesh}")
+    print(f"score:       {_fmt_score(art.score)}")
+    print(f"fingerprint: {art.fingerprint}")
+    print(f"provenance:  {json.dumps(art.provenance, sort_keys=True)}")
+    if args.show_mapper:
+        print("mapper:")
+        print(art.mapper)
+    return 0
+
+
+def cmd_export(args) -> int:
+    store = MapperStore(args.store)
+    art = store.get(args.id)
+    if art is None:
+        print(f"no artifact {args.id!r} in {args.store}", file=sys.stderr)
+        return 1
+    blob = json.dumps(art.to_dict(), indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(blob)
+    return 0
+
+
+def cmd_gc(args) -> int:
+    store = MapperStore(args.store)
+    deleted = store.gc(keep=args.keep)
+    print(f"deleted {deleted} artifact(s); {len(store)} remain "
+          f"(keep={args.keep} per workload x mesh)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.service",
+        description="Mapper artifact registry + async tuning service.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def add_store(p):
+        p.add_argument("--store", default=DEFAULT_STORE,
+                       help=f"store path (default: {DEFAULT_STORE})")
+
+    p = sub.add_parser("submit", help="enqueue tuning jobs and publish "
+                                      "the winners to the store")
+    p.add_argument("workloads", nargs="+", help="registry workload names")
+    p.add_argument("--strategy", default="trace")
+    p.add_argument("--iters", type=int, default=10)
+    p.add_argument("--batch", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--feedback-level", default="full")
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="write/resume Tuner checkpoints here")
+    p.add_argument("--timeout", type=float, default=0,
+                   help="seconds before the submit is reported failed "
+                        "(exit 1); running jobs are still joined -- "
+                        "tuning threads cannot be killed mid-compile "
+                        "(0 = no limit)")
+    p.add_argument("--wait", action="store_true",
+                   help="accepted for clarity; the CLI always drains")
+    add_store(p)
+    p.set_defaults(fn=cmd_submit)
+
+    p = sub.add_parser("status", help="artifact inventory of the store")
+    add_store(p)
+    p.set_defaults(fn=cmd_status)
+
+    p = sub.add_parser("best", help="show the best artifact for a workload")
+    p.add_argument("--workload", required=True)
+    p.add_argument("--mesh", default=None, help="geometry key, e.g. "
+                                                "16x16:data,model")
+    p.add_argument("--show-mapper", action="store_true")
+    add_store(p)
+    p.set_defaults(fn=cmd_best)
+
+    p = sub.add_parser("export", help="dump one artifact as JSON")
+    p.add_argument("id")
+    p.add_argument("--out", default=None)
+    add_store(p)
+    p.set_defaults(fn=cmd_export)
+
+    p = sub.add_parser("gc", help="prune all but the best artifacts per "
+                                  "(workload, mesh)")
+    p.add_argument("--keep", type=int, default=1)
+    add_store(p)
+    p.set_defaults(fn=cmd_gc)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

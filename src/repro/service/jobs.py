@@ -1,0 +1,253 @@
+"""The asynchronous tuning service: a job queue over ``asi.Tuner``.
+
+VibeCodeHPC's lesson (PAPERS.md): an agent auto-tuner earns its keep
+only when it runs *continuously* -- a persistent job/artifact layer, not
+a one-shot script.  :class:`TuningService` is that layer: ``submit``
+enqueues a tuning run on a thread pool, ``status``/``cancel``/``drain``
+manage it, and every completed run publishes its winner to the
+:class:`~repro.service.store.MapperStore` through the same
+``publish_result`` path the Tuner hook and the experiments sweep use.
+
+Concurrency notes:
+
+* Jobs **dedupe by store key**: a second ``submit`` for a workload whose
+  ``(workload, mesh)`` key already has a queued/running job returns that
+  in-flight job instead of double-tuning the same cell (the spec of the
+  first submit wins).
+* With a ``checkpoint_dir``, each job writes a Tuner JSON checkpoint
+  named by its (key x spec); a later submit with the same spec *resumes*
+  from it -- including the evalengine's ``.evalcache`` sidecar, so
+  already-paid compiles are never repaid across service restarts.
+* Workloads whose evaluators are not thread-safe stay safe: the Tuner's
+  own loop enforces ``parallel_safe`` per workload, and distinct jobs
+  touch distinct workload instances via the registry.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import os
+import re
+import threading
+import time
+import traceback
+from concurrent.futures import ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+from .store import MapperStore, publish_result, workload_mesh
+
+#: Job lifecycle: queued -> running -> done | failed; queued -> cancelled.
+JOB_STATES = ("queued", "running", "done", "failed", "cancelled")
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", s)
+
+
+@dataclass
+class JobSpec:
+    """The tuning parameters of one job (mirrors the Tuner front door)."""
+
+    strategy: str = "trace"
+    iterations: int = 10
+    batch: int = 1
+    seed: int = 0
+    feedback_level: str = "full"
+
+    def slug(self) -> str:
+        """Checkpoint-name component.  Deliberately excludes
+        ``iterations``: re-submitting the same spec with more iterations
+        must find -- and resume -- the earlier checkpoint."""
+        return (f"{self.strategy}-b{self.batch}"
+                f"-s{self.seed}-{self.feedback_level}")
+
+    def to_dict(self) -> Dict:
+        return {"strategy": self.strategy, "iterations": self.iterations,
+                "batch": self.batch, "seed": self.seed,
+                "feedback_level": self.feedback_level}
+
+
+@dataclass
+class Job:
+    """One tracked tuning run."""
+
+    id: str
+    workload: str
+    key: Tuple[str, str]       # (workload, mesh geometry) = the store key
+    spec: JobSpec
+    state: str = "queued"
+    submitted: float = field(default_factory=time.time)
+    started: Optional[float] = None
+    finished: Optional[float] = None
+    best_score: Optional[float] = None
+    artifact_id: Optional[str] = None
+    checkpoint: Optional[str] = None
+    resumed: bool = False
+    error: Optional[str] = None
+    future: Optional[object] = field(default=None, repr=False)
+
+    def done(self) -> bool:
+        return self.state in ("done", "failed", "cancelled")
+
+    def summary(self) -> Dict:
+        return {"id": self.id, "workload": self.workload,
+                "mesh": self.key[1], "spec": self.spec.to_dict(),
+                "state": self.state, "submitted": self.submitted,
+                "started": self.started, "finished": self.finished,
+                "best_score": self.best_score,
+                "artifact_id": self.artifact_id,
+                "checkpoint": self.checkpoint, "resumed": self.resumed,
+                "error": self.error}
+
+
+class TuningService:
+    """Thread-pool tuning jobs that publish winners to a MapperStore."""
+
+    def __init__(self, store: Union[MapperStore, str], *, workers: int = 2,
+                 checkpoint_dir: Optional[str] = None):
+        self.store = (store if isinstance(store, MapperStore)
+                      else MapperStore(store))
+        self.checkpoint_dir = checkpoint_dir
+        if checkpoint_dir:
+            os.makedirs(checkpoint_dir, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
+                                        thread_name_prefix="tuning")
+        self._lock = threading.Lock()
+        self._jobs: Dict[str, Job] = {}
+        self._inflight: Dict[Tuple[str, str], Job] = {}
+        self._ids = itertools.count(1)
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, workload, *, strategy: str = "trace",
+               iterations: int = 10, batch: int = 1, seed: int = 0,
+               feedback_level: str = "full") -> Job:
+        """Enqueue a tuning run; returns its :class:`Job` immediately.
+
+        ``workload`` is a registry name or a ``Workload`` instance.  If a
+        job for the same ``(workload, mesh)`` store key is already queued
+        or running, that job is returned instead (in-flight dedup).
+        """
+        from ..asi import registry
+        wl = registry.get(workload) if isinstance(workload, str) else workload
+        spec = JobSpec(strategy=strategy, iterations=iterations, batch=batch,
+                       seed=seed, feedback_level=feedback_level)
+        key = (wl.name, workload_mesh(wl))
+        with self._lock:
+            dup = self._inflight.get(key)
+            if dup is not None:
+                return dup
+            job = Job(id=f"job-{next(self._ids):04d}", workload=wl.name,
+                      key=key, spec=spec)
+            if self.checkpoint_dir:
+                job.checkpoint = os.path.join(
+                    self.checkpoint_dir,
+                    f"{_slug(wl.name)}@{_slug(key[1])}-{spec.slug()}.json")
+            self._jobs[job.id] = job
+            self._inflight[key] = job
+            # inside the lock: a concurrent drain()/cancel() must never
+            # observe the job without its future (the worker's _run
+            # re-acquires the lock, so this cannot deadlock)
+            job.future = self._pool.submit(self._run, job, wl)
+        return job
+
+    def _run(self, job: Job, wl) -> Job:
+        with self._lock:
+            if job.state == "cancelled":
+                return job
+            job.state = "running"
+            job.started = time.time()
+        try:
+            from ..asi import Tuner
+            if job.checkpoint and os.path.exists(job.checkpoint):
+                tuner = Tuner.from_checkpoint(
+                    job.checkpoint, iterations=job.spec.iterations,
+                    workload=wl)
+                job.resumed = True
+                result = tuner.resume()
+            else:
+                tuner = Tuner(workload=wl, strategy=job.spec.strategy,
+                              iterations=job.spec.iterations,
+                              batch=job.spec.batch, seed=job.spec.seed,
+                              feedback_level=job.spec.feedback_level,
+                              checkpoint=job.checkpoint)
+                result = tuner.run()
+            artifact = publish_result(
+                self.store, wl, result,
+                provenance={"source": "service", "job": job.id,
+                            "checkpoint": job.checkpoint,
+                            "resumed": job.resumed, **job.spec.to_dict()})
+            if math.isfinite(result.best_score):
+                job.best_score = float(result.best_score)
+            job.artifact_id = artifact.id if artifact else None
+            job.state = "done"
+        except Exception:
+            job.error = traceback.format_exc(limit=8)
+            job.state = "failed"
+        finally:
+            job.finished = time.time()
+            with self._lock:
+                if self._inflight.get(job.key) is job:
+                    del self._inflight[job.key]
+        return job
+
+    # -- tracking ------------------------------------------------------------
+    def status(self, job_id: Optional[str] = None):
+        """Summary dict for one job, or all jobs (submission order)."""
+        with self._lock:
+            if job_id is not None:
+                if job_id not in self._jobs:
+                    raise KeyError(f"unknown job {job_id!r}; known: "
+                                   f"{sorted(self._jobs)}")
+                return self._jobs[job_id].summary()
+            return [j.summary() for j in self._jobs.values()]
+
+    def jobs(self) -> List[Job]:
+        with self._lock:
+            return list(self._jobs.values())
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a *queued* job; running jobs are not interrupted
+        (tuning iterations are checkpointed, not killable mid-compile).
+        Returns True when the job was cancelled."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None:
+                raise KeyError(f"unknown job {job_id!r}")
+            if job.state != "queued":
+                return False
+            if job.future is not None and not job.future.cancel():
+                return False    # the pool already started it
+            job.state = "cancelled"
+            job.finished = time.time()
+            if self._inflight.get(job.key) is job:
+                del self._inflight[job.key]
+            return True
+
+    def drain(self, timeout: Optional[float] = None) -> List[Job]:
+        """Wait for every submitted job to finish; returns all jobs.
+        Raises TimeoutError if ``timeout`` (seconds) elapses first."""
+        futures = [j.future for j in self.jobs() if j.future is not None]
+        done, pending = wait(futures, timeout=timeout)
+        if pending:
+            raise TimeoutError(f"{len(pending)} job(s) still running "
+                               f"after {timeout}s")
+        return self.jobs()
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "TuningService":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def __repr__(self) -> str:
+        with self._lock:
+            states: Dict[str, int] = {}
+            for j in self._jobs.values():
+                states[j.state] = states.get(j.state, 0) + 1
+        return f"<TuningService jobs={states} store={self.store.path!r}>"

@@ -1,0 +1,101 @@
+"""Mapper resolution: artifact -> expert preset -> default, never empty.
+
+Serving must always have a mapper.  ``resolve_mapper`` looks the
+workload up in the :class:`~repro.service.store.MapperStore` by its
+``(workload, mesh geometry)`` key; on a miss it falls back to the
+expert-written preset (:mod:`repro.core.mapping.presets` for LM cells,
+the workload's own ``expert_mapper`` otherwise) and finally to the
+workload's default decisions.  With ``tune_on_miss`` and a
+:class:`~repro.service.jobs.TuningService`, a miss additionally enqueues
+a background tuning job so the *next* resolution finds an artifact --
+serving is never blocked on tuning.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .store import MapperStore, MapperArtifact, mesh_key
+
+
+@dataclass
+class Resolution:
+    """Where a serving mapper came from."""
+
+    mapper: str
+    origin: str                 # "artifact" | "preset" | "default"
+    workload: str
+    mesh: Optional[str] = None
+    artifact: Optional[MapperArtifact] = None
+    job: Optional[object] = None    # tune-on-miss Job, when one was enqueued
+
+    def __repr__(self) -> str:
+        ref = self.artifact.id[:12] if self.artifact else "-"
+        return (f"<Resolution {self.workload!r}@{self.mesh} "
+                f"origin={self.origin} artifact={ref}>")
+
+
+def _workload_instance(workload):
+    if isinstance(workload, str):
+        from ..asi import registry
+        reg = registry.populate()
+        return reg.get(workload) if workload in reg else None
+    return workload
+
+
+def preset_mapper(workload, step: str = "decode") -> Optional[str]:
+    """The expert-written fallback for a workload (name or instance).
+
+    LM cells -- registered or ad hoc ``lm/<arch>/...`` names -- use the
+    per-arch expert presets; other workloads use their own
+    ``expert_mapper`` when they ship one.
+    """
+    name = workload if isinstance(workload, str) else workload.name
+    if name.startswith("lm/"):
+        from ..core.mapping.presets import expert_mapper
+        return expert_mapper(name.split("/")[1], step)
+    wl = _workload_instance(workload)
+    return getattr(wl, "expert_mapper", None) if wl is not None else None
+
+
+def resolve_mapper(store: Optional[MapperStore], workload, mesh=None, *,
+                   step: str = "decode", service=None,
+                   tune_on_miss: bool = False) -> Resolution:
+    """Resolve the mapper to serve ``workload`` on ``mesh``.
+
+    ``workload`` is a registry name or a ``Workload`` instance; ``mesh``
+    a real/abstract mesh, a geometry key string, or None (any geometry
+    -- artifacts do not port across geometries, so serving callers
+    should pin one).  Resolution order: best store artifact for the key,
+    else expert preset for ``step``, else the workload's rendered
+    default decisions.  On a store miss with ``tune_on_miss`` and a
+    ``service``, a background tuning job is enqueued (deduped by the
+    service) and returned on the Resolution.
+    """
+    name = workload if isinstance(workload, str) else workload.name
+    mkey = mesh_key(mesh) if mesh is not None else None
+    art = store.best(name, mkey) if store is not None else None
+    if art is not None:
+        return Resolution(art.mapper, "artifact", name, mkey, artifact=art)
+
+    job = None
+    if tune_on_miss and service is not None:
+        from .store import workload_mesh
+        wl = _workload_instance(workload)
+        # only enqueue when the tuned artifact would land under the
+        # requested key: the workload tunes on workload_mesh(wl), and
+        # mappers do not port across geometries -- a mismatched enqueue
+        # would re-tune on every resolve without ever serving
+        if wl is not None and (mkey is None or workload_mesh(wl) == mkey):
+            job = service.submit(wl)
+    preset = preset_mapper(workload, step)
+    if preset:
+        return Resolution(preset, "preset", name, mkey, job=job)
+    wl = _workload_instance(workload)
+    if wl is None:
+        raise KeyError(
+            f"cannot resolve a mapper for unknown workload {name!r}: no "
+            "store artifact, no expert preset, and not in the registry")
+    return Resolution(wl.render_mapper(wl.default_decisions()), "default",
+                      name, mkey, job=job)

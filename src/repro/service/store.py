@@ -1,0 +1,361 @@
+"""The mapper artifact registry: tuned mappers as first-class artifacts.
+
+A tuned mapper used to die inside its Tuner checkpoint; nothing routed
+the winners that tuning finds into anything that serves.  The
+:class:`MapperStore` makes mapping decisions portable artifacts (the
+Mapple observation: a mapping is a small, versionable object keyed by
+machine geometry): each :class:`MapperArtifact` records the mapper DSL
+source, its plan fingerprint (reusing the evaluation engine's
+canonicalization when the workload exposes it), the achieved score, and
+full provenance (strategy, feedback level, seed, checkpoint reference).
+
+Storage is a sqlite index over JSON blobs -- the same stdlib,
+transactional, multi-process-safe choice as the evalengine
+:class:`~repro.core.evalengine.store.DiskCache` -- content-addressed by
+the sha256 of ``(workload, substrate, mesh, mapper, fingerprint)``, so
+re-publishing an identical winner is idempotent.  ``best(workload,
+mesh)`` is the serving-side resolution primitive; the expert-preset
+fallback lives in :mod:`repro.service.resolve`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sqlite3
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+#: Bump when the artifact schema changes.  Enforced via sqlite's
+#: ``user_version`` pragma: opening a store written at another version
+#: raises instead of misreading rows one by one.
+STORE_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+def _fmt_geometry(shape, axes=()) -> str:
+    desc = "x".join(str(int(s)) for s in shape)
+    if axes:
+        desc += ":" + ",".join(axes)
+    return desc
+
+
+def mesh_key(mesh) -> str:
+    """Geometry key of a (real or abstract) mesh: ``16x16:data,model``."""
+    if isinstance(mesh, str):
+        return mesh
+    return _fmt_geometry(mesh.devices.shape, tuple(mesh.axis_names))
+
+
+def workload_mesh(workload) -> str:
+    """The machine-geometry key a workload tunes over.
+
+    A workload may declare its own via a ``mesh_geometry()`` method;
+    otherwise the key is derived from the substrate: LM cells tune on
+    the production mesh (the multi-pod variant when ``multi_pod``, the
+    host mesh when ``smoke``), the task-graph apps and the matmul
+    algorithms on their fixed paper machines.
+    """
+    mg = getattr(workload, "mesh_geometry", None)
+    if callable(mg):
+        return str(mg())
+    sub = getattr(workload, "substrate", "")
+    if sub == "lm":
+        if getattr(workload, "smoke", False):
+            from ..launch.mesh import make_host_mesh
+            return mesh_key(make_host_mesh())
+        if getattr(workload, "multi_pod", False):
+            return _fmt_geometry((2, 16, 16), ("pod", "data", "model"))
+        return _fmt_geometry((16, 16), ("data", "model"))
+    if sub in ("app", "app-jax"):
+        from ..asi.adapters_apps import APP_MACHINE
+        return _fmt_geometry(APP_MACHINE)
+    if sub == "matmul":
+        from ..asi.adapters_mm import MM_MACHINE
+        return _fmt_geometry(MM_MACHINE)
+    return "any"
+
+
+def mapper_fingerprint(workload, mapper_src: str) -> str:
+    """Plan fingerprint of ``mapper_src`` in the workload's cell.
+
+    Reuses the evaluation engine's canonicalization when the workload's
+    (already-constructed) evaluator exposes one -- two textually
+    different mappers with the same canonical plan get the same
+    fingerprint.  Falls back to an exact-text hash: constructing an LM
+    cell context just to fingerprint would cost a mesh build.
+    """
+    from ..core.evalengine.fingerprint import text_key
+    evaluator = getattr(workload, "_evaluator", None)
+    engine = getattr(evaluator, "engine", None)
+    ctx = getattr(engine, "ctx", None)
+    if ctx is not None:
+        try:
+            return ctx.fingerprint(ctx.compile_mapper(mapper_src))
+        except Exception:
+            pass
+    return "text:" + text_key(mapper_src)
+
+
+# ---------------------------------------------------------------------------
+# Artifact
+# ---------------------------------------------------------------------------
+@dataclass
+class MapperArtifact:
+    """One published mapper: source + identity + score + provenance."""
+
+    workload: str
+    substrate: str
+    mesh: str             # machine-geometry key (see mesh_key)
+    mapper: str           # DSL source
+    fingerprint: str      # plan fingerprint (or "text:<sha1>" fallback)
+    score: Optional[float] = None     # seconds, lower better; None = unscored
+    provenance: Dict = field(default_factory=dict)
+    created: float = 0.0
+    id: str = ""          # content address; filled by build()/the store
+
+    @classmethod
+    def build(cls, workload: str, substrate: str, mesh: str, mapper: str, *,
+              fingerprint: str = "", score: Optional[float] = None,
+              provenance: Optional[Dict] = None,
+              created: Optional[float] = None) -> "MapperArtifact":
+        if not fingerprint:
+            from ..core.evalengine.fingerprint import text_key
+            fingerprint = "text:" + text_key(mapper)
+        art = cls(workload=workload, substrate=substrate, mesh=mesh,
+                  mapper=mapper, fingerprint=fingerprint, score=score,
+                  provenance=dict(provenance or {}),
+                  created=time.time() if created is None else created)
+        art.id = art.content_id()
+        return art
+
+    def content_id(self) -> str:
+        """Content address: identity fields only, not score/provenance --
+        re-publishing the same mapper for the same cell is idempotent."""
+        blob = json.dumps(
+            {"v": STORE_VERSION, "workload": self.workload,
+             "substrate": self.substrate, "mesh": self.mesh,
+             "mapper": self.mapper, "fingerprint": self.fingerprint},
+            sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    def key(self) -> Tuple[str, str]:
+        return (self.workload, self.mesh)
+
+    def to_dict(self) -> Dict:
+        return {"id": self.id, "workload": self.workload,
+                "substrate": self.substrate, "mesh": self.mesh,
+                "mapper": self.mapper, "fingerprint": self.fingerprint,
+                "score": self.score, "provenance": self.provenance,
+                "created": self.created}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "MapperArtifact":
+        return cls(workload=d["workload"], substrate=d["substrate"],
+                   mesh=d["mesh"], mapper=d["mapper"],
+                   fingerprint=d["fingerprint"], score=d.get("score"),
+                   provenance=d.get("provenance", {}),
+                   created=d.get("created", 0.0), id=d.get("id", ""))
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+class MapperStore:
+    """Content-addressed, versioned mapper registry over sqlite."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self._lock = threading.RLock()
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        with self._lock:
+            ver = int(self._conn.execute(
+                "PRAGMA user_version").fetchone()[0])
+            has_table = self._conn.execute(
+                "SELECT name FROM sqlite_master WHERE type='table' "
+                "AND name='artifacts'").fetchone() is not None
+            if has_table and ver != STORE_VERSION:
+                self._conn.close()
+                raise ValueError(
+                    f"mapper store {path!r} is schema version {ver}, "
+                    f"this code expects {STORE_VERSION}; migrate or "
+                    "start a fresh store")
+            self._conn.execute(
+                f"PRAGMA user_version = {int(STORE_VERSION)}")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS artifacts ("
+                "  id TEXT PRIMARY KEY,"
+                "  workload TEXT NOT NULL,"
+                "  substrate TEXT NOT NULL,"
+                "  mesh TEXT NOT NULL,"
+                "  fingerprint TEXT NOT NULL,"
+                "  score REAL,"
+                "  created REAL NOT NULL,"
+                "  payload TEXT NOT NULL)")
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS idx_artifacts_key "
+                "ON artifacts (workload, mesh)")
+            self._conn.commit()
+
+    # -- write --------------------------------------------------------------
+    def put(self, artifact: MapperArtifact) -> MapperArtifact:
+        """Insert (or idempotently refresh) an artifact; returns it with
+        its content address filled in."""
+        if not artifact.id:
+            artifact.id = artifact.content_id()
+        blob = json.dumps(artifact.to_dict(), allow_nan=False)
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO artifacts "
+                "(id, workload, substrate, mesh, fingerprint, score, "
+                " created, payload) VALUES (?, ?, ?, ?, ?, ?, ?, ?)",
+                (artifact.id, artifact.workload, artifact.substrate,
+                 artifact.mesh, artifact.fingerprint, artifact.score,
+                 artifact.created, blob))
+            self._conn.commit()
+        return artifact
+
+    # -- read ---------------------------------------------------------------
+    def get(self, artifact_id: str) -> Optional[MapperArtifact]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT payload FROM artifacts WHERE id = ?",
+                (artifact_id,)).fetchone()
+        if row is None:
+            return None
+        try:
+            return MapperArtifact.from_dict(json.loads(row[0]))
+        except (json.JSONDecodeError, KeyError):
+            return None    # corrupt blob: treat as a miss
+
+    def best(self, workload: str,
+             mesh: Optional[str] = None) -> Optional[MapperArtifact]:
+        """Lowest-scoring artifact for ``(workload, mesh)``.
+
+        ``mesh`` is a geometry key (or a mesh; see :func:`mesh_key`);
+        ``None`` matches any geometry -- mappers do not port across
+        geometries, so serving callers should always pin one.  Unscored
+        artifacts never win.
+        """
+        q = ("SELECT payload FROM artifacts WHERE workload = ? "
+             "AND score IS NOT NULL")
+        args: List = [workload]
+        if mesh is not None:
+            q += " AND mesh = ?"
+            args.append(mesh_key(mesh))
+        q += " ORDER BY score ASC, created DESC LIMIT 1"
+        with self._lock:
+            row = self._conn.execute(q, args).fetchone()
+        return (MapperArtifact.from_dict(json.loads(row[0]))
+                if row else None)
+
+    def list(self, workload: Optional[str] = None,
+             mesh: Optional[str] = None) -> List[MapperArtifact]:
+        q = "SELECT payload FROM artifacts"
+        conds, args = [], []
+        if workload is not None:
+            conds.append("workload = ?")
+            args.append(workload)
+        if mesh is not None:
+            conds.append("mesh = ?")
+            args.append(mesh_key(mesh))
+        if conds:
+            q += " WHERE " + " AND ".join(conds)
+        q += " ORDER BY workload, mesh, (score IS NULL), score, created DESC"
+        with self._lock:
+            rows = self._conn.execute(q, args).fetchall()
+        return [MapperArtifact.from_dict(json.loads(r[0])) for r in rows]
+
+    def summary(self) -> List[Dict]:
+        """One row per (workload, mesh): count + the current best."""
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT workload, mesh, COUNT(*), MIN(score) "
+                "FROM artifacts GROUP BY workload, mesh "
+                "ORDER BY workload, mesh").fetchall()
+        out = []
+        for workload, mesh, count, best_score in rows:
+            best = self.best(workload, mesh)
+            out.append({"workload": workload, "mesh": mesh,
+                        "artifacts": count, "best_score": best_score,
+                        "best_id": best.id if best else None})
+        return out
+
+    # -- maintenance --------------------------------------------------------
+    def gc(self, keep: int = 1) -> int:
+        """Keep the ``keep`` best artifacts per (workload, mesh); delete
+        the rest (unscored artifacts are pruned first).  Returns the
+        number deleted."""
+        if keep < 0:
+            raise ValueError("keep must be >= 0")
+        deleted = 0
+        with self._lock:
+            keys = self._conn.execute(
+                "SELECT DISTINCT workload, mesh FROM artifacts").fetchall()
+            for workload, mesh in keys:
+                ids = [r[0] for r in self._conn.execute(
+                    "SELECT id FROM artifacts WHERE workload = ? "
+                    "AND mesh = ? "
+                    "ORDER BY (score IS NULL), score, created DESC",
+                    (workload, mesh)).fetchall()]
+                for aid in ids[keep:]:
+                    self._conn.execute(
+                        "DELETE FROM artifacts WHERE id = ?", (aid,))
+                    deleted += 1
+            self._conn.commit()
+        return deleted
+
+    def __contains__(self, artifact_id: str) -> bool:
+        return self.get(artifact_id) is not None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return int(self._conn.execute(
+                "SELECT COUNT(*) FROM artifacts").fetchone()[0])
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+    def __enter__(self) -> "MapperStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def __repr__(self) -> str:
+        return f"<MapperStore {self.path!r} artifacts={len(self)}>"
+
+
+# ---------------------------------------------------------------------------
+# Publishing (the one path tuner / service / experiments all go through)
+# ---------------------------------------------------------------------------
+def publish_result(store: MapperStore, workload, result,
+                   provenance: Optional[Dict] = None
+                   ) -> Optional[MapperArtifact]:
+    """Publish a tuning run's winner (a ``SearchResult``) to ``store``.
+
+    Returns ``None`` -- publishing nothing -- when the run found no valid
+    candidate (no finite best score): the registry only holds mappers
+    that actually executed.
+    """
+    import math
+    score = result.best_score
+    if score is None or not math.isfinite(score) or not result.best_mapper:
+        return None
+    return store.put(MapperArtifact.build(
+        workload=workload.name,
+        substrate=getattr(workload, "substrate", ""),
+        mesh=workload_mesh(workload),
+        mapper=result.best_mapper,
+        fingerprint=mapper_fingerprint(workload, result.best_mapper),
+        score=float(score),
+        provenance=dict(provenance or {})))

@@ -1,0 +1,112 @@
+"""Serving-engine coverage: constructor contract, prefill+decode smoke
+against a raw-model greedy reference, and store-backed resolution."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.mapping.presets import EXPERT_SERVE_MAPPER
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model
+from repro.serve import Engine, ServeConfig
+
+RNG = jax.random.PRNGKey(0)
+ARCH = "stablelm-1.6b"
+
+
+def _smoke_model():
+    return get_model(get_config(ARCH, smoke=True))
+
+
+def _greedy_reference(model, params, tokens, n_new, max_len):
+    """Greedy decode straight through the model (no mapping plan)."""
+    b, s = tokens.shape
+    caches = model.init_serve_caches(b, max_len)
+    logits, caches = model.prefill(params, {"tokens": tokens}, caches)
+    toks = [jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)]
+    for i in range(n_new - 1):
+        logits, caches = model.decode_step(params, toks[-1], caches, s + i)
+        toks.append(jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32))
+    return jnp.concatenate(toks, axis=1)
+
+
+def test_generate_without_params_raises_runtime_error():
+    model = _smoke_model()
+    eng = Engine(model, make_host_mesh(), EXPERT_SERVE_MAPPER,
+                 ServeConfig(max_new_tokens=2, max_len=16))
+    with pytest.raises(RuntimeError, match="no parameters"):
+        eng.generate(jnp.ones((1, 4), jnp.int32))
+
+
+def test_constructor_accepts_params_and_load_params_still_works():
+    model = _smoke_model()
+    params = model.init(RNG)
+    mesh = make_host_mesh()
+    assert Engine(model, mesh, EXPERT_SERVE_MAPPER,
+                  params=params)._params is params
+    eng = Engine(model, mesh, EXPERT_SERVE_MAPPER)
+    assert eng.load_params(params) is eng
+    assert eng._params is params
+
+
+@pytest.mark.slow
+def test_engine_matches_raw_model_greedy_decode():
+    """The mapped engine's greedy tokens are pinned to the raw model's."""
+    model = _smoke_model()
+    params = model.init(RNG)
+    cfg = ServeConfig(max_new_tokens=4, max_len=32)
+    eng = Engine(model, make_host_mesh(), EXPERT_SERVE_MAPPER, cfg,
+                 params=params)
+    tokens = jax.random.randint(RNG, (2, 6), 0, model.cfg.vocab_size)
+    out = eng.generate(tokens)["tokens"]
+    assert out.shape == (2, cfg.max_new_tokens)
+    assert out.dtype == jnp.int32
+    ref = _greedy_reference(model, params, tokens, cfg.max_new_tokens,
+                            cfg.max_len)
+    assert (out == ref).all(), (out, ref)
+    # generation is deterministic
+    assert (eng.generate(tokens)["tokens"] == out).all()
+
+
+@pytest.mark.slow
+def test_from_store_resolves_artifact_and_decodes(tmp_path):
+    from repro.service import MapperArtifact, MapperStore, mesh_key
+    model = _smoke_model()
+    params = model.init(RNG)
+    mesh = make_host_mesh()
+    name = f"lm/{ARCH}/serve-smoke"
+    store = MapperStore(str(tmp_path / "mappers.db"))
+
+    # store miss -> expert serve preset, and the engine still serves
+    eng = Engine.from_store(name, mesh, store=store, params=params,
+                            model=model,
+                            cfg=ServeConfig(max_new_tokens=2, max_len=16))
+    assert eng.resolution.origin == "preset"
+    assert eng.resolution.mapper == EXPERT_SERVE_MAPPER
+
+    # published artifact wins over the preset
+    store.put(MapperArtifact.build(
+        workload=name, substrate="lm", mesh=mesh_key(mesh),
+        mapper=EXPERT_SERVE_MAPPER, score=1.0,
+        provenance={"source": "test"}))
+    eng = Engine.from_store(name, mesh, store=store, params=params,
+                            model=model,
+                            cfg=ServeConfig(max_new_tokens=2, max_len=16))
+    assert eng.resolution.origin == "artifact"
+    assert eng.resolution.artifact.score == 1.0
+    out = eng.generate(jnp.ones((1, 4), jnp.int32))["tokens"]
+    assert out.shape == (1, 2)
+
+    # model= is implied for lm/ names (smoke config here)
+    eng = Engine.from_store(name, mesh, store=store, params=params,
+                            smoke=True,
+                            cfg=ServeConfig(max_new_tokens=2, max_len=16))
+    assert eng.model.cfg.name == get_config(ARCH, smoke=True).name
+
+
+def test_from_store_requires_model_for_non_lm_workloads(tmp_path):
+    from repro.service import MapperStore
+    with pytest.raises(ValueError, match="model="):
+        Engine.from_store("circuit", make_host_mesh(),
+                          store=MapperStore(str(tmp_path / "m.db")))

@@ -1,0 +1,469 @@
+"""Mapper artifact registry + async tuning service.
+
+Fast tests run on the deterministic task-graph/matmul workloads; the
+end-to-end tune -> store -> serve round trip on a real (smoke-scale) LM
+cell is marked slow.
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.apps import circuit
+from repro.asi import Tuner, registry, tune
+from repro.asi.adapters_apps import TaskGraphWorkload
+from repro.service import (MapperArtifact, MapperStore, TuningService,
+                           mesh_key, preset_mapper, publish_result,
+                           resolve_mapper, workload_mesh)
+
+
+def _store(tmp_path, name="store.db") -> MapperStore:
+    return MapperStore(str(tmp_path / name))
+
+
+def _artifact(name="circuit", mesh="2x4", score=1.0,
+              mapper="Task * GPU;\nmtpu = Machine(GPU);"):
+    return MapperArtifact.build(workload=name, substrate="app", mesh=mesh,
+                                mapper=mapper, score=score,
+                                provenance={"source": "test"})
+
+
+# ---------------------------------------------------------------------------
+# MapperStore
+# ---------------------------------------------------------------------------
+def test_put_get_roundtrip(tmp_path):
+    store = _store(tmp_path)
+    art = store.put(_artifact(score=1.25))
+    assert art.id and len(art.id) == 64
+    got = store.get(art.id)
+    assert got.to_dict() == art.to_dict()
+    assert art.id in store
+    assert store.get("missing") is None
+
+
+def test_content_addressing_is_idempotent(tmp_path):
+    store = _store(tmp_path)
+    a = store.put(_artifact())
+    b = store.put(_artifact())        # same content -> same id, no dup
+    assert a.id == b.id
+    assert len(store) == 1
+    c = store.put(_artifact(mapper="Task * CPU;"))
+    assert c.id != a.id
+    assert len(store) == 2
+
+
+def test_best_picks_lowest_score_and_pins_mesh(tmp_path):
+    store = _store(tmp_path)
+    store.put(_artifact(score=2.0, mapper="Task a GPU;"))
+    store.put(_artifact(score=1.0, mapper="Task b GPU;"))
+    store.put(_artifact(score=0.5, mapper="Task c GPU;", mesh="4x4"))
+    store.put(MapperArtifact.build(workload="circuit", substrate="app",
+                                   mesh="2x4", mapper="Task u GPU;"))
+    best = store.best("circuit", "2x4")
+    assert best.score == 1.0             # unscored + other-mesh never win
+    assert store.best("circuit").score == 0.5   # any-mesh lookup
+    assert store.best("circuit", "8x8") is None
+    assert store.best("nope") is None
+
+
+def test_gc_keeps_the_best_per_key(tmp_path):
+    store = _store(tmp_path)
+    for i in range(5):
+        store.put(_artifact(score=float(i + 1), mapper=f"Task t{i} GPU;"))
+    store.put(MapperArtifact.build(workload="circuit", substrate="app",
+                                   mesh="2x4", mapper="Task unscored GPU;"))
+    store.put(_artifact(name="pennant", score=3.0))
+    deleted = store.gc(keep=2)
+    assert deleted == 4
+    assert len(store) == 3
+    remaining = {a.score for a in store.list(workload="circuit")}
+    assert remaining == {1.0, 2.0}       # best kept, unscored pruned first
+    assert store.best("pennant").score == 3.0
+
+
+def test_store_refuses_other_schema_versions(tmp_path):
+    import sqlite3
+
+    from repro.service.store import STORE_VERSION
+    path = str(tmp_path / "old.db")
+    store = MapperStore(path)
+    store.put(_artifact())
+    store.close()
+    conn = sqlite3.connect(path)
+    conn.execute(f"PRAGMA user_version = {STORE_VERSION + 1}")
+    conn.commit()
+    conn.close()
+    with pytest.raises(ValueError, match="schema version"):
+        MapperStore(path)
+    # a fresh (empty) file always opens and is stamped current
+    fresh = MapperStore(str(tmp_path / "fresh.db"))
+    assert len(fresh) == 0
+
+
+def test_summary_lists_keys(tmp_path):
+    store = _store(tmp_path)
+    store.put(_artifact(score=1.5))
+    store.put(_artifact(score=1.0, mapper="Task z GPU;"))
+    store.put(_artifact(name="pennant", score=2.0))
+    rows = store.summary()
+    assert [(r["workload"], r["artifacts"], r["best_score"])
+            for r in rows] == [("circuit", 2, 1.0), ("pennant", 1, 2.0)]
+    assert rows[0]["best_id"] == store.best("circuit").id
+
+
+# ---------------------------------------------------------------------------
+# Keys
+# ---------------------------------------------------------------------------
+def test_workload_mesh_by_substrate():
+    assert workload_mesh(registry.get("circuit")) == "2x4"
+    assert workload_mesh(registry.get("matmul/cannon")) == "2x4"
+    from repro.asi.adapters_lm import LMCellWorkload
+    assert workload_mesh(
+        LMCellWorkload("stablelm-1.6b", "train_4k")) == "16x16:data,model"
+    assert workload_mesh(
+        LMCellWorkload("stablelm-1.6b", "train_4k",
+                       multi_pod=True)) == "2x16x16:pod,data,model"
+
+    class Custom:
+        substrate = "weird"
+        def mesh_geometry(self):
+            return "3x5:a,b"
+    assert workload_mesh(Custom()) == "3x5:a,b"
+    class Unknown:
+        substrate = "weird"
+    assert workload_mesh(Unknown()) == "any"
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+def test_resolve_prefers_artifact_then_preset(tmp_path):
+    store = _store(tmp_path)
+    wl = registry.get("circuit")
+    miss = resolve_mapper(store, "circuit", workload_mesh(wl))
+    assert miss.origin == "preset"
+    assert miss.mapper == wl.expert_mapper
+    art = store.put(_artifact(mesh=workload_mesh(wl)))
+    hit = resolve_mapper(store, "circuit", workload_mesh(wl))
+    assert hit.origin == "artifact"
+    assert hit.artifact.id == art.id
+    assert hit.mapper == art.mapper
+    # a different geometry does not see the artifact
+    assert resolve_mapper(store, "circuit", "9x9").origin == "preset"
+
+
+def test_resolve_falls_back_to_default_decisions():
+    wl = TaskGraphWorkload(circuit.make_app(), name="circuit-noexpert")
+    res = resolve_mapper(None, wl)
+    assert res.origin == "default"
+    assert res.mapper == wl.render_mapper(wl.default_decisions())
+
+
+def test_resolve_lm_presets_without_registry_entry():
+    from repro.core.mapping.presets import expert_mapper
+    res = resolve_mapper(None, "lm/stablelm-1.6b/decode_32k")
+    assert res.origin == "preset"
+    assert res.mapper == expert_mapper("stablelm-1.6b", "decode")
+    train = resolve_mapper(None, "lm/qwen3-14b/train_4k", step="train")
+    assert train.mapper == expert_mapper("qwen3-14b", "train")
+    assert preset_mapper("lm/qwen3-14b/x", "train") == train.mapper
+
+
+def test_resolve_unknown_workload_raises():
+    with pytest.raises(KeyError, match="unknown workload"):
+        resolve_mapper(None, "no-such-workload")
+
+
+def test_tune_on_miss_enqueues_then_serves_the_artifact(tmp_path):
+    store = _store(tmp_path)
+    mesh = workload_mesh(registry.get("circuit"))   # "2x4"
+    with TuningService(store, workers=1) as service:
+        miss = resolve_mapper(store, "circuit", mesh, service=service,
+                              tune_on_miss=True)
+        assert miss.origin == "preset"
+        assert miss.job is not None and miss.job.workload == "circuit"
+        # a second resolve while the job is in flight dedupes to it
+        again = resolve_mapper(store, "circuit", mesh, service=service,
+                               tune_on_miss=True)
+        assert again.job is None or again.job is miss.job
+        service.drain(timeout=120)
+    assert miss.job.state == "done"
+    hit = resolve_mapper(store, "circuit", mesh)
+    assert hit.origin == "artifact"
+    assert hit.artifact.id == store.get(miss.job.artifact_id).id
+
+
+def test_tune_on_miss_skips_mismatched_geometry(tmp_path):
+    """A tuned artifact lands under workload_mesh(wl); requesting a
+    different geometry must not enqueue a job that can never serve it."""
+    store = _store(tmp_path)
+    with TuningService(store, workers=1) as service:
+        res = resolve_mapper(store, "circuit", "9x9", service=service,
+                             tune_on_miss=True)
+        assert res.origin == "preset"
+        assert res.job is None
+        assert service.jobs() == []
+        # no pinned geometry: the enqueue is always key-compatible
+        res = resolve_mapper(store, "circuit", None, service=service,
+                             tune_on_miss=True)
+        assert res.job is not None
+        service.drain(timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# TuningService
+# ---------------------------------------------------------------------------
+def _gated_workload(name):
+    """A circuit workload whose evaluator blocks until ``gate`` is set."""
+    wl = TaskGraphWorkload(circuit.make_app(), name=name)
+    real = wl.evaluator()
+    gate = threading.Event()
+
+    def gated(mapper_src):
+        assert gate.wait(timeout=60), "gate never opened"
+        return real(mapper_src)
+
+    wl._evaluator = gated
+    return wl, gate
+
+
+def test_submit_completes_and_publishes(tmp_path):
+    store = _store(tmp_path)
+    with TuningService(store, workers=2) as service:
+        job = service.submit("circuit", iterations=3)
+        service.drain(timeout=120)
+    assert job.state == "done"
+    assert job.done() and job.error is None
+    assert job.best_score is not None
+    art = store.get(job.artifact_id)
+    assert art.workload == "circuit"
+    assert art.mesh == "2x4"
+    assert art.score == job.best_score
+    assert art.provenance["source"] == "service"
+    assert art.provenance["job"] == job.id
+    assert store.best("circuit", "2x4").id == art.id
+    # the winner matches a plain tune() of the same spec (determinism)
+    ref = tune("circuit", strategy="trace", iterations=3)
+    assert job.best_score == ref.best_score
+    assert art.mapper == ref.best_mapper
+
+
+def test_two_concurrent_jobs_both_complete(tmp_path):
+    store = _store(tmp_path)
+    with TuningService(store, workers=2) as service:
+        jobs = [service.submit("circuit", iterations=3),
+                service.submit("matmul/cannon", iterations=3)]
+        done = service.drain(timeout=180)
+    assert [j.state for j in done] == ["done", "done"]
+    assert len({j.artifact_id for j in jobs}) == 2
+    assert len(store) == 2
+
+
+def test_duplicate_submit_dedupes_to_inflight_job(tmp_path):
+    wl, gate = _gated_workload("gated-circuit")
+    with TuningService(_store(tmp_path), workers=1) as service:
+        j1 = service.submit(wl, iterations=2)
+        j2 = service.submit(wl, iterations=7)   # same store key: coalesced
+        assert j2 is j1
+        assert len(service.jobs()) == 1
+        gate.set()
+        service.drain(timeout=120)
+        assert j1.state == "done"
+        j3 = service.submit(wl, iterations=2)   # no longer in flight
+        assert j3 is not j1
+        gate.set()
+        service.drain(timeout=120)
+
+
+def test_cancel_queued_job(tmp_path):
+    wl, gate = _gated_workload("gated-circuit-2")
+    with TuningService(_store(tmp_path), workers=1) as service:
+        j1 = service.submit(wl, iterations=2)
+        for _ in range(100):        # wait until the worker picks j1 up
+            if j1.state == "running":
+                break
+            time.sleep(0.05)
+        assert j1.state == "running"
+        j2 = service.submit("circuit", iterations=3)
+        assert service.cancel(j2.id) is True
+        assert j2.state == "cancelled"
+        assert service.cancel(j1.id) is False    # running: not cancellable
+        # the cancelled job released its key: a resubmit gets a new job
+        j4 = service.submit("circuit", iterations=3)
+        assert j4 is not j2
+        gate.set()
+        service.drain(timeout=120)
+        assert j1.state == "done" and j4.state == "done"
+        with pytest.raises(KeyError):
+            service.cancel("job-9999")
+
+
+def test_failed_job_reports_error(tmp_path):
+    store = _store(tmp_path)
+    with TuningService(store, workers=1) as service:
+        job = service.submit("circuit", iterations=2, strategy="no-such")
+        service.drain(timeout=60)
+    assert job.state == "failed"
+    assert "no-such" in job.error
+    assert job.artifact_id is None
+    assert len(store) == 0
+    assert service.status(job.id)["state"] == "failed"
+
+
+def test_checkpoint_resume_across_service_restarts(tmp_path):
+    store = _store(tmp_path)
+    ckpts = str(tmp_path / "ckpts")
+    with TuningService(store, workers=1, checkpoint_dir=ckpts) as s1:
+        j1 = s1.submit("circuit", iterations=3)
+        s1.drain(timeout=120)
+    assert j1.state == "done" and not j1.resumed
+    with open(j1.checkpoint) as f:
+        assert json.load(f)["session"]["iteration"] == 3
+
+    with TuningService(store, workers=1, checkpoint_dir=ckpts) as s2:
+        j2 = s2.submit("circuit", iterations=6)
+        s2.drain(timeout=120)
+    assert j2.state == "done" and j2.resumed
+    assert j2.checkpoint == j1.checkpoint
+    with open(j2.checkpoint) as f:
+        assert json.load(f)["session"]["iteration"] == 6
+    # the resumed trajectory is the uninterrupted one
+    ref = tune("circuit", strategy="trace", iterations=6)
+    assert j2.best_score == ref.best_score
+
+
+def test_status_lists_jobs_in_submission_order(tmp_path):
+    with TuningService(_store(tmp_path), workers=2) as service:
+        a = service.submit("circuit", iterations=2)
+        b = service.submit("pennant", iterations=2)
+        service.drain(timeout=120)
+        rows = service.status()
+    assert [r["id"] for r in rows] == [a.id, b.id]
+    assert all(r["state"] == "done" for r in rows)
+    with pytest.raises(KeyError):
+        service.status("job-none")
+
+
+# ---------------------------------------------------------------------------
+# Publishing paths: Tuner hook + experiments sweep
+# ---------------------------------------------------------------------------
+def test_tuner_store_hook_publishes_winner(tmp_path):
+    store = _store(tmp_path)
+    res = Tuner("matmul/cannon", strategy="trace", iterations=3,
+                store=store).run()
+    art = store.best("matmul/cannon", "2x4")
+    assert art is not None
+    assert art.score == res.best_score
+    assert art.mapper == res.best_mapper
+    assert art.provenance["source"] == "tuner"
+    assert art.provenance["strategy"] == "trace"
+    assert art.fingerprint.startswith("text:")
+
+
+def test_tune_entry_point_accepts_store(tmp_path):
+    store = _store(tmp_path)
+    res = tune("circuit", iterations=2, store=store)
+    assert store.best("circuit").score == res.best_score
+
+
+def test_experiments_sweep_publishes_winners(tmp_path):
+    from repro.experiments import (ExperimentConfig, OptimizerSpec,
+                                   run_experiments)
+    store = _store(tmp_path)
+    payload = run_experiments(ExperimentConfig(
+        workloads=("circuit",),
+        optimizers=(OptimizerSpec("asi-trace", "trace", "full",
+                                  agentic=True),
+                    OptimizerSpec("random", "random", "scalar")),
+        iterations=3, check_determinism=False, check_llm_replay=False,
+        out=None, publish_store=store))
+    art = store.best("circuit", "2x4")
+    assert art is not None
+    assert art.provenance["source"] == "experiments"
+    assert payload["workloads"]["circuit"]["artifact_id"] == art.id
+    # the published winner is the sweep-wide best over both arms
+    bests = [row["best"]
+             for row in payload["workloads"]["circuit"]["optimizers"]
+             .values() if row["best"] is not None]
+    assert art.score == min(bests)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_end_to_end(tmp_path, capsys):
+    from repro.service.__main__ import main as cli
+    db = str(tmp_path / "cli.db")
+    assert cli(["submit", "circuit", "pennant", "--iters", "3",
+                "--store", db, "--workers", "2", "--wait"]) == 0
+    out = capsys.readouterr().out
+    assert out.count("done") == 2
+
+    assert cli(["status", "--store", db]) == 0
+    out = capsys.readouterr().out
+    assert "circuit" in out and "pennant" in out
+    assert "2 artifact(s) across 2 key(s)" in out
+
+    assert cli(["best", "--workload", "circuit", "--store", db,
+                "--show-mapper"]) == 0
+    out = capsys.readouterr().out
+    assert "score:" in out and "mapper:" in out
+
+    art = MapperStore(db).best("circuit")
+    dest = tmp_path / "artifact.json"
+    assert cli(["export", art.id, "--store", db, "--out", str(dest)]) == 0
+    capsys.readouterr()
+    assert json.loads(dest.read_text())["id"] == art.id
+
+    assert cli(["gc", "--keep", "1", "--store", db]) == 0
+    capsys.readouterr()
+    assert len(MapperStore(db)) == 2       # one best per key survives
+
+    assert cli(["submit", "not-a-workload", "--store", db]) == 2
+    assert cli(["best", "--workload", "ghost", "--store", db]) == 1
+    assert cli(["export", "nope", "--store", db]) == 1
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# End to end: tune -> artifact -> Engine.from_store serves it (slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_end_to_end_tune_store_serve(tmp_path):
+    """The issue's acceptance loop on a real smoke-scale LM cell:
+    submit -> job done -> artifact in store -> Engine.from_store decodes
+    tokens under the tuned mapper."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.asi.adapters_lm import LMCellWorkload
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import Engine, ServeConfig
+
+    arch = "stablelm-1.6b"
+    wl = LMCellWorkload(arch, "decode_32k", smoke=True)
+    store = _store(tmp_path)
+    with TuningService(store, workers=1) as service:
+        job = service.submit(wl, iterations=2)
+        service.drain(timeout=600)
+    assert job.state == "done", job.error
+    art = store.get(job.artifact_id)
+    assert art.workload == wl.name
+    # the LM evaluator was constructed, so the artifact carries a real
+    # plan fingerprint (evalengine canonicalization), not a text hash
+    assert not art.fingerprint.startswith("text:")
+
+    mesh = make_host_mesh()
+    assert art.mesh == mesh_key(mesh)
+    model = Engine.from_store(wl.name, mesh, store=store,
+                              smoke=True).model   # lm/ name implies model
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine.from_store(wl.name, mesh, store=store, params=params,
+                            model=model,
+                            cfg=ServeConfig(max_new_tokens=3, max_len=32))
+    assert eng.resolution.origin == "artifact"
+    assert eng.resolution.artifact.id == art.id
+    out = eng.generate(jnp.ones((1, 4), jnp.int32))["tokens"]
+    assert out.shape == (1, 3)

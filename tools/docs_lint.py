@@ -5,8 +5,9 @@ Checks, with no third-party deps and no imports of the package itself:
 
 1. every relative markdown link in docs/*.md and README.md resolves to
    an existing file (anchors are checked against the target's headings);
-2. every public ``repro.asi`` and ``repro.experiments`` symbol (their
-   ``__all__``, read statically via ast) is mentioned in docs/*.md.
+2. every public ``repro.asi`` / ``repro.experiments`` / ``repro.serve``
+   / ``repro.service`` symbol (their ``__all__``, read statically via
+   ast) is mentioned in docs/*.md.
 
 Exit 0 when clean; prints one line per violation and exits 1 otherwise.
 """
@@ -25,6 +26,8 @@ PUBLIC_INITS = {
     "repro.asi": ROOT / "src" / "repro" / "asi" / "__init__.py",
     "repro.experiments":
         ROOT / "src" / "repro" / "experiments" / "__init__.py",
+    "repro.serve": ROOT / "src" / "repro" / "serve" / "__init__.py",
+    "repro.service": ROOT / "src" / "repro" / "service" / "__init__.py",
 }
 
 # [text](target) -- ignore images and external/mail links
