@@ -11,6 +11,8 @@
     (ours)   baseline_comparison  baseline-vs-ASI harness (repro.experiments)
     (ours)   service              mapper store resolve latency + tuning
                                   service jobs/min (repro.service)
+    (ours)   serving_load         continuous-batching scheduler under
+                                  synthetic load (repro.serve.scheduler)
 
 Output: ``name,us_per_call,derived`` CSV rows.
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -500,6 +502,57 @@ def bench_service(out_json="BENCH_service.json"):
 
 
 # ---------------------------------------------------------------------------
+def bench_serving_load(out_json="BENCH_serving_load.json"):
+    """(ours) The continuous-batching scheduler under synthetic load on a
+    smoke LM cell: requests/s, aggregate generated tokens/s, and p50/p99
+    request latency / TTFT at N concurrent streams -- batched vs a
+    1-slot (purely sequential) scheduler over the *same* executor.
+    Writes ``BENCH_serving_load.json``."""
+    import json
+
+    import jax
+    from repro.configs import get_config
+    from repro.core.mapping.presets import EXPERT_SERVE_MAPPER
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import get_model
+    from repro.serve.scheduler import (LoadGenConfig, ModelExecutor,
+                                       compare_batching)
+
+    model = get_model(get_config("stablelm-1.6b", smoke=True))
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = LoadGenConfig(n_requests=16, streams=8, prompt_lens=(4, 8, 12),
+                        max_new_tokens=16, vocab_size=model.cfg.vocab_size)
+    executor = ModelExecutor(model, make_host_mesh(), EXPERT_SERVE_MAPPER,
+                             max_len=32, params=params)
+    result = compare_batching(executor, cfg, max_len=32)
+    for mode in ("batched", "single_stream"):
+        row = result[mode]
+        _emit(f"serving_load/{mode}", row["wall_s"] * 1e6,
+              f"streams={row['streams']};req_per_s={row['requests_per_s']:.2f};"
+              f"tok_per_s={row['tokens_per_s']:.1f};"
+              f"p50_s={row['latency_p50_s']:.3f};"
+              f"p99_s={row['latency_p99_s']:.3f};"
+              f"ttft_p50_s={row['ttft_p50_s']:.3f}")
+    payload = {
+        "cell": "stablelm-1.6b (smoke)",
+        "mapper": "expert serve preset",
+        "config": {"n_requests": cfg.n_requests, "streams": cfg.streams,
+                   "prompt_lens": list(cfg.prompt_lens),
+                   "max_new_tokens": cfg.max_new_tokens, "max_len": 32},
+        "batched": result["batched"],
+        "single_stream": result["single_stream"],
+        "speedup": result["speedup"],
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    _emit("serving_load/summary", 0.0,
+          f"speedup={result['speedup']:.2f}x;written={out_json}")
+    # the headline claim: continuous batching must at least double the
+    # aggregate tokens/s of sequential serving at 8 concurrent streams
+    assert result["speedup"] >= 2.0, payload
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -531,6 +584,7 @@ SECTIONS = {
     "agent_overhead": bench_agent_overhead,
     "baseline_comparison": bench_baseline_comparison,
     "service": bench_service,
+    "serving_load": bench_serving_load,
 }
 
 

@@ -132,7 +132,8 @@ def make_prefill_step(model: Model, rules: AxisRules, order: str = "C",
 def make_serve_step(model: Model, rules: AxisRules, order: str = "C",
                     moe_perm=None):
     """One greedy decode step: (params, tokens [B,1], caches, index) ->
-    (next_tokens [B,1], logits, caches)."""
+    (next_tokens [B,1], logits, caches).  ``index`` is a scalar position
+    shared by the batch, or an int32 [B] vector (continuous batching)."""
     def serve_step(params, tokens, caches, index):
         with axis_rules(rules):
             logits, caches = model.decode_step(params, tokens, caches, index,

@@ -204,12 +204,27 @@ def _cache_read(cache, order):
 
 def _cache_write(cache, k_new, v_new, index, order, ring_len=None):
     """k_new/v_new: [B, S_new, K, D]; index = absolute position of first new
-    token.  Ring-buffer writes wrap modulo ring_len."""
+    token -- a scalar, or an int32 [B] vector giving each sequence its own
+    position (continuous batching; S_new must be 1).  Ring-buffer writes
+    wrap modulo ring_len."""
     axis = _cache_seq_axis(order)
+    length = cache["k"].shape[axis]
+    idx = jnp.asarray(index)
+    if idx.ndim:
+        # per-sequence scatter: row b writes its single new token at
+        # pos[b] (dynamic_update_slice cannot express per-row offsets)
+        pos = idx % length if ring_len else idx
+        rows = jnp.arange(k_new.shape[0])
+        if order == "F":
+            k = cache["k"].at[pos, rows].set(k_new[:, 0])
+            v = cache["v"].at[pos, rows].set(v_new[:, 0])
+        else:
+            k = cache["k"].at[rows, pos].set(k_new[:, 0])
+            v = cache["v"].at[rows, pos].set(v_new[:, 0])
+        return {"k": k, "v": v}
     if order == "F":
         k_new = jnp.swapaxes(k_new, 0, 1)
         v_new = jnp.swapaxes(v_new, 0, 1)
-    length = cache["k"].shape[axis]
     pos = index % length if ring_len else index
     k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis)
     v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis)
@@ -280,16 +295,22 @@ def prefill_cache_write(cfg: ModelConfig, cache, k, v, *, kind: str,
 def decode_attention(cfg: ModelConfig, p, x, cache, *, index,
                      kind: str = "attn", order: str = "C", cross: bool = False,
                      impl: Optional[str] = None):
-    """One-token decode.  x: [B, 1, D]; index: scalar current position.
+    """One-token decode.  x: [B, 1, D]; index: current position -- a
+    scalar shared by the batch, or an int32 [B] vector giving each
+    sequence its own absolute position (continuous batching: sequences
+    admitted at different times decode in one step).
 
     Returns (y, new_cache).  For ``cross=True`` the cache holds the
     precomputed encoder K/V and is not updated.
     """
     window = cfg.local_window if kind == "local" else None
+    index = jnp.asarray(index, jnp.int32)
+    per_seq = index.ndim > 0
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if cfg.qk_norm:
         q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
-    positions = jnp.full((x.shape[0], 1), index, jnp.int32)
+    positions = (index[:, None] if per_seq
+                 else jnp.full((x.shape[0], 1), index, jnp.int32))
     if not cross:
         q = rope(q, positions, cfg.rope_theta)
         k_new = jnp.einsum("btd,dhk->bthk", x, p["wk"])
@@ -306,15 +327,21 @@ def decode_attention(cfg: ModelConfig, p, x, cache, *, index,
         causal, win, kv_len = False, None, None
     elif kind == "local" and cfg.local_window and length <= cfg.local_window:
         # ring buffer: slot s holds absolute position derived from index
+        # (per-seq indices broadcast [B,1] x [L] -> per-row position maps)
         slots = jnp.arange(length)
-        wrap = (index // length) * length
-        kv_pos = jnp.where(slots <= index % length, wrap + slots,
+        idx = index[:, None] if per_seq else index
+        wrap = (idx // length) * length
+        kv_pos = jnp.where(slots <= idx % length, wrap + slots,
                            wrap - length + slots)
-        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)[None]  # unwritten slots
+        kv_pos = jnp.where(kv_pos < 0, 2**30, kv_pos)  # unwritten slots
+        if not per_seq:
+            kv_pos = kv_pos[None]
         causal, win, kv_len = True, window, None
     else:
         kv_pos = jnp.arange(length)[None]
-        causal, win, kv_len = True, window, index + 1
+        # per-seq: [B,1,1] broadcasts against kp [.,S,T] in _mask_bias
+        kv_len = index[:, None, None] + 1 if per_seq else index + 1
+        causal, win = True, window
     qg = _split_gqa(q, k.shape[2])
     out = _run_attention_core(cfg, qg, k, v, q_pos=positions, kv_pos=kv_pos,
                               causal=causal, window=win, kv_len=kv_len,

@@ -165,9 +165,13 @@ def prefill(cfg: ModelConfig, params, batch, caches, moe_perm=None,
 
 def decode_step(cfg: ModelConfig, params, tokens, caches, index,
                 moe_perm=None, order: str = "C"):
-    """One decode step.  tokens: [B, 1] current token ids; index: scalar
-    absolute position.  Returns (next_logits [B, V], new_caches)."""
-    positions = jnp.full((tokens.shape[0], 1), index, jnp.int32)
+    """One decode step.  tokens: [B, 1] current token ids; index: absolute
+    position -- a scalar, or an int32 [B] vector for continuous batches
+    whose sequences sit at different positions.
+    Returns (next_logits [B, V], new_caches)."""
+    index = jnp.asarray(index, jnp.int32)
+    positions = (index[:, None] if index.ndim
+                 else jnp.full((tokens.shape[0], 1), index, jnp.int32))
     x = embed(cfg, params, tokens)
     pattern = ("xattn",) if cfg.is_encoder_decoder else None
     x, caches, _ = stack_apply(cfg, params["decoder"], x,

@@ -1,11 +1,15 @@
-"""repro.serve -- the batched serving engine.
+"""repro.serve -- the serving engine and its scheduler.
 
-``Engine`` runs prefill + greedy decode under a mapping plan;
-``Engine.from_store`` resolves that plan from the mapper artifact
-registry (artifact -> expert preset -> optional tune-on-miss), closing
-the loop from tuning to serving.  See docs/serving.md.
+``Engine`` is the synchronous front door: prefill + greedy decode under
+a mapping plan, resolved from the mapper artifact registry with
+``Engine.from_store`` (artifact -> expert preset -> optional
+tune-on-miss).  Underneath, :mod:`repro.serve.scheduler` provides the
+production path: a model-executor layer (compiled steps + cache layout
+per plan) driven by a continuous-batching request scheduler with
+KV-cache slot management and mapper hot-reload.  See docs/serving.md.
 """
 
+from . import scheduler
 from .engine import Engine, ServeConfig
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = ["Engine", "ServeConfig", "scheduler"]

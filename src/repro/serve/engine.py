@@ -1,9 +1,24 @@
-"""Batched serving engine: prefill + greedy decode under a mapping plan.
+"""Serving engine: a thin synchronous front end over the scheduler.
+
+``Engine`` used to be a monolithic single-request greedy decoder; it is
+now split into a model-executor layer
+(:class:`~repro.serve.scheduler.ModelExecutor`: params, compiled
+prefill/decode steps, cache layout -- everything the mapping plan
+determines) and a scheduler layer
+(:class:`~repro.serve.scheduler.Scheduler`: admission queue, continuous
+batching, KV-cache slot map, mapper hot-reload).  ``generate()`` is a
+synchronous wrapper that submits each row as a request and drains the
+scheduler, so the one-call API and its token-level behaviour survive
+the refactor; encoder-decoder models (whisper) keep a lockstep decode
+loop, as cross-attention requests carry per-request encoder state the
+slot map does not yet manage.
 
 The mapper can be given as raw DSL source, or resolved from the mapper
 artifact registry with :meth:`Engine.from_store` (artifact -> expert
 preset -> optional background tune-on-miss; see
-:mod:`repro.service.resolve` and docs/serving.md).
+:mod:`repro.service.resolve` and docs/serving.md).  With
+``hot_reload=True`` the engine's scheduler watches the store and swaps
+in newly published better mappers between decode steps.
 """
 
 from __future__ import annotations
@@ -13,18 +28,37 @@ from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.dsl.compiler import compile_mapper
-from ..core.mapping.lm_bridge import cache_order_from_plan, rules_from_plan
-from ..launch.mesh import machine_factory_for_mesh
-from ..launch.steps import make_prefill_step, make_serve_step
 from ..models.registry import Model
+from .scheduler import ModelExecutor, Scheduler, SchedulerConfig, \
+    StoreWatcher
 
 
 @dataclass
 class ServeConfig:
     max_new_tokens: int = 32
     max_len: int = 512
+    #: Stop a sequence early when it emits this token id (EOS-aware
+    #: early stop); None decodes the full budget.
+    eos_id: Optional[int] = None
+    #: Decode batch width of the continuous-batching scheduler.
+    max_slots: int = 8
+
+    def validate(self, prompt_len: int) -> None:
+        """Raise ValueError when a prompt cannot fit the serve cache."""
+        if prompt_len + self.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len ({prompt_len}) + max_new_tokens "
+                f"({self.max_new_tokens}) = "
+                f"{prompt_len + self.max_new_tokens} exceeds max_len "
+                f"({self.max_len}); raise max_len or lower the budget")
+
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(max_slots=self.max_slots,
+                               max_len=self.max_len,
+                               max_new_tokens=self.max_new_tokens,
+                               eos_id=self.eos_id)
 
 
 class Engine:
@@ -37,21 +71,48 @@ class Engine:
         #: How the mapper was resolved (set by from_store); None when
         #: the caller passed raw DSL source.
         self.resolution = None
-        self._params = params
-        plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
-        self.rules = rules_from_plan(plan, mesh, "decode")
-        self.order = cache_order_from_plan(plan)
-        self.prefill_step = jax.jit(
-            make_prefill_step(model, self.rules, self.order))
-        self.serve_step = jax.jit(
-            make_serve_step(model, self.rules, self.order))
+        self.executor = ModelExecutor(model, mesh, mapper_src,
+                                      max_len=self.cfg.max_len,
+                                      params=params)
+        self._scheduler: Optional[Scheduler] = None
+        self._watcher: Optional[StoreWatcher] = None
+
+    # -- plan-derived attributes live on the executor ------------------------
+    @property
+    def rules(self):
+        return self.executor.rules
+
+    @property
+    def order(self):
+        return self.executor.order
+
+    @property
+    def prefill_step(self):
+        return self.executor.prefill_step
+
+    @property
+    def serve_step(self):
+        return self.executor.decode_step
+
+    @property
+    def _params(self):
+        return self.executor.params
+
+    @property
+    def scheduler(self) -> Scheduler:
+        """The engine's persistent scheduler (slots survive calls)."""
+        if self._scheduler is None:
+            self._scheduler = Scheduler(self.executor,
+                                        self.cfg.scheduler_config(),
+                                        watcher=self._watcher)
+        return self._scheduler
 
     @classmethod
     def from_store(cls, workload, mesh=None, *, store=None, params=None,
                    model: Optional[Model] = None,
                    cfg: Optional[ServeConfig] = None, service=None,
-                   tune_on_miss: bool = False, smoke: bool = False
-                   ) -> "Engine":
+                   tune_on_miss: bool = False, smoke: bool = False,
+                   hot_reload: bool = False) -> "Engine":
         """Build an engine whose mapper comes from the artifact registry.
 
         ``workload`` is a registry name or ``Workload`` instance;
@@ -61,7 +122,10 @@ class Engine:
         from an empty store.  With ``tune_on_miss`` and a
         :class:`~repro.service.TuningService`, a miss also enqueues a
         background tuning job (deduped by store key); the enqueued job
-        rides on ``engine.resolution.job``.
+        rides on ``engine.resolution.job``.  With ``hot_reload`` the
+        scheduler keeps watching the store key and swaps in better
+        published mappers at step boundaries without dropping in-flight
+        requests.
 
         ``model`` defaults from the workload name for LM cells
         (``lm/<arch>/...``, honouring ``smoke``); other substrates must
@@ -87,33 +151,70 @@ class Engine:
             model = Model(get_config(name.split("/")[1], smoke=smoke))
         engine = cls(model, mesh, resolution.mapper, cfg, params=params)
         engine.resolution = resolution
+        if hot_reload:
+            if store is None:
+                raise ValueError("hot_reload needs a store to watch")
+            engine._watcher = StoreWatcher(
+                store, resolution.workload, mesh,
+                current_artifact=resolution.artifact)
         return engine
 
     def generate(self, tokens, enc_frames=None) -> Dict:
-        """tokens: [B, S_prompt] int32.  Returns generated ids [B, N]."""
-        if self._params is None:
-            raise RuntimeError(
-                "Engine has no parameters: pass params= to the "
-                "constructor (or Engine.from_store) or call "
-                "load_params() before generate()")
+        """Greedy-decode a prompt batch.  tokens: [B, S_prompt] int32.
+
+        Returns ``{"tokens": [B, T], "lengths": [B]}`` where ``T`` is
+        ``max_new_tokens``, or less when every sequence hit ``eos_id``
+        early; rows that stopped early are padded with ``eos_id`` past
+        their length.
+        """
+        tokens = jnp.asarray(tokens)
         b, s = tokens.shape
-        caches = self.model.init_serve_caches(
-            b, self.cfg.max_len, order=self.order,
-            enc_len=0 if enc_frames is None else enc_frames.shape[1])
-        batch = {"tokens": jnp.asarray(tokens)}
-        if enc_frames is not None:
-            batch["frames"] = jnp.asarray(enc_frames)
-        with self.mesh:
-            logits, caches = self.prefill_step(self._params, batch,
-                                               caches)
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            out: List = [tok]
-            for i in range(self.cfg.max_new_tokens - 1):
-                tok, _, caches = self.serve_step(self._params, tok, caches,
-                                                 jnp.int32(s + i))
-                out.append(tok)
-        return {"tokens": jnp.concatenate(out, axis=1)}
+        self.cfg.validate(s)
+        if self.model.cfg.is_encoder_decoder or enc_frames is not None:
+            return self._generate_lockstep(tokens, enc_frames)
+        sched = self.scheduler
+        reqs = [sched.submit(np.asarray(tokens[i]) )
+                for i in range(b)]
+        sched.run()
+        return self._assemble([r.tokens for r in reqs])
+
+    def _assemble(self, outs: List[List[int]]) -> Dict:
+        lengths = [len(t) for t in outs]
+        width = max(lengths)
+        pad = self.cfg.eos_id if self.cfg.eos_id is not None else 0
+        arr = np.full((len(outs), width), pad, np.int32)
+        for i, t in enumerate(outs):
+            arr[i, :len(t)] = t
+        return {"tokens": jnp.asarray(arr),
+                "lengths": jnp.asarray(lengths, jnp.int32)}
+
+    def _generate_lockstep(self, tokens, enc_frames=None) -> Dict:
+        """Lockstep batch decode (encoder-decoder models): every row
+        shares one position counter, with EOS-aware early stop."""
+        b, s = tokens.shape
+        logits, caches = self.executor.prefill(tokens, enc_frames)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out: List = [tok]
+        eos = self.cfg.eos_id
+        finished = (np.asarray(tok)[:, 0] == eos if eos is not None
+                    else np.zeros(b, bool))
+        for i in range(self.cfg.max_new_tokens - 1):
+            if finished.all():
+                break
+            tok, _, caches = self.executor.decode(tok, caches,
+                                                  jnp.int32(s + i))
+            out.append(tok)
+            if eos is not None:
+                finished |= np.asarray(tok)[:, 0] == eos
+        toks = np.asarray(jnp.concatenate(out, axis=1))
+        outs = []
+        for row in toks:
+            keep = len(row)
+            if eos is not None and (row == eos).any():
+                keep = int(np.argmax(row == eos)) + 1
+            outs.append([int(t) for t in row[:keep]])
+        return self._assemble(outs)
 
     def load_params(self, params):
-        self._params = params
+        self.executor.params = params
         return self

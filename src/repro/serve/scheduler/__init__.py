@@ -1,0 +1,36 @@
+"""repro.serve.scheduler -- continuous-batching serving on tuned mappers.
+
+The serving engine splits into two layers.  The **model executor**
+(:class:`ModelExecutor`) owns everything a mapping plan determines:
+params, the compiled prefill/decode step functions, and the KV-cache
+layout.  The **scheduler** (:class:`Scheduler`) owns policy: the
+admission queue, per-step join/leave of sequences (continuous
+batching), the KV-cache slot map (:class:`SlotManager`), and mapper
+hot-reload -- when the tuning side publishes a better artifact for the
+live (workload, mesh) key, a :class:`StoreWatcher` reports it and the
+scheduler swaps in a freshly compiled executor at a step boundary
+while in-flight sequences drain on the old one.  :func:`run_load` /
+:func:`compare_batching` (:class:`LoadGenConfig`) put the whole stack
+under synthetic traffic.  See docs/serving.md.
+"""
+
+from .executor import ModelExecutor
+from .loadgen import LoadGenConfig, compare_batching, run_load, \
+    synthetic_requests
+from .reload import StoreWatcher
+from .scheduler import REQUEST_STATES, Request, Scheduler, SchedulerConfig
+from .slots import SlotManager
+
+__all__ = [
+    "ModelExecutor",
+    "Scheduler",
+    "SchedulerConfig",
+    "Request",
+    "REQUEST_STATES",
+    "SlotManager",
+    "StoreWatcher",
+    "LoadGenConfig",
+    "run_load",
+    "compare_batching",
+    "synthetic_requests",
+]

@@ -1,0 +1,130 @@
+"""The model-executor layer: one compiled serving substrate per mapper.
+
+A :class:`ModelExecutor` owns everything that depends on the mapping
+plan: the translated ``AxisRules``, the KV-cache dim order, and the
+jitted prefill / decode step functions.  The scheduler above it owns
+*policy* (admission, batching, slot assignment, reload); the executor
+owns *mechanism*.  Hot-reload builds a fresh executor for the new
+mapper (:meth:`ModelExecutor.with_mapper`) while in-flight sequences
+keep decoding on the old one -- cache layouts (C/F order, sharding) do
+not port across plans, so a sequence's caches live and die with the
+executor that prefilled them.
+
+The decode step is compiled once per slot width and takes an int32
+``[B]`` position vector, so sequences admitted at different times share
+one step (continuous batching); see ``models.attention.decode_attention``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.dsl.compiler import compile_mapper
+from ...core.mapping.lm_bridge import cache_order_from_plan, rules_from_plan
+from ...launch.mesh import machine_factory_for_mesh
+from ...launch.steps import make_prefill_step, make_serve_step
+from ...models.registry import Model
+
+
+class ModelExecutor:
+    """Params + compiled prefill/decode steps + cache layout for one plan."""
+
+    def __init__(self, model: Model, mesh, mapper_src: str, *,
+                 max_len: int, params=None, tag: str = ""):
+        self.model = model
+        self.mesh = mesh
+        self.mapper_src = mapper_src
+        self.max_len = int(max_len)
+        self.params = params
+        #: Display identity (artifact id prefix after a hot reload).
+        self.tag = tag or "initial"
+        plan = compile_mapper(mapper_src, machine_factory_for_mesh(mesh))
+        self.rules = rules_from_plan(plan, mesh, "decode")
+        self.order = cache_order_from_plan(plan)
+        self.prefill_step = jax.jit(
+            make_prefill_step(model, self.rules, self.order))
+        self.decode_step = jax.jit(
+            make_serve_step(model, self.rules, self.order))
+        self._batch_axes = None
+
+    def with_mapper(self, mapper_src: str, tag: str = "") -> "ModelExecutor":
+        """A fresh executor for a new plan, sharing model/mesh/params."""
+        return ModelExecutor(self.model, self.mesh, mapper_src,
+                             max_len=self.max_len, params=self.params,
+                             tag=tag)
+
+    # -- step execution ------------------------------------------------------
+    def _require_params(self):
+        if self.params is None:
+            raise RuntimeError(
+                "Engine has no parameters: pass params= to the "
+                "constructor (or Engine.from_store) or call "
+                "load_params() before generate()")
+
+    def prefill(self, tokens, enc_frames=None):
+        """Prefill a prompt batch [B, S] -> (last-token logits [B, V],
+        caches for that batch)."""
+        self._require_params()
+        b = tokens.shape[0]
+        caches = self.init_caches(
+            b, enc_len=0 if enc_frames is None else enc_frames.shape[1])
+        batch = {"tokens": jnp.asarray(tokens)}
+        if enc_frames is not None:
+            batch["frames"] = jnp.asarray(enc_frames)
+        with self.mesh:
+            return self.prefill_step(self.params, batch, caches)
+
+    def decode(self, tokens, caches, index):
+        """One decode step over the slot batch.  tokens: [B, 1]; index:
+        int32 [B] absolute positions (or a scalar for lockstep batches).
+        Returns (next_tokens [B, 1], logits, caches)."""
+        self._require_params()
+        with self.mesh:
+            return self.decode_step(self.params, jnp.asarray(tokens),
+                                    caches, jnp.asarray(index, jnp.int32))
+
+    # -- cache plumbing ------------------------------------------------------
+    def init_caches(self, batch: int, enc_len: int = 0):
+        with self.mesh:
+            return self.model.init_serve_caches(
+                batch, self.max_len, order=self.order, enc_len=enc_len)
+
+    def cache_batch_axes(self):
+        """Per-leaf batch axis of the serve-cache tree.
+
+        Derived structurally: abstract caches for two different batch
+        sizes differ in exactly the batch dim of every leaf, whatever
+        the layout order or cache kind (KV, ring, recurrent state) --
+        no per-kind axis table to keep in sync with the models.
+        """
+        if self._batch_axes is None:
+            a = jax.eval_shape(
+                lambda: self.model.init_serve_caches(
+                    2, self.max_len, order=self.order))
+            b = jax.eval_shape(
+                lambda: self.model.init_serve_caches(
+                    3, self.max_len, order=self.order))
+            def axis_of(x, y):
+                diff = [i for i, (m, n) in enumerate(zip(x.shape, y.shape))
+                        if m != n]
+                if len(diff) != 1:
+                    raise ValueError(
+                        f"cannot locate batch axis: {x.shape} vs {y.shape}")
+                return diff[0]
+            self._batch_axes = jax.tree.map(axis_of, a, b)
+        return self._batch_axes
+
+    def insert_slot(self, caches, slot: int, seq_caches):
+        """Write a single-sequence cache tree into slot ``slot`` of the
+        batched tree (the join half of per-step join/leave)."""
+        return jax.tree.map(
+            lambda full, one, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, ax),
+            caches, seq_caches, self.cache_batch_axes())
+
+    def __repr__(self) -> str:
+        return (f"<ModelExecutor tag={self.tag!r} order={self.order} "
+                f"max_len={self.max_len}>")

@@ -1,0 +1,66 @@
+"""Hot-reload source: watch the MapperStore for a better live mapper.
+
+The tuning side (``TuningService`` / ``Tuner(store=...)`` / the
+experiments sweep) publishes winners into the
+:class:`~repro.service.MapperStore` under a ``(workload, mesh)`` key.
+A :class:`StoreWatcher` is the serving side of that loop: the scheduler
+polls it between steps, and when a *strictly better* artifact than the
+one currently serving appears under the live key, the watcher hands it
+over exactly once -- the scheduler then compiles a fresh executor and
+swaps it in at the step boundary.
+
+``poll()`` is cheap (one indexed sqlite query) and safe to call every
+step; ``min_interval_s`` rate-limits it for real deployments.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+class StoreWatcher:
+    """Reports new best artifacts for one (workload, mesh) store key."""
+
+    def __init__(self, store, workload: str, mesh, *,
+                 current_artifact=None, current_score: Optional[float] = None,
+                 min_interval_s: float = 0.0):
+        from ...service import mesh_key
+        self.store = store
+        self.workload = (workload if isinstance(workload, str)
+                         else workload.name)
+        self.mesh = mesh_key(mesh) if mesh is not None else None
+        self.min_interval_s = float(min_interval_s)
+        self._last_poll = 0.0
+        # seed from what is already serving, so the first poll does not
+        # re-report the artifact the engine resolved at startup
+        self._seen_id = current_artifact.id if current_artifact else None
+        self._best_score = (current_artifact.score if current_artifact
+                            else current_score)
+
+    def poll(self):
+        """The newest strictly-better artifact, or None.
+
+        Returns each improvement exactly once: an artifact is reported
+        only if its id is new and its score beats the best score seen
+        (an unscored serving mapper -- preset/default -- loses to any
+        scored artifact).
+        """
+        now = time.monotonic()
+        if self.min_interval_s and now - self._last_poll < self.min_interval_s:
+            return None
+        self._last_poll = now
+        artifact = self.store.best(self.workload, self.mesh)
+        if artifact is None or artifact.id == self._seen_id:
+            return None
+        if self._best_score is not None and (
+                artifact.score is None
+                or artifact.score >= self._best_score):
+            return None
+        self._seen_id = artifact.id
+        self._best_score = artifact.score
+        return artifact
+
+    def __repr__(self) -> str:
+        return (f"<StoreWatcher {self.workload!r}@{self.mesh} "
+                f"best={self._best_score}>")

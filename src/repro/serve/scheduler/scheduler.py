@@ -1,0 +1,286 @@
+"""The request scheduler: continuous batching over model executors.
+
+One :meth:`Scheduler.step` is one serving tick:
+
+1. **reload check** -- if the watcher reports a better mapper artifact
+   for the live (workload, mesh) key, a fresh executor is compiled and
+   becomes the admission target.  In-flight sequences are *not* moved:
+   cache layouts don't port across plans, so they finish on the
+   executor that prefilled them, and the old executor is retired once
+   it drains.  Nothing is dropped.
+2. **admission (prefill phase)** -- queued requests claim free slots on
+   the newest executor: each prompt prefills at its exact length
+   (batch 1), emits its first token, and has its caches scattered into
+   the claimed slot.  New prompts therefore never stall in-flight
+   decodes: decode steps keep their fixed slot width and the join
+   happens between steps.
+3. **decode phase** -- every executor with active slots runs one
+   batched decode step over its full slot width, with an int32 ``[B]``
+   position vector so every sequence decodes at its own absolute
+   position.  Sequences leave the batch the moment they emit EOS or
+   hit their token budget (per-step join/leave), freeing the slot for
+   the next admission.
+
+The scheduler is synchronous and deterministic: same submissions, same
+tokens -- batched output is token-identical to running each request
+alone (dense models; MoE capacity is batch-coupled by construction).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+#: Request lifecycle: queued -> decoding -> finished (a request whose
+#: budget is spent at prefill time skips the decoding state).
+REQUEST_STATES = ("queued", "decoding", "finished")
+
+
+@dataclass
+class Request:
+    """One generation request tracked by the scheduler."""
+
+    id: int
+    prompt: np.ndarray              # int32 [S]
+    max_new_tokens: int
+    state: str = "queued"
+    tokens: List[int] = field(default_factory=list)   # generated ids
+    slot: Optional[int] = None
+    #: Tag of the executor this request decodes on (hot-reload audit).
+    executor_tag: Optional[str] = None
+    #: KV-cache dim order of that executor ("C"/"F").
+    cache_order: Optional[str] = None
+    submitted: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def latency(self) -> Optional[float]:
+        return (None if self.finished_at is None
+                else self.finished_at - self.submitted)
+
+    def ttft(self) -> Optional[float]:
+        return (None if self.first_token_at is None
+                else self.first_token_at - self.submitted)
+
+
+@dataclass
+class SchedulerConfig:
+    """Batching policy knobs (the serving analogue of ``ServeConfig``)."""
+
+    max_slots: int = 8              # decode batch width per executor
+    max_len: int = 512              # cache length (prompt + generated)
+    max_new_tokens: int = 32        # default per-request budget
+    eos_id: Optional[int] = None    # early stop on this token id
+    reload_poll_every: int = 1      # steps between watcher polls
+
+    def validate(self, prompt_len: int,
+                 max_new_tokens: Optional[int] = None) -> None:
+        """Reject requests that would overflow the serve cache."""
+        n = self.max_new_tokens if max_new_tokens is None else max_new_tokens
+        if prompt_len + n > self.max_len:
+            raise ValueError(
+                f"prompt_len ({prompt_len}) + max_new_tokens ({n}) = "
+                f"{prompt_len + n} exceeds max_len ({self.max_len}); "
+                "raise max_len or lower the budget")
+        if prompt_len < 1:
+            raise ValueError("prompt must hold at least one token")
+
+
+class _ExecutorGroup:
+    """One executor plus its slot state (a generation of the fleet)."""
+
+    def __init__(self, executor, n_slots: int):
+        from .slots import SlotManager
+        self.executor = executor
+        self.slots = SlotManager(executor, n_slots)
+        self.requests: Dict[int, Request] = {}   # slot -> request
+        self.cur_tokens = np.zeros((n_slots, 1), np.int32)
+        self.index = np.zeros((n_slots,), np.int32)
+        self.draining = False
+
+    @property
+    def n_active(self) -> int:
+        return self.slots.n_active
+
+
+class Scheduler:
+    """Admission queue + continuous batching + mapper hot-reload."""
+
+    def __init__(self, executor, cfg: Optional[SchedulerConfig] = None, *,
+                 watcher=None):
+        if executor.model.cfg.is_encoder_decoder:
+            raise ValueError(
+                "the continuous-batching scheduler serves decoder-only "
+                "models; encoder-decoder serving uses the engine's "
+                "lockstep path")
+        self.cfg = cfg or SchedulerConfig()
+        self.watcher = watcher
+        self._groups: List[_ExecutorGroup] = [
+            _ExecutorGroup(executor, self.cfg.max_slots)]
+        self._queue: List[Request] = []
+        self._all: List[Request] = []
+        self._ids = itertools.count(1)
+        self._steps = 0
+        #: Audit trail of executor swaps: dicts with step/artifact/tags.
+        self.reload_events: List[Dict] = []
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def executor(self):
+        """The current admission target (newest executor)."""
+        return self._groups[-1].executor
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_active(self) -> int:
+        return sum(g.n_active for g in self._groups)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.n_active > 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: Optional[int] = None
+               ) -> Request:
+        """Queue a prompt (int array [S] or [1, S]); returns its Request."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim == 2:
+            if prompt.shape[0] != 1:
+                raise ValueError(
+                    f"submit() takes one sequence, got batch "
+                    f"{prompt.shape}; submit rows individually")
+            prompt = prompt[0]
+        n = (self.cfg.max_new_tokens if max_new_tokens is None
+             else int(max_new_tokens))
+        self.cfg.validate(int(prompt.shape[0]), n)
+        req = Request(id=next(self._ids), prompt=prompt, max_new_tokens=n,
+                      submitted=time.perf_counter())
+        self._queue.append(req)
+        self._all.append(req)
+        return req
+
+    # -- the serving tick ----------------------------------------------------
+    def step(self) -> int:
+        """One tick: reload check, admissions, one decode per executor.
+        Returns the number of tokens emitted."""
+        self._steps += 1
+        if self.watcher is not None and \
+                self._steps % max(1, self.cfg.reload_poll_every) == 0:
+            self._maybe_reload()
+        self._admit()
+        emitted = 0
+        for group in self._groups:
+            emitted += self._decode(group)
+        self._retire_drained()
+        return emitted
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Step until every submitted request finishes; returns all
+        finished requests in submission order."""
+        steps = 0
+        while self.has_work():
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"scheduler still busy after {max_steps} steps "
+                    f"({self.n_queued} queued, {self.n_active} active)")
+            self.step()
+            steps += 1
+        return [r for r in self._all if r.state == "finished"]
+
+    # -- internals -----------------------------------------------------------
+    def _maybe_reload(self) -> None:
+        artifact = self.watcher.poll()
+        if artifact is None:
+            return
+        current = self._groups[-1]
+        if artifact.mapper == current.executor.mapper_src:
+            return
+        new_exec = current.executor.with_mapper(
+            artifact.mapper, tag=artifact.id[:12])
+        for group in self._groups:
+            group.draining = True
+        self._groups.append(_ExecutorGroup(new_exec, self.cfg.max_slots))
+        self.reload_events.append({
+            "step": self._steps,
+            "artifact_id": artifact.id,
+            "score": artifact.score,
+            "from_tag": current.executor.tag,
+            "to_tag": new_exec.tag,
+            "in_flight_on_old": current.n_active,
+        })
+
+    def _admit(self) -> None:
+        """Prefill phase: fill the newest executor's free slots."""
+        group = self._groups[-1]
+        while self._queue and group.slots.n_free:
+            req = self._queue.pop(0)
+            ex = group.executor
+            logits, seq_caches = ex.prefill(req.prompt[None])
+            tok = int(np.argmax(np.asarray(logits[0])))
+            now = time.perf_counter()
+            req.tokens.append(tok)
+            req.first_token_at = now
+            req.executor_tag = ex.tag
+            req.cache_order = ex.order
+            if self._is_done(req, tok):
+                self._finish(req, now)
+                continue
+            slot = group.slots.allocate()
+            group.slots.insert(slot, seq_caches)
+            req.slot = slot
+            req.state = "decoding"
+            group.requests[slot] = req
+            group.cur_tokens[slot, 0] = tok
+            group.index[slot] = req.prompt_len
+
+    def _decode(self, group: _ExecutorGroup) -> int:
+        if group.n_active == 0:
+            return 0
+        next_tok, _, caches = group.executor.decode(
+            group.cur_tokens, group.slots.caches, group.index)
+        group.slots.update(caches)
+        toks = np.asarray(next_tok)
+        now = time.perf_counter()
+        emitted = 0
+        for slot in group.slots.active_slots():
+            req = group.requests[slot]
+            tok = int(toks[slot, 0])
+            req.tokens.append(tok)
+            emitted += 1
+            group.index[slot] += 1
+            group.cur_tokens[slot, 0] = tok
+            if self._is_done(req, tok):
+                self._finish(req, now)
+                group.slots.free(slot)
+                del group.requests[slot]
+        return emitted
+
+    def _is_done(self, req: Request, tok: int) -> bool:
+        if self.cfg.eos_id is not None and tok == self.cfg.eos_id:
+            return True
+        return len(req.tokens) >= req.max_new_tokens
+
+    def _finish(self, req: Request, now: float) -> None:
+        req.state = "finished"
+        req.finished_at = now
+        req.slot = None
+
+    def _retire_drained(self) -> None:
+        """Drop drained old executors; the newest always stays."""
+        self._groups = [g for g in self._groups[:-1]
+                        if g.n_active > 0] + self._groups[-1:]
+
+    def __repr__(self) -> str:
+        tags = [g.executor.tag for g in self._groups]
+        return (f"<Scheduler queued={self.n_queued} active={self.n_active} "
+                f"executors={tags} steps={self._steps}>")

@@ -1,0 +1,73 @@
+"""KV-cache slot management: allocate/free cache rows per sequence.
+
+The seed engine rebuilt the whole serve-cache tree on every
+``generate()`` call.  A :class:`SlotManager` instead owns one batched
+cache tree per executor, sized ``n_slots`` wide, for the executor's
+whole life: a sequence joining the batch *allocates* a slot and has its
+prefilled caches scattered into that row; a sequence finishing *frees*
+the slot for the next admission.  Freed rows are not zeroed -- the
+per-sequence position masks (``kv_len`` / causal masks keyed on each
+row's own index) guarantee stale keys are never attended to, and the
+next occupant overwrites the row at insert time.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+
+class SlotManager:
+    """Slot bookkeeping + the batched cache tree for one executor."""
+
+    def __init__(self, executor, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.executor = executor
+        self.n_slots = int(n_slots)
+        self.caches = executor.init_caches(self.n_slots)
+        # LIFO free list: reuse the most recently freed row first (its
+        # cache lines are the ones still warm)
+        self._free: List[int] = list(range(self.n_slots))[::-1]
+        self._active = [False] * self.n_slots
+
+    # -- lifecycle -----------------------------------------------------------
+    def allocate(self) -> Optional[int]:
+        """Claim a free slot; None when the batch is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._active[slot] = True
+        return slot
+
+    def insert(self, slot: int, seq_caches) -> None:
+        """Scatter a single-sequence cache tree into an allocated slot."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} is not allocated")
+        self.caches = self.executor.insert_slot(self.caches, slot,
+                                                seq_caches)
+
+    def free(self, slot: int) -> None:
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._active[slot] = False
+        self._free.append(slot)
+
+    def update(self, caches) -> None:
+        """Store the cache tree a decode step returned."""
+        self.caches = caches
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(self._active)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, a in enumerate(self._active) if a]
+
+    def __repr__(self) -> str:
+        return (f"<SlotManager {self.n_active}/{self.n_slots} active "
+                f"executor={self.executor.tag!r}>")

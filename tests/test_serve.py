@@ -31,6 +31,20 @@ def _greedy_reference(model, params, tokens, n_new, max_len):
     return jnp.concatenate(toks, axis=1)
 
 
+def test_serve_config_rejects_overlong_prompts():
+    cfg = ServeConfig(max_new_tokens=8, max_len=16)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        cfg.validate(9)
+    cfg.validate(8)    # prompt + budget == max_len is allowed
+
+
+def test_engine_generate_validates_prompt_length():
+    eng = Engine(_smoke_model(), make_host_mesh(), EXPERT_SERVE_MAPPER,
+                 ServeConfig(max_new_tokens=8, max_len=16))
+    with pytest.raises(ValueError, match="raise max_len or lower"):
+        eng.generate(jnp.ones((1, 12), jnp.int32))
+
+
 def test_generate_without_params_raises_runtime_error():
     model = _smoke_model()
     eng = Engine(model, make_host_mesh(), EXPERT_SERVE_MAPPER,

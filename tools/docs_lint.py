@@ -27,6 +27,8 @@ PUBLIC_INITS = {
     "repro.experiments":
         ROOT / "src" / "repro" / "experiments" / "__init__.py",
     "repro.serve": ROOT / "src" / "repro" / "serve" / "__init__.py",
+    "repro.serve.scheduler":
+        ROOT / "src" / "repro" / "serve" / "scheduler" / "__init__.py",
     "repro.service": ROOT / "src" / "repro" / "service" / "__init__.py",
 }
 
