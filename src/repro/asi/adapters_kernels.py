@@ -1,0 +1,710 @@
+"""Workload adapters for the repo's own Pallas kernels (``kernel/*``).
+
+The paper tunes *mappings*; MARCO and VibeCodeHPC (PAPERS.md) close the
+loop one level down and tune *kernels* against measured runtimes.  This
+module opens the repro's four Pallas TPU kernels
+(``repro.kernels.{flash_attention, ssd, rglru, block_matmul}``) as a
+substrate family in the WorkloadRegistry:
+
+* **decision space** -- the block/tile sizes that shape the kernel's
+  grid (``block_q``/``block_k``, ``bm``/``bn``/``bk``, ``block``,
+  ``chunk``), rendered in a tiny kernel-mapper dialect
+  (``Task <kernel> TPU; Tile <key> <n>;``) so the optimizers keep
+  speaking DSL text end to end;
+* **correctness oracle** -- every candidate's output is compared against
+  the kernel's pure-jnp reference implementation *before* it is scored:
+  a numerically-wrong kernel config is an ``execution``-class failure in
+  its ExecutionReport (score ``None``), never a win;
+* **Tier-3 measured scores** -- the default evaluator wall-clocks the
+  jitted kernel (Pallas interpret mode on CPU; the real device when one
+  is attached) under :class:`~repro.core.evalengine.MeasureConfig`
+  controls, with an analytic grid/roofline estimate riding along for
+  prescreening, calibration, and rank-agreement reporting
+  (``tier="analytic"`` scores from the estimate alone: no execution).
+
+Measured scores flow through the MapperStore like every other substrate
+(:func:`~repro.service.store.publish_result`); the workload's
+``mesh_geometry()``/``artifact_provenance()`` hooks key artifacts by
+backend and record how they were measured.
+"""
+
+from __future__ import annotations
+
+import copy
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from ..core.agent.autoguide import (ErrorCategory, ExecutionReport,
+                                    diagnose, report_from_error)
+from ..core.agent.feedback import Feedback
+from ..core.agent.llm import HeuristicLLM
+from ..core.agent.trace_lite import Bundle, Module
+from ..core.dsl.errors import CompileError, ExecutionError
+from ..core.evalengine import LRUCache, MeasureConfig, measure
+from ..core.evalengine.fingerprint import plan_fingerprint, text_key
+from ..core.evalengine.measure import fit_calibration, rank_agreement
+from ..core.evalengine.prescreen import PrescreenResult
+from ..core.evalengine.store import DiskCache
+from .workload import AgentWorkload
+
+KERNEL_TIERS = ("analytic", "measured")
+
+#: Analytic model constants for the kernel substrate.  Interpret mode is
+#: launch-overhead dominated (each grid step simulates DMA + bounds
+#: bookkeeping), so the per-program term carries the ordering; the
+#: compute/memory terms keep large tiles from looking free.
+LAUNCH_OVERHEAD_S = 1e-4      # per grid program instance
+PEAK_FLOPS_S = 1e12           # nominal flop/s for the compute term
+HBM_BW_S = 8e11               # nominal bytes/s for the memory term
+
+
+# ---------------------------------------------------------------------------
+# Kernel specs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class KernelSpec:
+    """One tunable kernel: decision axes, inputs, runner, oracle."""
+
+    name: str
+    description: str
+    axes: Dict[str, Tuple[int, ...]]     # tile key -> advertised options
+    defaults: Dict[str, int]             # the kernel's shipped config
+    dims: Dict[str, int]                 # tile key -> dimension it tiles
+    make_inputs: Callable[[], tuple]     # seeded concrete inputs
+    run: Callable[..., object]           # run(*inputs, **tiles) (jitted)
+    ref: Callable[..., object]           # ref(*inputs): pure-jnp oracle
+    flops: float
+    bytes_rw: float
+    tol: float = 5e-3                    # max |kernel - ref| allowed
+    grid_base: int = 1                   # untiled grid axes (e.g. batch*heads)
+
+    def grid_size(self, tiles: Dict[str, int]) -> int:
+        """Program instances the grid launches under ``tiles`` (kernels
+        clamp each tile to its dimension, hence the ``min``)."""
+        n = self.grid_base
+        for key, dim in self.dims.items():
+            n *= dim // min(int(tiles[key]), dim)
+        return n
+
+    def check(self, tiles: Dict[str, int]) -> Optional[str]:
+        """Divisibility contract; a message means the config cannot run."""
+        for key, dim in self.dims.items():
+            v = int(tiles[key])
+            if v < 1:
+                return (f"tile {key}={v} must be a positive size")
+            if dim % min(v, dim):
+                return (f"tile {key}={v} does not divide dimension "
+                        f"{dim} of kernel {self.name}")
+        return None
+
+    def analytic_terms(self, tiles: Dict[str, int]) -> Dict[str, float]:
+        return {"launch_s": self.grid_size(tiles) * LAUNCH_OVERHEAD_S,
+                "compute_s": self.flops / PEAK_FLOPS_S,
+                "memory_s": self.bytes_rw / HBM_BW_S}
+
+    def analytic_estimate(self, tiles: Dict[str, int]) -> float:
+        return sum(self.analytic_terms(tiles).values())
+
+
+def _rng(seed: int = 0):
+    import numpy as np
+    return np.random.RandomState(seed)
+
+
+def _spec_block_matmul() -> KernelSpec:
+    import jax.numpy as jnp
+
+    m = n = k = 256
+
+    def make_inputs():
+        r = _rng(0)
+        return (jnp.asarray(r.randn(m, k), jnp.float32),
+                jnp.asarray(r.randn(k, n), jnp.float32))
+
+    def run(a, b, *, bm, bn, bk):
+        from ..kernels.block_matmul.ops import matmul
+        return matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+
+    def ref(a, b):
+        from ..kernels.block_matmul.ref import reference_matmul
+        return reference_matmul(a, b)
+
+    opts = (32, 64, 96, 128, 256)
+    return KernelSpec(
+        name="block_matmul",
+        description=f"blocked matmul {m}x{n}x{k} f32; grid (m/bm,n/bn,k/bk)",
+        axes={"bm": opts, "bn": opts, "bk": opts},
+        defaults={"bm": 128, "bn": 128, "bk": 128},
+        dims={"bm": m, "bn": n, "bk": k},
+        make_inputs=make_inputs, run=run, ref=ref,
+        flops=2.0 * m * n * k, bytes_rw=4.0 * (m * k + k * n + m * n),
+        tol=5e-3)
+
+
+def _spec_flash_attention() -> KernelSpec:
+    import jax.numpy as jnp
+
+    bh, s, d = 2, 256, 32
+
+    def make_inputs():
+        r = _rng(1)
+        return tuple(jnp.asarray(r.randn(bh, s, d), jnp.float32)
+                     for _ in range(3))
+
+    def run(q, k, v, *, block_q, block_k):
+        # the jit'd wrapper is model-layout; feed it [B=1, S, K=bh, G=1, D]
+        # so repeated measured calls hit the jit cache on static tiles
+        from ..kernels.flash_attention.ops import flash_attention
+        q5 = q.transpose(1, 0, 2)[None, :, :, None, :]   # [1, S, BH, 1, D]
+        k5 = k.transpose(1, 0, 2)[None]                  # [1, T, BH, D]
+        out = flash_attention(q5, k5, v.transpose(1, 0, 2)[None],
+                              causal=True, block_q=block_q,
+                              block_k=block_k, interpret=True)
+        return out[0, :, :, 0, :].transpose(1, 0, 2)     # back to [BH, S, D]
+
+    def ref(q, k, v):
+        from ..kernels.flash_attention.ref import reference_attention
+        return reference_attention(q, k, v, group=1, causal=True)
+
+    opts = (32, 64, 96, 128, 256)
+    return KernelSpec(
+        name="flash_attention",
+        description=f"causal flash attention [{bh},{s},{d}] f32; "
+                    "grid (BH, S/block_q, T/block_k)",
+        axes={"block_q": opts, "block_k": opts},
+        defaults={"block_q": 128, "block_k": 128},
+        dims={"block_q": s, "block_k": s},
+        make_inputs=make_inputs, run=run, ref=ref,
+        flops=4.0 * bh * s * s * d, bytes_rw=4.0 * 4 * bh * s * d,
+        tol=5e-3, grid_base=bh)
+
+
+def _spec_rglru() -> KernelSpec:
+    import jax.numpy as jnp
+
+    bt, s, r_dim = 1, 512, 16
+
+    def make_inputs():
+        r = _rng(2)
+        a = jnp.asarray(r.uniform(0.05, 0.95, (bt, s, r_dim)), jnp.float32)
+        b = jnp.asarray(0.1 * r.randn(bt, s, r_dim), jnp.float32)
+        return (a, b)
+
+    def run(a, b, *, block):
+        from ..kernels.rglru.ops import rglru_scan
+        return rglru_scan(a, b, block=block, interpret=True)
+
+    def ref(a, b):
+        from ..kernels.rglru.ref import reference_scan
+        return reference_scan(a, b)
+
+    return KernelSpec(
+        name="rglru",
+        description=f"RG-LRU linear scan [{bt},{s},{r_dim}] f32; "
+                    "grid (B, S/block)",
+        axes={"block": (64, 128, 192, 256, 512)},
+        defaults={"block": 256},
+        dims={"block": s},
+        make_inputs=make_inputs, run=run, ref=ref,
+        flops=2.0 * bt * s * r_dim, bytes_rw=4.0 * 3 * bt * s * r_dim,
+        tol=5e-4)
+
+
+def _spec_ssd() -> KernelSpec:
+    import jax.numpy as jnp
+
+    bt, s, h, p, g, n = 1, 256, 2, 8, 1, 8
+
+    def make_inputs():
+        r = _rng(3)
+        x = jnp.asarray(r.randn(bt, s, h, p), jnp.float32)
+        dt = jnp.asarray(r.uniform(0.001, 0.1, (bt, s, h)), jnp.float32)
+        a = jnp.asarray(-r.uniform(0.5, 2.0, (h,)), jnp.float32)
+        b = jnp.asarray(r.randn(bt, s, g, n), jnp.float32)
+        c = jnp.asarray(r.randn(bt, s, g, n), jnp.float32)
+        return (x, dt, a, b, c)
+
+    def run(x, dt, a, b, c, *, chunk):
+        from ..kernels.ssd.ops import ssd
+        return ssd(x, dt, a, b, c, chunk=chunk, interpret=True)
+
+    def ref(x, dt, a, b, c):
+        from ..kernels.ssd.ref import reference_ssd_sequential
+        return reference_ssd_sequential(x, dt, a, b, c)
+
+    return KernelSpec(
+        name="ssd",
+        description=f"Mamba-2 SSD chunked scan [{bt},{s},{h},{p}] f32; "
+                    "grid (B, S/chunk)",
+        axes={"chunk": (32, 64, 96, 128, 256)},
+        defaults={"chunk": 128},
+        dims={"chunk": s},
+        make_inputs=make_inputs, run=run, ref=ref,
+        flops=6.0 * bt * s * h * p * n, bytes_rw=4.0 * 2 * bt * s * h * p,
+        tol=2e-3)
+
+
+KERNEL_SPECS: Dict[str, Callable[[], KernelSpec]] = {
+    "block_matmul": _spec_block_matmul,
+    "flash_attention": _spec_flash_attention,
+    "rglru": _spec_rglru,
+    "ssd": _spec_ssd,
+}
+
+
+# ---------------------------------------------------------------------------
+# The kernel-mapper dialect
+# ---------------------------------------------------------------------------
+def kernel_mapper_text(spec_name: str, tiles: Dict[str, int]) -> str:
+    """Render a tile assignment as kernel-mapper DSL text."""
+    lines = [f"Task {spec_name} TPU;",
+             f"Region {spec_name} data TPU VMEM;"]
+    lines += [f"Tile {key} {int(v)};" for key, v in sorted(tiles.items())]
+    return "\n".join(lines)
+
+
+def parse_kernel_mapper(src: str, spec: KernelSpec) -> Dict[str, int]:
+    """Parse kernel-mapper text back into a tile assignment.
+
+    Mirrors the main DSL's error phrasing (``Compile Error: ...``) so
+    the base rule pack and the taxonomy classify failures identically.
+    """
+    tiles: Dict[str, int] = {}
+    for raw in src.replace("\n", " ").split(";"):
+        stmt = raw.split("#", 1)[0].strip()
+        if not stmt:
+            continue
+        words = stmt.split()
+        if words[0] == "Task":
+            if len(words) != 3 or words[2] != "TPU":
+                raise CompileError(f"Syntax error in Task statement "
+                                   f"{stmt!r}; expected 'Task <kernel> TPU'")
+            if words[1] != spec.name:
+                raise CompileError(f"unknown task {words[1]!r}; this cell "
+                                   f"tunes kernel {spec.name!r}")
+        elif words[0] == "Region":
+            continue    # placement is fixed (VMEM); accepted for idiom
+        elif words[0] == "Tile":
+            if len(words) != 3:
+                raise CompileError(f"Syntax error in Tile statement "
+                                   f"{stmt!r}; expected 'Tile <key> <int>'")
+            key = words[1]
+            if key not in spec.axes:
+                raise CompileError(
+                    f"unknown tile key {key!r} for kernel {spec.name}; "
+                    f"known: {sorted(spec.axes)}")
+            try:
+                tiles[key] = int(words[2])
+            except ValueError:
+                raise CompileError(f"Tile {key} needs an integer size, "
+                                   f"got {words[2]!r}") from None
+        else:
+            raise CompileError(f"Syntax error, unexpected {words[0]!r} "
+                               f"in kernel mapper")
+    missing = sorted(set(spec.axes) - set(tiles))
+    if missing:
+        raise CompileError(f"missing Tile statements for {missing} "
+                           f"of kernel {spec.name}")
+    return tiles
+
+
+# ---------------------------------------------------------------------------
+# Agent
+# ---------------------------------------------------------------------------
+class KernelAgent(Module):
+    """Single-bundle agent over a kernel's tile decision space."""
+
+    def __init__(self, spec: KernelSpec, decisions: Optional[Dict] = None):
+        self.spec = spec
+        d = decisions or {"tile_decision": dict(spec.defaults)}
+
+        def render(value, _):
+            return kernel_mapper_text(spec.name, value)
+
+        self.tile_decision = Bundle(
+            "tile_decision", {k: v for k, v in spec.axes.items()},
+            dict(d["tile_decision"]), render)
+
+    def generate_mapper(self) -> Dict[str, str]:
+        return {b.name: b.forward(None) for b in self.bundles()}
+
+    def mapper_text(self) -> str:
+        return self.tile_decision.forward(None)
+
+    def decisions(self):
+        return self.parameters()
+
+    def set_decisions(self, d):
+        self.load_parameters(d)
+
+
+# ---------------------------------------------------------------------------
+# Evaluator: oracle-gated, tiered (analytic | measured)
+# ---------------------------------------------------------------------------
+_MISS = object()
+
+
+class KernelEvaluator:
+    """Evaluate kernel-mapper text: parse -> oracle -> score.
+
+    Every runnable candidate is differentially tested against the
+    kernel's reference implementation first; only matching outputs get a
+    score.  ``tier="measured"`` (default) wall-clocks the jitted kernel
+    under ``measure_cfg``; ``tier="analytic"`` scores from the grid
+    estimate without executing.  Caching mirrors the LM engine: a text
+    LRU in front of a tile-fingerprint LRU, optionally backed by a
+    sqlite :class:`DiskCache` (the Tuner attaches its checkpoint's
+    ``.evalcache`` here, so resumed runs replay measured scores with
+    zero re-runs).
+    """
+
+    def __init__(self, spec: KernelSpec, tier: str = "measured",
+                 measure_cfg: Optional[MeasureConfig] = None,
+                 cache_size: int = 256,
+                 prescreen_margin: float = 2.0):
+        if tier not in KERNEL_TIERS:
+            raise ValueError(f"unknown evaluation tier {tier!r}; "
+                             f"choose from {KERNEL_TIERS}")
+        self.spec = spec
+        self.tier = tier
+        self.measure_cfg = measure_cfg or MeasureConfig(
+            warmup=1, repeats=3, trim=0.2, max_rel_stddev=0.5,
+            max_remeasure=2)
+        self.prescreen_margin = prescreen_margin
+        self.text_cache = LRUCache(cache_size)
+        self.plan_cache = LRUCache(cache_size)
+        self.disk: Optional[DiskCache] = None
+        self.run_count = 0          # actual kernel executions paid
+        self.oracle_failures = 0    # candidates rejected by the oracle
+        self.prescreen_count = 0
+        self.measured_pairs: list = []   # (terms, analytic_s, measured_s)
+        self._inputs = None
+        self._ref_out = None
+
+    # -- persistence (same contract as EvalEngine) --------------------------
+    def attach_disk_cache(self, path: str) -> None:
+        if self.disk is not None:
+            return
+        self.disk = DiskCache(path)
+
+    def _cell_key(self) -> Dict:
+        import jax
+        key = {"kernel": self.spec.name, "tier": self.tier,
+               "backend": jax.default_backend(),
+               "axes": {k: list(v) for k, v in sorted(self.spec.axes.items())},
+               "dims": dict(sorted(self.spec.dims.items()))}
+        if self.tier == "measured":
+            key["measure"] = self.measure_cfg.key()
+        return key
+
+    def fingerprint(self, tiles: Dict[str, int]) -> str:
+        return plan_fingerprint({"tiles": dict(sorted(tiles.items()))},
+                                self._cell_key())
+
+    def mapper_fingerprint(self, mapper_src: str) -> str:
+        """Canonical fingerprint of mapper text (two textually different
+        mappers assigning the same tiles share it); used by the
+        MapperStore's artifact keying."""
+        return self.fingerprint(parse_kernel_mapper(mapper_src, self.spec))
+
+    # -- data ---------------------------------------------------------------
+    def _data(self):
+        if self._inputs is None:
+            import jax
+            self._inputs = self.spec.make_inputs()
+            self._ref_out = jax.block_until_ready(
+                self.spec.ref(*self._inputs))
+        return self._inputs, self._ref_out
+
+    # -- the hot path -------------------------------------------------------
+    def __call__(self, mapper_src: str) -> Feedback:
+        tkey = text_key(mapper_src)
+        fb = self.text_cache.get(tkey, _MISS)
+        if fb is not _MISS:
+            return fb
+        try:
+            tiles = parse_kernel_mapper(mapper_src, self.spec)
+        except CompileError as e:
+            fb = diagnose(report_from_error(e, substrate="kernel"),
+                          pack="kernel")
+            self.text_cache.put(tkey, fb)
+            return fb
+        fp = self.fingerprint(tiles)
+        fb = self.plan_cache.get(fp, _MISS)
+        if fb is _MISS and self.disk is not None:
+            payload = self.disk.get(fp)
+            if payload is not None:
+                try:
+                    fb = self._decode(payload)
+                except Exception:
+                    fb = _MISS
+        if fb is _MISS:
+            fb = self._evaluate(tiles)
+            self.plan_cache.put(fp, fb)
+            if self.disk is not None:
+                payload = self._encode(fb)
+                if payload is not None:
+                    self.disk.put(fp, payload)
+        else:
+            self.plan_cache.put(fp, fb)
+        self.text_cache.put(tkey, fb)
+        return fb
+
+    def _evaluate(self, tiles: Dict[str, int]) -> Feedback:
+        import jax
+
+        spec = self.spec
+        problem = spec.check(tiles)
+        if problem is not None:
+            xr = report_from_error(ExecutionError(problem),
+                                   substrate="kernel")
+            return diagnose(xr, pack="kernel")
+        terms = spec.analytic_terms(tiles)
+        analytic_s = sum(terms.values())
+        grid = spec.grid_size(tiles)
+        if self.tier == "analytic":
+            xr = ExecutionReport(
+                category=ErrorCategory.OK,
+                message=(f"Performance Metric: analytic kernel estimate "
+                         f"{analytic_s*1e3:.3f} ms; grid runs {grid} "
+                         f"program instances."),
+                substrate="kernel", score=analytic_s,
+                details={"tier": "analytic", "grid": grid,
+                         "tiles": dict(tiles), "terms": terms})
+            return diagnose(xr, pack="kernel")
+        inputs, ref_out = self._data()
+        try:
+            self.run_count += 1
+            out = jax.block_until_ready(spec.run(*inputs, **tiles))
+        except Exception as e:
+            xr = report_from_error(ExecutionError(str(e)[:500]),
+                                   substrate="kernel")
+            return diagnose(xr, pack="kernel")
+        err = float(jax.numpy.max(jax.numpy.abs(
+            out.astype(jax.numpy.float32) -
+            ref_out.astype(jax.numpy.float32))))
+        if not err <= spec.tol:    # catches NaN too
+            self.oracle_failures += 1
+            xr = ExecutionReport(
+                category=ErrorCategory.EXECUTION,
+                message=(f"Execution Error: kernel output diverges from "
+                         f"the reference oracle (max|delta| {err:.3e} > "
+                         f"tolerance {spec.tol:.1e}) under Tile "
+                         f"{dict(sorted(tiles.items()))}; candidate "
+                         "rejected without scoring."),
+                substrate="kernel", score=None,
+                details={"tier": self.tier, "tiles": dict(tiles),
+                         "max_abs_err": err, "tol": spec.tol})
+            return diagnose(xr, pack="kernel")
+        m = measure(lambda: jax.block_until_ready(spec.run(*inputs, **tiles)),
+                    self.measure_cfg)
+        self.measured_pairs.append((terms, analytic_s, m.value))
+        message = (f"Measured Metric: kernel time {m.value*1e3:.3f} ms "
+                   f"wall-clock (trimmed median of {len(m.samples)} "
+                   f"samples, warmup {m.warmup}, rel stddev "
+                   f"{m.rel_stddev*100:.1f}%")
+        if m.remeasure_rounds:
+            message += f", re-measured x{m.remeasure_rounds}"
+        message += (f"). Oracle passed (max|delta| {err:.1e}). Grid runs "
+                    f"{grid} program instances; analytic estimate "
+                    f"{analytic_s*1e3:.3f} ms.")
+        xr = ExecutionReport(
+            category=ErrorCategory.OK, message=message, substrate="kernel",
+            score=m.value,
+            details={"tier": "measured", "backend": jax.default_backend(),
+                     "grid": grid, "tiles": dict(tiles),
+                     "max_abs_err": err, "terms": terms,
+                     "analytic_s": analytic_s,
+                     "measurement": m.to_dict()})
+        return diagnose(xr, pack="kernel")
+
+    # -- Tier-2 prescreen (run_loop routes batch extras through this) -------
+    def prescreen(self, mapper_src: str) -> Optional[PrescreenResult]:
+        self.prescreen_count += 1
+        try:
+            tiles = parse_kernel_mapper(mapper_src, self.spec)
+        except Exception:
+            return None
+        if self.spec.check(tiles) is not None:
+            return None    # let full evaluation surface the real error
+        terms = self.spec.analytic_terms(tiles)
+        return PrescreenResult(score=sum(terms.values()), terms=terms)
+
+    # -- Tier-3 introspection ----------------------------------------------
+    def calibration(self):
+        if len(self.measured_pairs) < 3:
+            return None
+        import jax
+        try:
+            return fit_calibration([p[0] for p in self.measured_pairs],
+                                   [p[2] for p in self.measured_pairs],
+                                   backend=jax.default_backend())
+        except ValueError:
+            return None
+
+    def measured_rank_agreement(self) -> Optional[float]:
+        if len(self.measured_pairs) < 2:
+            return None
+        return rank_agreement([p[1] for p in self.measured_pairs],
+                              [p[2] for p in self.measured_pairs])
+
+    def stats(self) -> Dict:
+        return {"tier": self.tier, "runs": self.run_count,
+                "oracle_failures": self.oracle_failures,
+                "prescreens": self.prescreen_count,
+                "measurements": len(self.measured_pairs),
+                "disk_entries": len(self.disk) if self.disk else 0}
+
+    # -- disk payloads (feedback-only; no roofline on this substrate) -------
+    @staticmethod
+    def _encode(fb: Feedback) -> Optional[Dict]:
+        import json
+        try:
+            payload = {"feedback": {
+                "system": fb.system, "explain": fb.explain,
+                "suggest": fb.suggest, "score": fb.score,
+                "report": fb.report.to_dict() if fb.report else None}}
+            json.dumps(payload, allow_nan=False)
+            return payload
+        except (TypeError, ValueError):
+            return None
+
+    @staticmethod
+    def _decode(payload: Dict) -> Feedback:
+        f = payload["feedback"]
+        return Feedback(
+            system=f["system"], explain=f.get("explain", ""),
+            suggest=f.get("suggest", ""), score=f.get("score"),
+            report=(ExecutionReport.from_dict(f["report"])
+                    if f.get("report") else None))
+
+
+# ---------------------------------------------------------------------------
+# Workload
+# ---------------------------------------------------------------------------
+class KernelWorkload(AgentWorkload):
+    """A Pallas kernel as a tunable workload (``kernel/<name>``)."""
+
+    substrate = "kernel"
+    rule_pack = "kernel"
+    # wall-clock measurements must not run concurrently with each other
+    # (or with anything else timing-sensitive in-process)
+    parallel_safe = False
+
+    def __init__(self, spec: KernelSpec, tier: str = "measured",
+                 measure_cfg: Optional[MeasureConfig] = None):
+        super().__init__()
+        if tier not in KERNEL_TIERS:
+            raise ValueError(f"unknown evaluation tier {tier!r}; "
+                             f"choose from {KERNEL_TIERS}")
+        self.spec = spec
+        self.tier = tier
+        self.measure_cfg = measure_cfg
+        self.name = f"kernel/{spec.name}"
+        self.description = spec.description
+        self.expert_mapper = kernel_mapper_text(spec.name, spec.defaults)
+
+    @classmethod
+    def of(cls, kernel: str, **kw) -> "KernelWorkload":
+        return cls(KERNEL_SPECS[kernel](), **kw)
+
+    # -- tier plumbing (repro.tune --tier) -----------------------------------
+    def set_tier(self, tier: str) -> None:
+        if tier not in KERNEL_TIERS:
+            raise ValueError(f"unknown evaluation tier {tier!r}; "
+                             f"choose from {KERNEL_TIERS}")
+        if tier != self.tier:
+            self.tier = tier
+            self._evaluator = None    # rebuild on next use
+
+    # -- decision space ------------------------------------------------------
+    def make_agent(self, decisions: Optional[Dict] = None):
+        return KernelAgent(self.spec, decisions)
+
+    def random_decisions(self, seed: int) -> Dict:
+        rng = random.Random(seed)
+        return {"tile_decision": {k: rng.choice(v)
+                                  for k, v in self.spec.axes.items()}}
+
+    def neighbors(self, decisions: Dict, rng: random.Random,
+                  k: int = 1) -> Dict:
+        out = copy.deepcopy(decisions)
+        for _ in range(max(1, k)):
+            key = rng.choice(sorted(self.spec.axes))
+            cur = out["tile_decision"].get(key)
+            alts = [v for v in self.spec.axes[key] if v != cur]
+            out["tile_decision"][key] = rng.choice(alts)
+        return out
+
+    # -- evaluation ----------------------------------------------------------
+    def validate_mapper(self, src: str) -> None:
+        parse_kernel_mapper(src, self.spec)
+
+    def _make_evaluator(self) -> KernelEvaluator:
+        return KernelEvaluator(self.spec, tier=self.tier,
+                               measure_cfg=self.measure_cfg)
+
+    # -- service hooks -------------------------------------------------------
+    def mesh_geometry(self) -> str:
+        import jax
+        return f"{jax.default_backend()}:interpret"
+
+    def artifact_provenance(self) -> Dict:
+        ev = self._evaluator
+        prov: Dict[str, object] = {"tier": self.tier,
+                                   "kernel": self.spec.name}
+        if ev is not None:
+            prov["backend"] = ev._cell_key()["backend"]
+            if self.tier == "measured":
+                prov["measure"] = ev.measure_cfg.key()
+                ra = ev.measured_rank_agreement()
+                if ra is not None:
+                    prov["rank_agreement"] = ra
+        return prov
+
+    # -- proposals ------------------------------------------------------------
+    def llm(self) -> HeuristicLLM:
+        biggest = [("tile_decision", key,
+                    max(v for v in opts if self.spec.dims[key] % v == 0))
+                   for key, opts in sorted(self.spec.axes.items())]
+        valid = {key: [v for v in opts if self.spec.dims[key] % v == 0]
+                 for key, opts in self.spec.axes.items()}
+        shrink = [("tile_decision", key, min(vs))
+                  for key, vs in sorted(valid.items())]
+        return HeuristicLLM(rules=[
+            # an indivisible tile: snap every axis to its largest valid size
+            (r"does not divide", {"try": biggest}),
+            # grid-dominated timing: fewer, larger program instances
+            (r"grid runs \d+ program instances", {"try": biggest}),
+            # noisy measurement or oracle reject: retreat to small tiles
+            (r"diverges from the reference oracle", {"try": shrink}),
+        ], neighbor_fn=self.neighbors)
+
+
+def resolve_kernel_config(store, kernel: str,
+                          mesh: Optional[str] = None) -> Optional[Dict]:
+    """Serving-side helper: the best published tile config for a kernel.
+
+    Returns the decoded ``{tile key: size}`` dict of the best
+    :class:`~repro.service.store.MapperArtifact` for
+    ``kernel/<kernel>`` on ``mesh`` (default: this process's backend
+    geometry), or ``None`` when nothing has been published."""
+    spec = KERNEL_SPECS[kernel]()
+    if mesh is None:
+        import jax
+        mesh = f"{jax.default_backend()}:interpret"
+    art = store.best(f"kernel/{kernel}", mesh)
+    if art is None:
+        return None
+    return parse_kernel_mapper(art.mapper, spec)
+
+
+def register_kernels(registry) -> None:
+    for name in KERNEL_SPECS:
+        registry.register(
+            f"kernel/{name}",
+            (lambda name=name: KernelWorkload.of(name)),
+            substrate="kernel",
+            description=KERNEL_SPECS[name]().description
+            + " (oracle-gated, Tier-3 measured)")

@@ -30,7 +30,8 @@ class LMCellWorkload(AgentWorkload):
 
     def __init__(self, arch: str, shape: str, multi_pod: bool = False,
                  *, cache_size: int = 256, disk_cache: str = None,
-                 prescreen_margin: float = 2.0, smoke: bool = False):
+                 prescreen_margin: float = 2.0, smoke: bool = False,
+                 tier: str = "analytic"):
         super().__init__()
         self.arch = arch
         self.shape = shape
@@ -39,9 +40,27 @@ class LMCellWorkload(AgentWorkload):
         self.disk_cache = disk_cache
         self.prescreen_margin = prescreen_margin
         self.smoke = smoke
+        self.tier = tier
         self.name = f"lm/{arch}/{shape}"
         self.description = (f"{arch} {shape} cell on the production mesh"
                             f"{' (multi-pod)' if multi_pod else ''}")
+
+    def set_tier(self, tier: str) -> None:
+        """Switch evaluation tier (Tier-3 "measured" actually runs the
+        compiled step; see repro.core.evalengine.measure).  Measured LM
+        cells need a mesh with real attached devices, i.e. smoke cells."""
+        from ..core.evalengine import EVAL_TIERS
+        if tier not in EVAL_TIERS:
+            raise ValueError(f"unknown evaluation tier {tier!r}; "
+                             f"choose from {EVAL_TIERS}")
+        if tier == "measured" and not self.smoke:
+            raise ValueError(
+                "tier='measured' runs the compiled step, which needs real "
+                "attached devices; production dry-run cells are "
+                "analytic-only (use a smoke cell)")
+        if tier != self.tier:
+            self.tier = tier
+            self._evaluator = None
 
     def make_agent(self, decisions: Optional[Dict] = None):
         return MapperAgent(decisions)
@@ -63,7 +82,7 @@ class LMCellWorkload(AgentWorkload):
                                cache_size=self.cache_size,
                                disk_cache=self.disk_cache,
                                prescreen_margin=self.prescreen_margin,
-                               smoke=self.smoke)
+                               smoke=self.smoke, tier=self.tier)
 
 
 def register_lm_cells(registry):

@@ -85,10 +85,12 @@ def populate(registry: Optional[WorkloadRegistry] = None) -> WorkloadRegistry:
     if reg is REGISTRY and _POPULATED:
         return reg
     from .adapters_apps import register_apps
+    from .adapters_kernels import register_kernels
     from .adapters_lm import register_lm_cells
     from .adapters_mm import register_matmuls
     register_apps(reg)
     register_matmuls(reg)
+    register_kernels(reg)
     register_lm_cells(reg)
     if reg is REGISTRY:
         _POPULATED = True

@@ -128,11 +128,23 @@ class Tuner:
     #: plan fingerprint, score, provenance -- through the service layer's
     #: one publishing path.  Runtime wiring only, never checkpointed.
     store: Optional[object] = None
+    #: Evaluation tier override ("analytic" | "measured"): forwarded to
+    #: the workload's ``set_tier`` hook before the evaluator is built.
+    #: None keeps the workload's default.  Persisted in checkpoints so a
+    #: resumed run measures (or doesn't) exactly like the original.
+    tier: Optional[str] = None
 
     def __post_init__(self):
         if isinstance(self.workload, str):
             from . import registry
             self.workload = registry.get(self.workload)
+        if self.tier is not None:
+            set_tier = getattr(self.workload, "set_tier", None)
+            if set_tier is None:
+                raise ValueError(
+                    f"workload {self.workload.name!r} does not support "
+                    f"evaluation tiers (no set_tier hook)")
+            set_tier(self.tier)
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}; "
                              f"choose from {STRATEGIES}")
@@ -160,6 +172,7 @@ class Tuner:
             "batch": self.batch,
             "seed": self.seed,
             "feedback_level": self.feedback_level,
+            "tier": self.tier,
             "search_state": _search_state(search),
             "session": _session_to_json(session),
         }
@@ -197,11 +210,18 @@ class Tuner:
                           session=session, on_iteration=on_it)
         if self.store is not None:
             from ..service.store import publish_result
-            publish_result(self.store, wl, result, provenance={
+            provenance = {
                 "source": "tuner", "strategy": self.strategy,
                 "feedback_level": self.feedback_level, "seed": self.seed,
                 "iterations": self.iterations, "batch": self.batch,
-                "checkpoint": self.checkpoint})
+                "checkpoint": self.checkpoint}
+            # workloads with measured tiers describe *how* the winning
+            # score was produced (tier, backend, measurement controls,
+            # analytic-vs-measured rank agreement)
+            describe = getattr(wl, "artifact_provenance", None)
+            if describe is not None:
+                provenance.update(describe())
+            publish_result(self.store, wl, result, provenance=provenance)
         return result
 
     @classmethod
@@ -235,7 +255,8 @@ class Tuner:
                 iterations=(iterations if iterations is not None
                             else payload["iterations"]),
                 batch=payload["batch"], seed=payload["seed"],
-                feedback_level=payload["feedback_level"], checkpoint=path)
+                feedback_level=payload["feedback_level"], checkpoint=path,
+                tier=payload.get("tier"))
         t._payload = payload
         return t
 
@@ -254,13 +275,16 @@ def tune(workload: Union[str, Workload], strategy: str = "trace",
          iterations: int = 10, batch: int = 1, seed: int = 0,
          feedback_level: str = "full", start: Optional[Dict] = None,
          checkpoint: Optional[str] = None, llm: Optional[object] = None,
-         store: Optional[object] = None):
+         store: Optional[object] = None, tier: Optional[str] = None):
     """Tune ``workload`` and return a ``SearchResult`` (the single entry
     point the CLI, examples, benchmarks, and legacy shims go through).
-    ``store`` publishes the winner to a mapper artifact registry."""
+    ``store`` publishes the winner to a mapper artifact registry; ``tier``
+    overrides the evaluation tier ("analytic" | "measured") on workloads
+    that support it."""
     return Tuner(workload, strategy=strategy, iterations=iterations,
                  batch=batch, seed=seed, feedback_level=feedback_level,
-                 checkpoint=checkpoint, llm=llm, store=store).run(start=start)
+                 checkpoint=checkpoint, llm=llm, store=store,
+                 tier=tier).run(start=start)
 
 
 def resume(checkpoint: str, iterations: Optional[int] = None,

@@ -103,6 +103,15 @@ class AgentWorkload:
     def render_mapper(self, decisions: Dict[str, Dict]) -> str:
         return self.make_agent(decisions).mapper_text()
 
+    def validate_mapper(self, src: str) -> None:
+        """Raise if ``src`` is not valid mapper text for this workload.
+
+        The default parses the main mapper DSL; substrates with their
+        own dialect (``kernel/*``) override with their own parser.
+        """
+        from ..core.dsl import parse
+        parse(src)
+
     def _make_evaluator(self) -> Callable[[str], Feedback]:
         raise NotImplementedError
 

@@ -21,8 +21,8 @@ from .engine import (MAX_SUGGESTIONS, diagnose, history_guidance,
                      implicated_bundles)
 from .report import (CostBreakdown, ErrorCategory, ExecutionReport,
                      MemoryFootprint, classify_error, classify_message,
-                     report_from_error, report_from_metric,
-                     report_from_roofline)
+                     report_from_error, report_from_measurement,
+                     report_from_metric, report_from_roofline)
 from .rules import DSL_VOCAB, RULE_PACKS, Rule, get_pack
 
 __all__ = [
@@ -30,5 +30,5 @@ __all__ = [
     "MAX_SUGGESTIONS", "MemoryFootprint", "RULE_PACKS", "Rule",
     "classify_error", "classify_message", "diagnose", "get_pack",
     "history_guidance", "implicated_bundles", "report_from_error",
-    "report_from_metric", "report_from_roofline",
+    "report_from_measurement", "report_from_metric", "report_from_roofline",
 ]

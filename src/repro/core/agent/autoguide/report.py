@@ -217,3 +217,46 @@ def report_from_metric(seconds: float, metric_name: str = "Execution time",
         category=ErrorCategory.OK,
         message=f"Performance Metric: {metric_name} is {seconds:.4f}s.",
         substrate=substrate, score=seconds)
+
+
+def report_from_measurement(measurement, roofline=None,
+                            hbm_limit: Optional[float] = None,
+                            substrate: str = "lm",
+                            backend: str = "") -> ExecutionReport:
+    """Tier-3 wall-clock measurement -> ExecutionReport.
+
+    ``measurement`` is an :class:`~repro.core.evalengine.measure.Measurement`
+    (duck-typed here to keep autoguide import-free of the engine).  The
+    *score* is the measured trimmed median; the analytic roofline, when
+    available, still rides along as the ``cost`` breakdown so the
+    bottleneck-term rules keep firing, and the raw samples/stddev land
+    in ``details["measurement"]`` for the noise rules and benchmarks.
+    """
+    m = measurement
+    t = m.value
+    message = (f"Measured Metric: step time {t*1e3:.3f} ms wall-clock "
+               f"(trimmed median of {len(m.samples)} samples, "
+               f"warmup {m.warmup}, rel stddev {m.rel_stddev*100:.1f}%")
+    if m.remeasure_rounds:
+        message += f", re-measured x{m.remeasure_rounds}"
+    message += ")."
+    cost = memory = None
+    details: Dict[str, object] = {"tier": "measured", "backend": backend,
+                                  "measurement": m.to_dict()}
+    if roofline is not None:
+        cost = CostBreakdown(
+            step_time_s=roofline.step_time_s, compute_s=roofline.compute_s,
+            memory_s=roofline.memory_s, collective_s=roofline.collective_s,
+            bottleneck=roofline.bottleneck,
+            useful_flops_ratio=roofline.useful_flops_ratio,
+            roofline_fraction=roofline.roofline_fraction)
+        details["analytic_step_time_s"] = roofline.step_time_s
+        message += (f" Analytic estimate {roofline.step_time_s*1e3:.3f} ms "
+                    f"({roofline.bottleneck} term dominates).")
+        if roofline.peak_memory_bytes is not None and hbm_limit:
+            memory = MemoryFootprint(
+                peak_bytes_per_device=roofline.peak_memory_bytes,
+                limit_bytes_per_device=hbm_limit)
+    return ExecutionReport(category=ErrorCategory.OK, message=message,
+                           substrate=substrate, score=t, cost=cost,
+                           memory=memory, details=details)

@@ -16,7 +16,9 @@ signal (compiler diagnostics).  Each rule carries
 
 Packs: ``base`` (errors common to every substrate), ``lm`` (roofline
 bottleneck terms + HBM pressure on the production mesh), ``app``
-(task-graph placement), ``matmul`` (index-mapping search).  ``get_pack``
+(task-graph placement), ``matmul`` (index-mapping search), ``kernel``
+(Pallas block/tile tuning: oracle rejects, tile divisibility, measured
+wall-clock).  ``get_pack``
 composes substrate packs on top of ``base``; the ``all`` pack preserves
 the legacy single-list matching order for ``enhance()`` compatibility.
 See docs/feedback.md for the how-to-write-a-rule-pack guide.
@@ -47,6 +49,8 @@ DSL_VOCAB = frozenset({
     # index-mapping function family (apps/matmul substrates)
     "block1d", "cyclic1d", "block2d", "cyclic2d", "linearize",
     "linearize3d", "blockcyclic",
+    # kernel substrate: the Tile statement and its axis keys
+    "Tile", "block_q", "block_k", "bm", "bn", "bk", "block", "chunk",
 })
 
 
@@ -317,21 +321,92 @@ MM_RULES: Tuple[Rule, ...] = (
          ()),
 )
 
+# Kernel: the Pallas block/tile substrate (oracle-gated, Tier-3 measured).
+KERNEL_RULES: Tuple[Rule, ...] = (
+    Rule("kernel/tile-statement", ErrorCategory.COMPILE,
+         _msg("tile"),
+         "The kernel mapper must assign every tile axis exactly once.",
+         "After the Task statement, emit one 'Tile <key> <int>;' per axis "
+         "the kernel exposes (bm, bn, bk / block_q, block_k / block / "
+         "chunk).",
+         _ex_error(ErrorCategory.COMPILE,
+                   "Compile Error: missing Tile statements for ['bk'] of "
+                   "kernel block_matmul", "kernel"),
+         ()),
+    Rule("kernel/tile-indivisible", ErrorCategory.EXECUTION,
+         _msg("does not divide"),
+         "The kernel's grid only covers the arrays when every tile size "
+         "divides the dimension it tiles.",
+         "Pick a Tile size that divides the dimension exactly (powers of "
+         "two usually do): bm, bn, bk, block_q, block_k, block and chunk "
+         "must each divide their axis.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: tile bm=96 does not divide dimension "
+                   "256 of kernel block_matmul", "kernel"),
+         ()),
+    Rule("kernel/oracle-mismatch", ErrorCategory.EXECUTION,
+         _msg("diverges from the reference oracle"),
+         "The candidate ran but produced numerically wrong output; the "
+         "differential oracle rejected it, so it gets no score.",
+         "Back off to a smaller Tile size on the axis you just changed -- "
+         "a configuration is only a win if it matches the reference "
+         "bit-close AND lowers the measured time.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: kernel output diverges from the "
+                   "reference oracle (max|delta| 2.1e-01 > tolerance "
+                   "5.0e-03) under Tile {'bm': 64}; candidate rejected "
+                   "without scoring.", "kernel"),
+         ()),
+    Rule("kernel/measured-metric", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("measured metric")(r),
+         "Wall-clock here is launch-dominated: every grid step pays a "
+         "fixed overhead, so more, smaller program instances run slower.",
+         "Raise the Tile sizes (bm, bn, bk / block_q, block_k / block / "
+         "chunk) to shrink the grid, keeping each size a divisor of its "
+         "dimension.",
+         lambda: ExecutionReport(
+             category=ErrorCategory.OK,
+             message="Measured Metric: kernel time 1.234 ms wall-clock "
+                     "(trimmed median of 5 samples, warmup 1, rel stddev "
+                     "2.0%). Oracle passed (max|delta| 1.0e-05). Grid runs "
+                     "8 program instances; analytic estimate 1.000 ms.",
+             substrate="kernel", score=0.001234),
+         ()),
+    Rule("kernel/noisy-measurement", ErrorCategory.OK,
+         lambda r: bool(r.details.get("measurement", {}).get("noisy")),
+         "The wall-clock samples stayed noisy after re-measurement; the "
+         "ordering signal near this configuration is weak.",
+         "Prefer moves that change the grid materially -- double a Tile "
+         "size rather than nudging it -- so the effect clears the noise "
+         "band.",
+         lambda: ExecutionReport(
+             category=ErrorCategory.OK,
+             message="Measured Metric: kernel time 5.000 ms wall-clock "
+                     "(trimmed median of 9 samples, warmup 1, rel stddev "
+                     "61.0%, re-measured x2). Oracle passed (max|delta| "
+                     "1.0e-05). Grid runs 64 program instances; analytic "
+                     "estimate 6.400 ms.",
+             substrate="kernel", score=0.005,
+             details={"measurement": {"noisy": True}}),
+         ()),
+)
+
 RULE_PACKS: Dict[str, Tuple[Rule, ...]] = {
     "base": BASE_RULES,
     "lm": BASE_RULES + LM_RULES,
     "app": BASE_RULES + APP_RULES,
     "app-jax": BASE_RULES + APP_RULES,
     "matmul": BASE_RULES + MM_RULES,
+    "kernel": BASE_RULES + KERNEL_RULES,
     # Legacy single-list order (the retired ENHANCE_RULES precedence):
     # errors first, then bottleneck terms, then the generic metric rules.
-    "all": BASE_RULES + LM_RULES + APP_RULES + MM_RULES,
+    "all": BASE_RULES + LM_RULES + APP_RULES + MM_RULES + KERNEL_RULES,
 }
 
 
 def get_pack(name: str) -> Tuple[Rule, ...]:
-    """Resolve a pack name ('lm' | 'app' | 'app-jax' | 'matmul' | 'base' |
-    'all').  Unknown names raise KeyError: a typo must not silently
+    """Resolve a pack name ('lm' | 'app' | 'app-jax' | 'matmul' |
+    'kernel' | 'base' | 'all').  Unknown names raise KeyError: a typo must not silently
     degrade diagnostics -- custom substrates register their pack in
     RULE_PACKS (docs/feedback.md)."""
     try:

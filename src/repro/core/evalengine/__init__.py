@@ -20,6 +20,13 @@ cheap in three tiers:
   scored from the canonical plan with the roofline cost model *without*
   an XLA compile (OPTIMAS-style analytics-informed prescreening); only
   survivors pay the full lower+compile.
+* **Tier 3 -- measured execution** (:mod:`measure`): with
+  ``EvalEngine(tier="measured")`` the compiled step is actually *run*
+  and wall-clocked under warmup/repeat/trimmed-median controls
+  (:class:`MeasureConfig`); the analytic cost model's term weights can
+  then be re-fit per backend against the measurements
+  (:func:`fit_calibration`) and the analytic-vs-measured ordering
+  quality reported as Kendall tau (:func:`rank_agreement`).
 
 :class:`EvalEngine` (:mod:`engine`) ties the tiers together behind the
 same ``evaluate(mapper_src) -> Feedback`` contract the optimizers use.
@@ -27,15 +34,19 @@ same ``evaluate(mapper_src) -> Feedback`` contract the optimizers use.
 
 from .context import (AbstractMesh, CellContext, CellSkipped,  # noqa: F401
                       smoke_shape)
-from .engine import EvalEngine, screened_feedback  # noqa: F401
+from .engine import EVAL_TIERS, EvalEngine, screened_feedback  # noqa: F401
 from .fingerprint import canonical_plan, plan_fingerprint  # noqa: F401
 from .lru import LRUCache  # noqa: F401
+from .measure import (Calibration, MeasureConfig, Measurement,  # noqa: F401
+                      fit_calibration, measure, rank_agreement,
+                      trimmed_median)
 from .prescreen import PrescreenResult, prescreen_estimate  # noqa: F401
 from .store import DiskCache  # noqa: F401
 
 __all__ = [
-    "AbstractMesh", "CellContext", "CellSkipped", "DiskCache", "EvalEngine",
-    "LRUCache",
-    "PrescreenResult", "canonical_plan", "plan_fingerprint",
-    "prescreen_estimate", "screened_feedback", "smoke_shape",
+    "AbstractMesh", "Calibration", "CellContext", "CellSkipped", "DiskCache",
+    "EVAL_TIERS", "EvalEngine", "LRUCache", "MeasureConfig", "Measurement",
+    "PrescreenResult", "canonical_plan", "fit_calibration", "measure",
+    "plan_fingerprint", "prescreen_estimate", "rank_agreement",
+    "screened_feedback", "smoke_shape", "trimmed_median",
 ]

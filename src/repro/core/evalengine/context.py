@@ -184,11 +184,17 @@ class CellContext:
         return self._min_bytes[order]
 
     # -- Tier 1: the per-candidate tail ------------------------------------
-    def lower(self, plan, verbose: bool = False) -> Tuple[object, object]:
+    def lower(self, plan, verbose: bool = False,
+              with_runner: bool = False) -> Tuple[object, ...]:
         """Apply ``plan``: derive shardings, lower, compile, analyze.
 
         Returns ``(compiled, RooflineReport)``.  This is the only method
-        that pays an XLA compile.
+        that pays an XLA compile.  With ``with_runner=True`` (the
+        measured tier, Tier 3) it additionally returns a zero-arg
+        callable that executes one compiled step on concrete,
+        correctly-sharded inputs and blocks until the outputs are ready
+        -- safe to call repeatedly: donated buffers (params/opt for
+        train, caches for prefill/decode) are chained output -> input.
         """
         if isinstance(self.mesh, AbstractMesh):
             raise RuntimeError(
@@ -205,6 +211,7 @@ class CellContext:
         rules = cell["rules"]
         order = cell["order"]
         b_sh = batch_shardings(rules, self.batch)
+        caches = c_sh = None
         self.build_count += 1
 
         t0 = time.time()
@@ -265,7 +272,57 @@ class CellContext:
                 ca = ca[0]
             print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
             print(format_report(report))
-        return compiled, report
+        if not with_runner:
+            return compiled, report
+        runner = self._make_runner(compiled, cell, b_sh, c_sh, order)
+        return compiled, report, runner
+
+    def _make_runner(self, compiled, cell, b_sh, c_sh, order):
+        """Concrete inputs + a repeat-safe one-step executor (Tier 3).
+
+        Inputs are zeros of the abstract avals placed with the same
+        shardings the step was compiled for; the data never changes the
+        instruction stream, so zeros time exactly what any batch would.
+        The step's donated arguments are threaded output -> input so the
+        runner survives arbitrarily many calls despite buffer donation.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        def concrete(avals, shardings):
+            return jax.tree.map(
+                lambda a, s: jax.device_put(jnp.zeros(a.shape, a.dtype), s),
+                avals, shardings)
+
+        batch = concrete(self.batch, b_sh)
+        params = concrete(cell["abstract_params"], cell["param_shardings"])
+        if self.step == "train":
+            opt = concrete(cell["abstract_opt"], cell["opt_shardings"])
+            state = {"args": (params, opt)}
+
+            def run():
+                p, o, metrics = compiled(*state["args"], batch)
+                state["args"] = (p, o)
+                jax.block_until_ready((p, o, metrics))
+        elif self.step == "prefill":
+            state = {"caches": concrete(self.abstract_caches(order), c_sh)}
+
+            def run():
+                logits, c = compiled(params, batch, state["caches"])
+                state["caches"] = c
+                jax.block_until_ready((logits, c))
+        else:  # decode
+            from ...launch.steps import replicated
+            index = jax.device_put(jnp.zeros((), jnp.int32),
+                                   replicated(cell["rules"]))
+            state = {"caches": concrete(self.abstract_caches(order), c_sh)}
+
+            def run():
+                tok, logits, c = compiled(params, batch["tokens"],
+                                          state["caches"], index)
+                state["caches"] = c
+                jax.block_until_ready((tok, logits, c))
+        return run
 
     def __repr__(self) -> str:
         return (f"<CellContext {self.arch} x {self.spec.name} "

@@ -25,16 +25,20 @@ from typing import Dict, Optional, Tuple
 
 from ..agent.autoguide import (ErrorCategory, ExecutionReport,
                                MemoryFootprint, diagnose, report_from_error,
-                               report_from_roofline)
+                               report_from_measurement, report_from_roofline)
 from ..agent.feedback import Feedback
 from ..dsl.errors import DSLError, ExecutionError
 from .context import CellContext, CellSkipped
 from .fingerprint import text_key
 from .lru import LRUCache
+from .measure import (Calibration, MeasureConfig, fit_calibration, measure,
+                      rank_agreement)
 from .prescreen import PrescreenResult, prescreen_estimate
 from .store import DiskCache
 
 HBM_BYTES = 16 * (1 << 30)   # v5e: 16 GiB per chip
+
+EVAL_TIERS = ("analytic", "measured")
 
 _MISS = object()
 
@@ -61,10 +65,20 @@ class EvalEngine:
     def __init__(self, arch: str, shape, *, multi_pod: bool = False,
                  mesh=None, smoke: bool = False, opt_cfg=None,
                  hbm_limit: float = HBM_BYTES, rule_pack: str = "lm",
-                 cache_size: int = 256, disk_cache: Optional[str] = None):
+                 cache_size: int = 256, disk_cache: Optional[str] = None,
+                 tier: str = "analytic",
+                 measure_cfg: Optional[MeasureConfig] = None):
+        if tier not in EVAL_TIERS:
+            raise ValueError(f"unknown evaluation tier {tier!r}; "
+                             f"choose from {EVAL_TIERS}")
         self.arch = arch
         self.hbm_limit = hbm_limit
         self.rule_pack = rule_pack
+        self.tier = tier
+        self.measure_cfg = measure_cfg or MeasureConfig()
+        # (analytic terms dict, analytic step s, measured s) per live
+        # measurement -- feeds calibration() / rank_agreement()
+        self.measured_pairs: list = []
         self.ctx: Optional[CellContext] = None
         self.skip_reason: Optional[str] = None
         try:
@@ -81,6 +95,7 @@ class EvalEngine:
             self.disk = DiskCache(disk_cache)
         self._compile_lock = threading.Lock()
         self.compile_count = 0
+        self.measure_count = 0
         self.text_hits = 0
         self.plan_hits = 0
         self.disk_hits = 0
@@ -149,9 +164,17 @@ class EvalEngine:
         try:
             plan = self.ctx.compile_mapper(mapper_src)
             # hbm_limit is part of the key: it decides the OOM verdict
-            # baked into the cached Feedback.
-            fingerprint = self.ctx.fingerprint(
-                plan, {"hbm_limit": self.hbm_limit})
+            # baked into the cached Feedback.  The measured tier also
+            # keys on its controls and backend: an analytic entry must
+            # never satisfy a measured lookup (and vice versa), and a
+            # measured time from one backend is not a score on another.
+            extra = {"hbm_limit": self.hbm_limit}
+            if self.tier == "measured":
+                import jax
+                extra.update(tier="measured",
+                             measure=self.measure_cfg.key(),
+                             backend=jax.default_backend())
+            fingerprint = self.ctx.fingerprint(plan, extra)
         except DSLError as e:
             fb = diagnose(report_from_error(e, substrate=self.rule_pack),
                           pack=self.rule_pack)
@@ -211,11 +234,22 @@ class EvalEngine:
         return fb
 
     def _full_eval(self, plan):
-        """Tier 1: the only path that pays an XLA lower+compile."""
+        """Tier 1: the only path that pays an XLA lower+compile.
+
+        On the measured tier (Tier 3) a surviving candidate is then
+        actually executed and wall-clocked: the compiled step runs on
+        concrete sharded inputs under ``measure_cfg`` and the trimmed
+        median becomes the score; the analytic roofline still rides
+        along for the bottleneck rules and for calibration.
+        """
         roofline = None
+        runner = None
         try:
             self.compile_count += 1
-            _, report = self.ctx.lower(plan)
+            if self.tier == "measured":
+                _, report, runner = self.ctx.lower(plan, with_runner=True)
+            else:
+                _, report = self.ctx.lower(plan)
             if (report.peak_memory_bytes or 0) > self.hbm_limit:
                 gib = report.peak_memory_bytes / (1 << 30)
                 xr = ExecutionReport(
@@ -228,6 +262,20 @@ class EvalEngine:
                     memory=MemoryFootprint(
                         peak_bytes_per_device=report.peak_memory_bytes,
                         limit_bytes_per_device=self.hbm_limit))
+            elif runner is not None:
+                import jax
+                self.measure_count += 1
+                m = measure(runner, self.measure_cfg)
+                xr = report_from_measurement(
+                    m, roofline=report, hbm_limit=self.hbm_limit,
+                    substrate=self.rule_pack,
+                    backend=jax.default_backend())
+                self.measured_pairs.append(
+                    ({"compute_s": report.compute_s,
+                      "memory_s": report.memory_s,
+                      "collective_s": report.collective_s},
+                     report.step_time_s, m.value))
+                roofline = report
             else:
                 xr = report_from_roofline(report, hbm_limit=self.hbm_limit)
                 roofline = report
@@ -237,6 +285,29 @@ class EvalEngine:
             xr = report_from_error(ExecutionError(str(e)[:500]),
                                    substrate=self.rule_pack)
         return diagnose(xr, pack=self.rule_pack), roofline
+
+    # -- Tier 3 introspection: calibration + rank agreement -----------------
+    def calibration(self) -> Optional[Calibration]:
+        """Least-squares re-fit of the cost model's term weights against
+        this engine's live measurements (None until enough samples)."""
+        if len(self.measured_pairs) < 3:
+            return None
+        import jax
+        terms = [p[0] for p in self.measured_pairs]
+        meas = [p[2] for p in self.measured_pairs]
+        try:
+            return fit_calibration(terms, meas,
+                                   backend=jax.default_backend())
+        except ValueError:
+            return None
+
+    def measured_rank_agreement(self) -> Optional[float]:
+        """Kendall tau between analytic and measured step-time orderings
+        over this engine's live measurements (None with < 2 samples)."""
+        if len(self.measured_pairs) < 2:
+            return None
+        return rank_agreement([p[1] for p in self.measured_pairs],
+                              [p[2] for p in self.measured_pairs])
 
     # -- Tier 2 -------------------------------------------------------------
     def prescreen(self, mapper_src: str) -> Optional[PrescreenResult]:
@@ -261,6 +332,8 @@ class EvalEngine:
 
     def stats(self) -> Dict[str, object]:
         return {
+            "tier": self.tier,
+            "measurements": self.measure_count,
             "compiles": self.compile_count,
             "text_hits": self.text_hits,
             "plan_hits": self.plan_hits,

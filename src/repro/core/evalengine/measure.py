@@ -1,0 +1,222 @@
+"""Tier 3: measured execution -- wall-clock the compiled step.
+
+Every other tier scores candidates *analytically*; the paper's claims
+are about real execution time.  This module holds the measurement
+machinery the measured tier is built on:
+
+* :class:`MeasureConfig` -- warmup/repeat/trimmed-median controls plus a
+  noise bound (``max_rel_stddev``): when the kept samples are noisier
+  than the bound, the tier re-measures (up to ``max_remeasure`` extra
+  rounds) instead of callers sleeping and retrying.  The clock is
+  injectable, so the controls themselves are testable with a fake clock
+  and zero real sleeps.
+* :func:`measure` -- run a zero-arg callable under a config and return a
+  :class:`Measurement` (kept samples, trimmed median, recorded stddev).
+* :func:`fit_calibration` / :class:`Calibration` -- least-squares fit of
+  per-backend weights for the analytic cost model's terms against
+  measured times, so the roofline's compute/memory/collective seconds
+  can be re-scaled to a backend the constants were never derived for.
+* :func:`rank_agreement` -- Kendall-tau agreement between the analytic
+  and measured orderings: the number that says how far the simulated
+  scores can be trusted to *rank* candidates (docs/architecture.md).
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MeasureConfig:
+    """Wall-clock measurement controls (all tunable, all recorded).
+
+    ``clock`` is injectable for deterministic tests; it never enters
+    cache keys (see :meth:`key`).
+    """
+
+    warmup: int = 1            # untimed calls before sampling (JIT, caches)
+    repeats: int = 5           # timed samples per round
+    trim: float = 0.2          # fraction dropped from *each* tail pre-median
+    max_rel_stddev: float = 0.25   # noise bound triggering a re-measure
+    max_remeasure: int = 2     # extra sample rounds allowed
+    clock: Callable[[], float] = time.perf_counter
+
+    def __post_init__(self):
+        if self.warmup < 0 or self.repeats < 1:
+            raise ValueError(f"need warmup >= 0 and repeats >= 1, got "
+                             f"warmup={self.warmup} repeats={self.repeats}")
+        if not 0.0 <= self.trim < 0.5:
+            raise ValueError(f"trim must be in [0, 0.5), got {self.trim}")
+        if self.max_rel_stddev <= 0 or self.max_remeasure < 0:
+            raise ValueError("max_rel_stddev must be > 0 and "
+                             "max_remeasure >= 0")
+
+    def key(self) -> Dict[str, object]:
+        """The result-affecting fields, for cache fingerprints (the
+        clock is an implementation detail, not part of the key)."""
+        return {"warmup": self.warmup, "repeats": self.repeats,
+                "trim": self.trim, "max_rel_stddev": self.max_rel_stddev,
+                "max_remeasure": self.max_remeasure}
+
+
+@dataclass
+class Measurement:
+    """Result of one :func:`measure` call (strict-JSON round-trippable)."""
+
+    samples: List[float]       # every kept (timed) sample, all rounds
+    value: float               # trimmed median, seconds
+    stddev: float              # over the kept samples
+    rel_stddev: float          # stddev / value (0 when value == 0)
+    warmup: int                # untimed calls that were discarded
+    repeats: int               # samples per round
+    remeasure_rounds: int      # extra rounds taken because of noise
+    noisy: bool = False        # still above max_rel_stddev after all rounds
+
+    def to_dict(self) -> Dict:
+        return {"samples": list(self.samples), "value": self.value,
+                "stddev": self.stddev, "rel_stddev": self.rel_stddev,
+                "warmup": self.warmup, "repeats": self.repeats,
+                "remeasure_rounds": self.remeasure_rounds,
+                "noisy": self.noisy}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Measurement":
+        return cls(samples=list(d["samples"]), value=d["value"],
+                   stddev=d["stddev"], rel_stddev=d["rel_stddev"],
+                   warmup=d["warmup"], repeats=d["repeats"],
+                   remeasure_rounds=d["remeasure_rounds"],
+                   noisy=bool(d.get("noisy", False)))
+
+
+def trimmed_median(samples: Sequence[float], trim: float = 0.2) -> float:
+    """Median after dropping ``floor(n * trim)`` samples from each tail."""
+    xs = sorted(samples)
+    drop = int(len(xs) * trim)
+    kept = xs[drop:len(xs) - drop] if drop else xs
+    return statistics.median(kept)
+
+
+def _stats(samples: Sequence[float], trim: float) -> Tuple[float, float,
+                                                           float]:
+    value = trimmed_median(samples, trim)
+    stddev = statistics.pstdev(samples) if len(samples) > 1 else 0.0
+    rel = stddev / value if value > 0 else 0.0
+    return value, stddev, rel
+
+
+def measure(fn: Callable[[], object],
+            config: Optional[MeasureConfig] = None) -> Measurement:
+    """Wall-clock ``fn`` under ``config``.
+
+    Warmup calls are never timed; each round takes ``repeats`` samples;
+    rounds repeat (pooling samples) while the pooled relative stddev
+    exceeds ``max_rel_stddev``, up to ``max_remeasure`` extra rounds.
+    The returned value is the trimmed median of the pooled samples --
+    robust to scheduler blips without discarding the record of them
+    (``samples`` and ``stddev`` keep the evidence).
+    """
+    cfg = config or MeasureConfig()
+    clock = cfg.clock
+    for _ in range(cfg.warmup):
+        fn()
+    samples: List[float] = []
+    rounds = 0
+    while True:
+        for _ in range(cfg.repeats):
+            t0 = clock()
+            fn()
+            samples.append(clock() - t0)
+        value, stddev, rel = _stats(samples, cfg.trim)
+        if rel <= cfg.max_rel_stddev or rounds >= cfg.max_remeasure:
+            break
+        rounds += 1
+    return Measurement(samples=samples, value=value, stddev=stddev,
+                       rel_stddev=rel, warmup=cfg.warmup,
+                       repeats=cfg.repeats, remeasure_rounds=rounds,
+                       noisy=rel > cfg.max_rel_stddev)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: analytic terms -> measured seconds, per backend
+# ---------------------------------------------------------------------------
+@dataclass
+class Calibration:
+    """Least-squares weights mapping analytic cost terms to measured
+    seconds on one backend (``predicted = sum_i w_i * term_i``)."""
+
+    terms: Tuple[str, ...]
+    weights: Dict[str, float] = field(default_factory=dict)
+    r2: float = 0.0
+    n: int = 0
+    backend: str = ""
+
+    def apply(self, terms: Dict[str, float]) -> float:
+        return sum(self.weights.get(t, 0.0) * float(terms.get(t, 0.0))
+                   for t in self.terms)
+
+    def to_dict(self) -> Dict:
+        return {"terms": list(self.terms), "weights": dict(self.weights),
+                "r2": self.r2, "n": self.n, "backend": self.backend}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Calibration":
+        return cls(terms=tuple(d["terms"]), weights=dict(d["weights"]),
+                   r2=d.get("r2", 0.0), n=d.get("n", 0),
+                   backend=d.get("backend", ""))
+
+
+def fit_calibration(term_rows: Sequence[Dict[str, float]],
+                    measured: Sequence[float],
+                    backend: str = "") -> Calibration:
+    """Fit per-term weights so the analytic terms predict the measured
+    times (ordinary least squares; numpy ships with jax).
+
+    Needs at least as many (terms, measured) pairs as distinct terms;
+    raises ``ValueError`` otherwise -- an under-determined fit would
+    silently produce garbage weights.
+    """
+    import numpy as np
+
+    if len(term_rows) != len(measured):
+        raise ValueError(f"{len(term_rows)} term rows vs "
+                         f"{len(measured)} measurements")
+    names = tuple(sorted({t for row in term_rows for t in row}))
+    if not names:
+        raise ValueError("no cost terms to fit")
+    if len(term_rows) < len(names):
+        raise ValueError(f"need >= {len(names)} samples to fit terms "
+                         f"{names}, got {len(term_rows)}")
+    a = np.array([[float(row.get(t, 0.0)) for t in names]
+                  for row in term_rows], dtype=np.float64)
+    y = np.array([float(m) for m in measured], dtype=np.float64)
+    w, *_ = np.linalg.lstsq(a, y, rcond=None)
+    pred = a @ w
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else (1.0 if ss_res == 0
+                                                   else 0.0)
+    return Calibration(terms=names,
+                       weights={t: float(wi) for t, wi in zip(names, w)},
+                       r2=r2, n=len(measured), backend=backend)
+
+
+def rank_agreement(xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Kendall tau-a between two score sequences: +1 when the analytic
+    and measured orderings agree on every pair, -1 when fully reversed,
+    0 for no association (ties contribute 0).  ``nan`` with < 2 pairs."""
+    n = len(xs)
+    if n != len(ys):
+        raise ValueError(f"length mismatch: {n} vs {len(ys)}")
+    if n < 2:
+        return float("nan")
+    s = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            a = (xs[i] > xs[j]) - (xs[i] < xs[j])
+            b = (ys[i] > ys[j]) - (ys[i] < ys[j])
+            s += a * b
+    return s / (n * (n - 1) / 2)

@@ -53,12 +53,17 @@ class LMCellEvaluator:
     * ``smoke`` / ``mesh`` -- test-scale cells: the arch's smoke config
       on a host mesh (or an explicit mesh) instead of the production
       dry-run mesh.
+    * ``tier`` / ``measure_cfg`` -- ``tier="measured"`` (Tier 3) runs
+      the compiled step on concrete inputs and scores the wall-clock
+      trimmed median under :class:`~repro.core.evalengine.MeasureConfig`
+      controls; requires a mesh with real devices (smoke/host cells).
     """
 
     def __init__(self, arch: str, shape, multi_pod: bool = False,
                  hbm_limit: float = HBM_BYTES, *, cache_size: int = 256,
                  disk_cache: Optional[str] = None, smoke: bool = False,
-                 mesh=None, prescreen_margin: float = 2.0):
+                 mesh=None, prescreen_margin: float = 2.0,
+                 tier: str = "analytic", measure_cfg=None):
         from .evalengine import EvalEngine
         self.arch = arch
         self.shape = shape
@@ -69,7 +74,8 @@ class LMCellEvaluator:
                                  mesh=mesh, smoke=smoke,
                                  hbm_limit=hbm_limit, rule_pack="lm",
                                  cache_size=cache_size,
-                                 disk_cache=disk_cache)
+                                 disk_cache=disk_cache, tier=tier,
+                                 measure_cfg=measure_cfg)
 
     def __call__(self, mapper_src: str) -> Feedback:
         return self.engine.evaluate(mapper_src)

@@ -1,3 +1,27 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom Pallas TPU kernels for the repro's compute hot-spots.
+
+Each subpackage ships three layers: ``kernel.py`` (the raw Pallas
+kernel), ``ops.py`` (a jit'd wrapper with the block/tile sizes as static
+arguments), and ``ref.py`` (a pure-jnp reference implementation that
+serves as the differential-testing oracle -- see tests/test_kernels.py
+and tests/test_kernel_workloads.py).
+
+The block/tile arguments make every kernel *tunable*: the ``kernel/*``
+workload family (:mod:`repro.asi.adapters_kernels`) exposes them as a
+decision space and scores candidates by measured wall-clock, with the
+``ref.py`` oracle gating correctness (docs/kernels.md).
+"""
+
+from .block_matmul.ops import matmul  # noqa: F401
+from .block_matmul.ref import reference_matmul  # noqa: F401
+from .flash_attention.ops import flash_attention  # noqa: F401
+from .flash_attention.ref import reference_attention  # noqa: F401
+from .rglru.ops import rglru_scan  # noqa: F401
+from .rglru.ref import reference_scan  # noqa: F401
+from .ssd.ops import ssd  # noqa: F401
+from .ssd.ref import reference_ssd_sequential  # noqa: F401
+
+__all__ = [
+    "flash_attention", "matmul", "reference_attention", "reference_matmul",
+    "reference_scan", "reference_ssd_sequential", "rglru_scan", "ssd",
+]

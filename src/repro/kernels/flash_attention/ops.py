@@ -18,11 +18,13 @@ from .kernel import flash_attention_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
                                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     q_pos=None, kv_pos=None, causal: bool = True,
                     window: Optional[int] = None, softcap=None,
-                    kv_len=None, interpret: bool = True) -> jax.Array:
+                    kv_len=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
     """q: [B, S, K, G, D]; k, v: [B, T, K, D] -> [B, S, K, G, D]."""
     b, s, kh, g, d = q.shape
     t = k.shape[1]
@@ -33,5 +35,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qf, kf, vf, group=g, causal=causal, window=window,
         kv_len=None if kv_len is None else int(kv_len)
         if isinstance(kv_len, int) else None,
-        softcap=softcap, interpret=interpret)
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
     return out.reshape(b, kh, g, s, d).transpose(0, 3, 1, 2, 4)

@@ -1,11 +1,29 @@
-"""Oracle for the RG-LRU scan kernel: models.rglru.rglru_scan
-(associative scan) -- itself tested against a python loop."""
+"""Pure-jnp oracle for the RG-LRU scan kernel.
+
+A sequential ``lax.scan`` of the gated linear recurrence
+``h_t = a_t * h_{t-1} + bx_t`` (zero initial state) -- deliberately
+independent of both the Pallas kernel *and* the model's associative-scan
+implementation (models/rglru.py), so it can serve as the differential
+oracle for either.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
-def reference_scan(a, b):
-    from ...models.rglru import rglru_scan
-    return rglru_scan(a.astype(jnp.float32), b.astype(jnp.float32))
+def reference_scan(a, bx):
+    """a, bx: [B, S, R] -> h: [B, S, R] float32."""
+    af = a.astype(jnp.float32)
+    bf = bx.astype(jnp.float32)
+
+    def step(h, t):
+        at, bt = t
+        h = at * h + bt
+        return h, h
+
+    init = jnp.zeros(af[:, 0].shape, jnp.float32)
+    _, hs = jax.lax.scan(step, init,
+                         (af.transpose(1, 0, 2), bf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -92,6 +92,12 @@ def mapper_fingerprint(workload, mapper_src: str) -> str:
     """
     from ..core.evalengine.fingerprint import text_key
     evaluator = getattr(workload, "_evaluator", None)
+    own = getattr(evaluator, "mapper_fingerprint", None)
+    if own is not None:     # evaluator with native canonicalization
+        try:
+            return own(mapper_src)
+        except Exception:
+            pass
     engine = getattr(evaluator, "engine", None)
     ctx = getattr(engine, "ctx", None)
     if ctx is not None:

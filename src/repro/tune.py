@@ -7,6 +7,7 @@
     python -m repro.tune --workload circuit --feedback-level scalar
     python -m repro.tune --workload circuit --checkpoint sess.json
     python -m repro.tune --resume sess.json --iters 20
+    python -m repro.tune --workload kernel/block_matmul --tier measured
 
 ``--feedback-level`` ablates how much of the AutoGuide ExecutionReport
 the optimizer sees (paper Fig. 8): scalar | system | explain | full.
@@ -85,6 +86,12 @@ def main(argv=None) -> int:
                     choices=("scalar", "system", "explain", "full"),
                     help="how much of the ExecutionReport the optimizer "
                          "sees, Fig. 8 ablation (default: full)")
+    ap.add_argument("--tier", default=None,
+                    choices=("analytic", "measured"),
+                    help="evaluation tier: 'measured' wall-clocks every "
+                         "candidate (Tier 3) on workloads that support it "
+                         "(kernel/*, smoke LM cells); default: the "
+                         "workload's own")
     ap.add_argument("--checkpoint", default=None,
                     help="write a resumable JSON session here every "
                          "iteration")
@@ -115,6 +122,7 @@ def main(argv=None) -> int:
                      [("strategy", args.strategy), ("batch", args.batch),
                       ("seed", args.seed),
                       ("feedback-level", args.feedback_level),
+                      ("tier", args.tier),
                       ("checkpoint", args.checkpoint),
                       ("record-llm", args.record_llm),
                       ("replay-llm", args.replay_llm),
@@ -151,7 +159,8 @@ def main(argv=None) -> int:
                        iterations=args.iters, batch=args.batch,
                        seed=args.seed,
                        feedback_level=args.feedback_level or "full",
-                       checkpoint=args.checkpoint, llm=llm)
+                       checkpoint=args.checkpoint, llm=llm,
+                       tier=args.tier)
             if recorder is not None:
                 recorder.save(args.record_llm)
                 print(f"recorded {len(recorder.calls)} LLM proposals "

@@ -1,0 +1,405 @@
+"""Differential tests for the ``kernel/*`` workload substrate.
+
+The contract under test: every candidate tile configuration either
+(a) runs and matches the kernel's pure-jnp reference oracle bit-close,
+in which case it gets a measured score, or (b) is reported as a failed
+candidate (Compile/Execution category, no score) -- a numerically-wrong
+kernel can never win.  Sweeps cover the full block/tile menu of all four
+kernels, including the deliberately indivisible (ragged) sizes in each
+decision space; hypothesis drives arbitrary tile sizes through the same
+invariant.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.asi.adapters_kernels import (KERNEL_SPECS, KERNEL_TIERS,
+                                        KernelEvaluator, KernelWorkload,
+                                        kernel_mapper_text,
+                                        parse_kernel_mapper,
+                                        resolve_kernel_config)
+from repro.asi.workload import Workload
+from repro.core.agent.autoguide import ErrorCategory
+from repro.core.dsl.errors import CompileError
+from repro.core.evalengine import MeasureConfig
+
+#: One timed sample, no warmup: the cheapest config that still executes.
+FAST_CFG = MeasureConfig(warmup=0, repeats=1, trim=0.0,
+                         max_rel_stddev=1e9, max_remeasure=0)
+
+
+def _spec(name):
+    return KERNEL_SPECS[name]()
+
+
+def _wl(name, tier="measured"):
+    return KernelWorkload.of(name, tier=tier, measure_cfg=FAST_CFG)
+
+
+# ---------------------------------------------------------------------------
+# Mapper dialect
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(KERNEL_SPECS))
+def test_mapper_roundtrip(name):
+    spec = _spec(name)
+    text = kernel_mapper_text(name, spec.defaults)
+    assert parse_kernel_mapper(text, spec) == spec.defaults
+    # statement order and comments (which run to the next ';') don't matter
+    shuffled = "\n".join(sorted(text.splitlines(), reverse=True))
+    assert parse_kernel_mapper("# tuned;\n" + shuffled, spec) == spec.defaults
+
+
+@pytest.mark.parametrize("src,needle", [
+    ("Task block_matmul TPU;", "missing Tile"),
+    ("Tile bm 128; Tile bn 128; Tile bk 128; Tile zz 4;", "unknown tile"),
+    ("Task wrong TPU; Tile bm 128; Tile bn 128; Tile bk 128;",
+     "unknown task"),
+    ("Tile bm lots; Tile bn 128; Tile bk 128;", "integer"),
+    ("Tile bm; Tile bn 128; Tile bk 128;", "Syntax error"),
+    ("Frobnicate bm 128;", "Syntax error"),
+    ("Task block_matmul;", "Syntax error"),
+])
+def test_parse_rejects_bad_mappers(src, needle):
+    with pytest.raises(CompileError, match=needle):
+        parse_kernel_mapper(src, _spec("block_matmul"))
+
+
+def test_compile_error_feedback_has_no_score():
+    ev = KernelEvaluator(_spec("block_matmul"), tier="analytic")
+    fb = ev("Tile bm 128;")
+    assert fb.score is None
+    assert fb.system.startswith("Compile Error")
+    assert fb.report.category is ErrorCategory.COMPILE
+
+
+# ---------------------------------------------------------------------------
+# Analytic tier: ordering without execution
+# ---------------------------------------------------------------------------
+def test_analytic_tier_scores_without_running():
+    spec = _spec("block_matmul")
+    ev = KernelEvaluator(spec, tier="analytic")
+    small = ev(kernel_mapper_text(spec.name, {"bm": 32, "bn": 32, "bk": 32}))
+    big = ev(kernel_mapper_text(spec.name,
+                                {"bm": 256, "bn": 256, "bk": 256}))
+    assert ev.run_count == 0              # nothing executed
+    assert small.score is not None and big.score is not None
+    assert big.score < small.score        # fewer grid launches
+    assert big.report.details["tier"] == "analytic"
+
+
+def test_unknown_tier_rejected():
+    with pytest.raises(ValueError, match="tier"):
+        KernelEvaluator(_spec("ssd"), tier="warp-speed")
+    with pytest.raises(ValueError, match="tier"):
+        KernelWorkload.of("ssd", tier="warp-speed")
+
+
+# ---------------------------------------------------------------------------
+# Failure classes: divisibility and the correctness oracle
+# ---------------------------------------------------------------------------
+def test_indivisible_tile_is_execution_failure():
+    spec = _spec("block_matmul")
+    ev = KernelEvaluator(spec, tier="analytic")   # check() precedes tiers
+    fb = ev(kernel_mapper_text(spec.name, {"bm": 96, "bn": 128, "bk": 128}))
+    assert fb.score is None
+    assert fb.report.category is ErrorCategory.EXECUTION
+    assert "does not divide" in fb.system
+    assert "Tile" in fb.suggest
+    assert ev.run_count == 0              # rejected before execution
+
+
+def test_oracle_gates_wrong_output():
+    spec = _spec("block_matmul")
+    wrong = dataclasses.replace(
+        spec, run=lambda a, b, **tiles: spec.run(a, b, **tiles) + 1.0)
+    ev = KernelEvaluator(wrong, tier="measured", measure_cfg=FAST_CFG)
+    fb = ev(kernel_mapper_text(spec.name, spec.defaults))
+    assert fb.score is None               # never a win
+    assert fb.report.category is ErrorCategory.EXECUTION
+    assert "diverges from the reference oracle" in fb.system
+    assert fb.report.details["max_abs_err"] > spec.tol
+    assert ev.oracle_failures == 1
+
+
+def test_crashing_candidate_is_execution_failure():
+    spec = _spec("rglru")
+
+    def boom(a, b, **tiles):
+        raise RuntimeError("kernel exploded")
+
+    ev = KernelEvaluator(dataclasses.replace(spec, run=boom),
+                         tier="measured", measure_cfg=FAST_CFG)
+    fb = ev(kernel_mapper_text(spec.name, spec.defaults))
+    assert fb.score is None
+    assert fb.report.category is ErrorCategory.EXECUTION
+    assert "kernel exploded" in fb.system
+
+
+# ---------------------------------------------------------------------------
+# Measured tier: scores, provenance, calibration, caching
+# ---------------------------------------------------------------------------
+def test_measured_scores_and_rank_agreement():
+    spec = _spec("rglru")
+    cfg = MeasureConfig(warmup=1, repeats=3, trim=0.0,
+                        max_rel_stddev=1e9, max_remeasure=0)
+    ev = KernelEvaluator(spec, tier="measured", measure_cfg=cfg)
+    for block in (64, 128, 256, 512):
+        fb = ev(kernel_mapper_text(spec.name, {"block": block}))
+        assert fb.score is not None and fb.score > 0
+        assert "Measured Metric" in fb.system
+        m = fb.report.details["measurement"]
+        assert len(m["samples"]) == 3 and m["warmup"] == 1
+        assert m["rel_stddev"] >= 0.0          # recorded, assertable
+        assert fb.report.details["max_abs_err"] <= spec.tol
+    assert ev.run_count == 4
+    ra = ev.measured_rank_agreement()
+    assert ra is not None and -1.0 <= ra <= 1.0
+    cal = ev.calibration()
+    assert cal is not None and cal.n == 4
+    assert set(cal.terms) == {"launch_s", "compute_s", "memory_s"}
+    json.dumps(cal.to_dict())
+
+
+def test_text_and_plan_caches_prevent_reruns():
+    spec = _spec("rglru")
+    ev = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    text = kernel_mapper_text(spec.name, spec.defaults)
+    fb1 = ev(text)
+    fb2 = ev(text)                               # text-cache hit
+    fb3 = ev("# same tiles, different text\n" + text)   # plan-cache hit
+    assert fb1.score == fb2.score == fb3.score
+    assert ev.run_count == 1
+
+
+def test_disk_cache_replays_measured_scores(tmp_path):
+    spec = _spec("rglru")
+    path = str(tmp_path / "scores.evalcache")
+    ev1 = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    ev1.attach_disk_cache(path)
+    texts = [kernel_mapper_text(spec.name, {"block": b})
+             for b in (128, 256)]
+    scores = [ev1(t).score for t in texts]
+    assert ev1.run_count == 2
+
+    ev2 = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    ev2.attach_disk_cache(path)
+    assert [ev2(t).score for t in texts] == scores
+    assert ev2.run_count == 0             # zero re-runs: replayed from disk
+
+
+def test_fingerprints_separate_tiers_and_measure_configs():
+    spec = _spec("ssd")
+    measured = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    analytic = KernelEvaluator(spec, tier="analytic")
+    other_cfg = KernelEvaluator(
+        spec, tier="measured",
+        measure_cfg=MeasureConfig(warmup=0, repeats=2, trim=0.0,
+                                  max_rel_stddev=1e9, max_remeasure=0))
+    tiles = dict(spec.defaults)
+    fps = {measured.fingerprint(tiles), analytic.fingerprint(tiles),
+           other_cfg.fingerprint(tiles)}
+    assert len(fps) == 3                  # no cross-tier cache pollution
+
+
+def test_prescreen_is_analytic_and_safe():
+    spec = _spec("block_matmul")
+    ev = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    ps = ev.prescreen(kernel_mapper_text(spec.name, spec.defaults))
+    assert ps is not None and ps.viable
+    assert ps.score == pytest.approx(spec.analytic_estimate(spec.defaults))
+    assert ev.run_count == 0
+    # unparseable / indivisible fall through to full evaluation (None)
+    assert ev.prescreen("garbage") is None
+    assert ev.prescreen(kernel_mapper_text(
+        spec.name, {"bm": 96, "bn": 128, "bk": 128})) is None
+
+
+# ---------------------------------------------------------------------------
+# Workload protocol + tuner plumbing
+# ---------------------------------------------------------------------------
+def test_workload_protocol_and_space():
+    wl = _wl("block_matmul")
+    assert isinstance(wl, Workload)
+    assert wl.substrate == "kernel" and wl.rule_pack == "kernel"
+    assert not wl.parallel_safe           # wall-clocks must not overlap
+    assert wl.name == "kernel/block_matmul"
+    assert wl.space_size() == 5 ** 3
+    assert wl.expert_mapper == wl.render_mapper(wl.default_decisions())
+    d = wl.random_decisions(7)
+    assert set(d["tile_decision"]) == {"bm", "bn", "bk"}
+    import random
+    n = wl.neighbors(d, random.Random(0))
+    assert n != d and set(n["tile_decision"]) == {"bm", "bn", "bk"}
+
+
+def test_registry_has_all_kernels():
+    from repro.asi import registry
+    names = registry.populate().names(substrate="kernel")
+    assert names == sorted(f"kernel/{k}" for k in KERNEL_SPECS)
+
+
+def test_set_tier_rebuilds_evaluator():
+    wl = _wl("ssd", tier="measured")
+    ev = wl.evaluator()
+    assert ev.tier == "measured"
+    wl.set_tier("analytic")
+    assert wl.evaluator() is not ev
+    assert wl.evaluator().tier == "analytic"
+    with pytest.raises(ValueError, match="tier"):
+        wl.set_tier("bogus")
+    assert set(KERNEL_TIERS) == {"analytic", "measured"}
+
+
+def test_tuner_tier_plumbing(tmp_path):
+    from repro.asi.tuner import Tuner
+
+    class NoTiers:
+        name = "dummy"
+
+    with pytest.raises(ValueError, match="set_tier"):
+        Tuner(workload=NoTiers(), tier="measured")
+
+    wl = _wl("rglru", tier="analytic")
+    ckpt = str(tmp_path / "sess.json")
+    Tuner(workload=wl, iterations=2, tier="measured",
+          checkpoint=ckpt).run()
+    assert wl.tier == "measured"
+    payload = json.load(open(ckpt))
+    assert payload["tier"] == "measured"  # resumes measure like the original
+
+
+def test_llm_rules_only_propose_valid_divisors():
+    for name in KERNEL_SPECS:
+        wl = _wl(name)
+        spec = wl.spec
+        for _pattern, edit in wl.llm()._RULES:
+            for bundle, key, value in edit["try"]:
+                assert bundle == "tile_decision"
+                assert value in spec.axes[key]
+                assert spec.dims[key] % value == 0, (name, key, value)
+
+
+def test_mesh_geometry_and_artifact_provenance():
+    wl = _wl("rglru")
+    assert wl.mesh_geometry().endswith(":interpret")
+    prov = wl.artifact_provenance()
+    assert prov["tier"] == "measured" and prov["kernel"] == "rglru"
+    ev = wl.evaluator()
+    ev(wl.render_mapper({"tile_decision": {"block": 128}}))
+    ev(wl.render_mapper({"tile_decision": {"block": 512}}))
+    prov = wl.artifact_provenance()
+    assert prov["measure"] == FAST_CFG.key()
+    assert -1.0 <= prov["rank_agreement"] <= 1.0
+    json.dumps(prov)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: tune -> publish -> resolve, and zero-re-run resume
+# ---------------------------------------------------------------------------
+def test_tune_publish_resolve(tmp_path):
+    from repro.asi.tuner import Tuner
+    from repro.service.store import MapperStore
+
+    store = MapperStore(str(tmp_path / "store.sqlite"))
+    wl = _wl("rglru")
+    res = Tuner(workload=wl, iterations=3, seed=0, store=store).run()
+    assert res.best_score is not None
+    (art,) = store.list()
+    assert art.workload == "kernel/rglru"
+    assert art.mesh.endswith(":interpret")
+    assert art.provenance["tier"] == "measured"
+    assert art.provenance["measure"] == FAST_CFG.key()
+    assert not art.fingerprint.startswith("text:")   # canonical, not textual
+    cfg = resolve_kernel_config(store, "rglru", mesh=art.mesh)
+    assert spec_accepts(cfg)
+
+
+def spec_accepts(cfg):
+    spec = _spec("rglru")
+    return set(cfg) == set(spec.axes) and spec.check(cfg) is None
+
+
+def test_checkpoint_rerun_replays_measured_scores(tmp_path):
+    """A re-run (or resume) over the same checkpoint replays every
+    measured score from the ``.evalcache`` sidecar: zero kernel runs."""
+    from repro.asi.tuner import Tuner
+
+    ckpt = str(tmp_path / "sess.json")
+    wl1 = _wl("rglru")
+    res1 = Tuner(workload=wl1, iterations=3, seed=0, tier="measured",
+                 checkpoint=ckpt).run()
+    assert wl1.evaluator().run_count > 0
+
+    wl2 = _wl("rglru")                    # fresh evaluator, same sidecar
+    res2 = Tuner(workload=wl2, iterations=3, seed=0, tier="measured",
+                 checkpoint=ckpt).run()
+    assert wl2.evaluator().run_count == 0
+    assert res2.best_score == res1.best_score
+    assert res2.trajectory == res1.trajectory
+
+
+# ---------------------------------------------------------------------------
+# Differential sweeps: the whole tile menu of all four kernels (slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(KERNEL_SPECS))
+def test_differential_sweep(name):
+    """Every advertised option of every axis (others at default) either
+    matches the oracle bit-close or is reported as a failed candidate --
+    including the deliberately indivisible sizes in each menu."""
+    spec = _spec(name)
+    ev = KernelEvaluator(spec, tier="measured", measure_cfg=FAST_CFG)
+    invalid = 0
+    for key, options in spec.axes.items():
+        for value in options:
+            tiles = dict(spec.defaults, **{key: value})
+            fb = ev(kernel_mapper_text(spec.name, tiles))
+            if spec.check(tiles) is None:
+                assert fb.score is not None, (name, tiles, fb.system)
+                assert fb.report.details["max_abs_err"] <= spec.tol
+            else:
+                invalid += 1
+                assert fb.score is None, (name, tiles)
+                assert "does not divide" in fb.system
+    # each menu deliberately contains at least one ragged size
+    assert invalid >= 1, name
+    assert ev.oracle_failures == 0
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    @pytest.mark.slow
+    def test_any_tile_assignment_is_oracle_consistent():
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (CI installs it)")
+else:
+    _HYP_EV = None
+
+    def _hyp_evaluator():
+        global _HYP_EV
+        if _HYP_EV is None:
+            _HYP_EV = KernelEvaluator(_spec("rglru"), tier="measured",
+                                      measure_cfg=FAST_CFG)
+        return _HYP_EV
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(block=st.sampled_from(
+        (16, 24, 32, 48, 64, 96, 128, 160, 192, 256, 320, 512, 768)))
+    def test_any_tile_assignment_is_oracle_consistent(block):
+        """Property: any tile size either evaluates bit-close to the
+        reference or is reported as a failed candidate -- never a
+        silently-wrong score."""
+        spec = _spec("rglru")
+        ev = _hyp_evaluator()
+        fb = ev(kernel_mapper_text(spec.name, {"block": block}))
+        if fb.score is not None:
+            assert fb.report.details["max_abs_err"] <= spec.tol
+        else:
+            assert fb.report.category in (ErrorCategory.COMPILE,
+                                          ErrorCategory.EXECUTION)
+            assert "does not divide" in fb.system

@@ -1,0 +1,216 @@
+"""Tier-3 measurement machinery under a deterministic fake clock.
+
+The timing controls themselves (warmup discard, trimmed median, repeat
+counts, noise-triggered re-measurement) are tested with scripted clocks
+-- zero real sleeps, zero flakiness -- plus the calibration /
+rank-agreement analytics and the measured tier of the LM evaluation
+engine (slow, real execution).
+"""
+
+import json
+import math
+
+import pytest
+
+from repro.core.evalengine import (EVAL_TIERS, Calibration, MeasureConfig,
+                                   Measurement, fit_calibration, measure,
+                                   rank_agreement, trimmed_median)
+
+
+class ScriptClock:
+    """clock() returning scripted absolute times, one per call."""
+
+    def __init__(self, times):
+        self.times = list(times)
+        self.calls = 0
+
+    def __call__(self):
+        t = self.times[self.calls] if self.calls < len(self.times) \
+            else self.times[-1]
+        self.calls += 1
+        return t
+
+
+def clock_for(durations):
+    """A ScriptClock yielding exactly ``durations`` as timed samples."""
+    times, t = [], 0.0
+    for d in durations:
+        times += [t, t + d]
+        t += d
+    return ScriptClock(times)
+
+
+# ---------------------------------------------------------------------------
+# trimmed_median
+# ---------------------------------------------------------------------------
+def test_trimmed_median_drops_tails():
+    assert trimmed_median([1, 1, 1, 1, 100], trim=0.2) == 1
+    assert trimmed_median([100, 1, 1, 1, 1], trim=0.2) == 1
+    # trim=0 keeps everything: plain median
+    assert trimmed_median([1, 2, 100], trim=0.0) == 2
+
+
+def test_trimmed_median_single_sample():
+    assert trimmed_median([0.5], trim=0.2) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# measure(): warmup / repeats / median / re-measure
+# ---------------------------------------------------------------------------
+def test_measure_discards_warmup_and_honors_repeats():
+    calls = []
+    clock = clock_for([1.0] * 5)
+    cfg = MeasureConfig(warmup=2, repeats=5, clock=clock)
+    m = measure(lambda: calls.append(1), cfg)
+    # warmup calls run but are never timed
+    assert len(calls) == 2 + 5
+    assert len(m.samples) == 5
+    assert m.warmup == 2 and m.repeats == 5
+    assert m.value == pytest.approx(1.0)
+    assert m.remeasure_rounds == 0 and not m.noisy
+
+
+def test_measure_trimmed_median_robust_to_outlier():
+    # one scheduler blip must not move the reported value
+    clock = clock_for([1.0, 1.0, 1.0, 1.0, 100.0])
+    cfg = MeasureConfig(warmup=0, repeats=5, trim=0.2,
+                        max_rel_stddev=1e9, clock=clock)
+    m = measure(lambda: None, cfg)
+    assert m.value == pytest.approx(1.0)
+    # ... but the evidence is retained, not discarded
+    assert 100.0 in m.samples
+    assert m.stddev > 1.0
+    assert m.rel_stddev == pytest.approx(m.stddev / m.value)
+
+
+def test_measure_remeasures_noisy_samples():
+    # round 1 noisy (1 vs 9: rel stddev 0.8), round 2 quiet: the pooled
+    # rel stddev drops to ~0.57 and the measurement settles in one extra
+    # round instead of burning the full re-measure budget
+    clock = clock_for([1.0, 9.0, 5.0, 5.0])
+    cfg = MeasureConfig(warmup=0, repeats=2, trim=0.0,
+                        max_rel_stddev=0.6, max_remeasure=2, clock=clock)
+    m = measure(lambda: None, cfg)
+    assert m.remeasure_rounds == 1
+    assert len(m.samples) == 4
+    assert not m.noisy
+    assert m.rel_stddev <= 0.6
+
+
+def test_measure_flags_persistent_noise():
+    # alternating 1/9 never settles: all rounds taken, noisy recorded
+    clock = clock_for([1.0, 9.0] * 3)
+    cfg = MeasureConfig(warmup=0, repeats=2, trim=0.0,
+                        max_rel_stddev=0.25, max_remeasure=2, clock=clock)
+    m = measure(lambda: None, cfg)
+    assert m.remeasure_rounds == 2
+    assert m.noisy
+    assert m.rel_stddev > 0.25     # the recorded stddev keeps the evidence
+
+
+def test_measure_config_validation():
+    with pytest.raises(ValueError):
+        MeasureConfig(warmup=-1)
+    with pytest.raises(ValueError):
+        MeasureConfig(repeats=0)
+    with pytest.raises(ValueError):
+        MeasureConfig(trim=0.5)
+    with pytest.raises(ValueError):
+        MeasureConfig(max_rel_stddev=0.0)
+    with pytest.raises(ValueError):
+        MeasureConfig(max_remeasure=-1)
+
+
+def test_measure_config_key_excludes_clock():
+    a = MeasureConfig(clock=ScriptClock([0.0]))
+    b = MeasureConfig()
+    assert a.key() == b.key()
+    assert "clock" not in a.key()
+    json.dumps(a.key())           # cache keys must be strict-JSON
+
+
+def test_measurement_json_roundtrip():
+    m = Measurement(samples=[1.0, 2.0], value=1.5, stddev=0.5,
+                    rel_stddev=1 / 3, warmup=1, repeats=2,
+                    remeasure_rounds=0, noisy=False)
+    back = Measurement.from_dict(json.loads(json.dumps(m.to_dict())))
+    assert back == m
+
+
+# ---------------------------------------------------------------------------
+# Calibration + rank agreement
+# ---------------------------------------------------------------------------
+def test_fit_calibration_recovers_weights():
+    rows = [{"compute_s": 1.0, "memory_s": 0.0},
+            {"compute_s": 0.0, "memory_s": 1.0},
+            {"compute_s": 1.0, "memory_s": 1.0},
+            {"compute_s": 2.0, "memory_s": 0.5}]
+    measured = [3.0 * r["compute_s"] + 0.5 * r["memory_s"] for r in rows]
+    cal = fit_calibration(rows, measured, backend="cpu")
+    assert cal.weights["compute_s"] == pytest.approx(3.0)
+    assert cal.weights["memory_s"] == pytest.approx(0.5)
+    assert cal.r2 == pytest.approx(1.0)
+    assert cal.n == 4 and cal.backend == "cpu"
+    assert cal.apply(rows[3]) == pytest.approx(measured[3])
+
+
+def test_fit_calibration_rejects_underdetermined():
+    rows = [{"a": 1.0, "b": 2.0}]
+    with pytest.raises(ValueError, match="need >="):
+        fit_calibration(rows, [1.0])
+    with pytest.raises(ValueError, match="term rows"):
+        fit_calibration(rows, [1.0, 2.0])
+    with pytest.raises(ValueError, match="no cost terms"):
+        fit_calibration([], [])
+
+
+def test_calibration_json_roundtrip():
+    cal = Calibration(terms=("a", "b"), weights={"a": 2.0, "b": -1.0},
+                      r2=0.9, n=5, backend="cpu")
+    back = Calibration.from_dict(json.loads(json.dumps(cal.to_dict())))
+    assert back == cal
+
+
+def test_rank_agreement():
+    assert rank_agreement([1, 2, 3], [10, 20, 30]) == 1.0
+    assert rank_agreement([1, 2, 3], [30, 20, 10]) == -1.0
+    # ties contribute zero
+    assert rank_agreement([1, 1], [1, 2]) == 0.0
+    assert math.isnan(rank_agreement([1.0], [2.0]))
+    with pytest.raises(ValueError, match="length mismatch"):
+        rank_agreement([1, 2], [1])
+
+
+# ---------------------------------------------------------------------------
+# The measured tier of the LM evaluation engine (real execution; slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_lm_smoke_cell_measured_tier():
+    from repro.core.evaluator import LMCellEvaluator
+
+    cfg = MeasureConfig(warmup=1, repeats=3, trim=0.2,
+                        max_rel_stddev=10.0, max_remeasure=0)
+    ev = LMCellEvaluator("stablelm-1.6b", "train_4k", smoke=True,
+                         tier="measured", measure_cfg=cfg)
+    assert ev.engine.tier == "measured"
+    assert "measured" in EVAL_TIERS
+
+    from repro.core.mapping import space
+    from repro.core.agent.agent import MapperAgent
+    fb = ev(MapperAgent(space.default_decisions()).mapper_text())
+    assert fb.score is not None and fb.score > 0
+    assert "Measured Metric" in fb.system
+    details = fb.report.details
+    assert details["tier"] == "measured"
+    m = details["measurement"]
+    assert len(m["samples"]) == 3 and m["warmup"] == 1
+    assert m["rel_stddev"] >= 0.0            # recorded, assertable
+    stats = ev.stats()
+    assert stats["tier"] == "measured"
+    assert stats["measurements"] == 1
+
+    # the measured score is cached under a measured fingerprint: a second
+    # evaluation re-runs nothing
+    fb2 = ev(MapperAgent(space.default_decisions()).mapper_text())
+    assert fb2.score == fb.score
+    assert ev.engine.measure_count == 1

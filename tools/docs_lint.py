@@ -24,6 +24,9 @@ DOCS = ROOT / "docs"
 # public packages whose __all__ must be covered by the docs tree
 PUBLIC_INITS = {
     "repro.asi": ROOT / "src" / "repro" / "asi" / "__init__.py",
+    "repro.core.evalengine":
+        ROOT / "src" / "repro" / "core" / "evalengine" / "__init__.py",
+    "repro.kernels": ROOT / "src" / "repro" / "kernels" / "__init__.py",
     "repro.experiments":
         ROOT / "src" / "repro" / "experiments" / "__init__.py",
     "repro.serve": ROOT / "src" / "repro" / "serve" / "__init__.py",
