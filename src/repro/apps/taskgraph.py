@@ -114,8 +114,15 @@ def _layout_factor(region: Region, plan: MappingPlan, task: str,
     return f
 
 
-def evaluate_plan(app: TaskGraphApp, plan: MappingPlan) -> float:
-    """Modeled seconds per iteration of the app under this mapping."""
+def evaluate_plan(app: TaskGraphApp, plan: MappingPlan, *,
+                  slowdown: float = 1.0) -> float:
+    """Modeled seconds per iteration of the app under this mapping.
+
+    ``slowdown`` > 1 models a straggler device: multi-device tasks are
+    bulk-synchronous, so their whole step is gated by the slowest
+    participant.  INLINE tasks escape the gate -- a single-chip task can
+    be placed on any healthy chip.
+    """
     n = app.n_devices
     hbm_per_dev = 0.0
     for rname, region in app.regions.items():
@@ -164,7 +171,8 @@ def evaluate_plan(app: TaskGraphApp, plan: MappingPlan) -> float:
             mem_t += _access_seconds(region, mem, n, write=True,
                                      inline=inline) * \
                 _layout_factor(region, plan, task.name, proc)
-        total += max(compute, mem_t) + launch
+        gate = slowdown if proc in ("TP", "DP", "SP") else 1.0
+        total += max(compute, mem_t) * gate + launch
     return total * app.iterations
 
 

@@ -34,6 +34,13 @@ def app_machine_factory(proc: str):
     return make_machine(proc, APP_MACHINE)
 
 
+def shrunk_machine_shape(n_devices: int):
+    """Machine shape for a shrunk app mesh: keep two rows when the
+    survivor count allows, so 8 -> (2, 4), 4 -> (2, 2), 3 -> (1, 3)."""
+    n = max(1, int(n_devices))
+    return (2, n // 2) if n % 2 == 0 and n >= 2 else (1, n)
+
+
 # LLM proposal rules for the app space.  Patterns reference the *enhanced*
 # feedback phrasing (Suggest channel), so the Fig. 8 ablation bites: at
 # 'system' level the proposer falls back to exploration.
@@ -87,6 +94,39 @@ class TaskGraphWorkload(AgentWorkload):
 
     def _make_evaluator(self) -> Callable:
         return make_app_evaluator(self.app)
+
+    def n_devices(self) -> int:
+        return self.app.n_devices
+
+    def profile_evaluator(self, profile) -> Callable:
+        """True re-evaluation on the degraded machine (not the generic
+        model-level rescale): a shrink profile re-runs the task-graph
+        model with fewer devices -- larger shards, real OOM on
+        replicated regions, and a *smaller DSL machine* so an
+        IndexTaskMap that walks off the surviving grid is a real
+        Execution Error -- while a straggler profile gates every
+        multi-device task on the slowest participant."""
+        if profile.kind == "healthy":
+            return self.evaluator()
+        import dataclasses
+        app = self.app
+        factory = app_machine_factory
+        if profile.kind == "shrink":
+            left = profile.effective_devices(app.n_devices)
+            app = dataclasses.replace(app, n_devices=left)
+            shape = shrunk_machine_shape(left)
+            factory = lambda proc: make_machine(proc, shape)  # noqa: E731
+        gate = profile.slowdown_factor
+
+        def run(mapper_src: str) -> float:
+            plan = compile_mapper(mapper_src, factory)
+            return evaluate_plan(app, plan, slowdown=gate)
+
+        return CallableEvaluator(
+            run,
+            metric_name=("Execution time under device profile "
+                         f"{profile.key()}"),
+            pack=f"{self.rule_pack}+ft")
 
     def llm(self):
         return HeuristicLLM(rules=app_rules(self.app),

@@ -120,6 +120,36 @@ class AgentWorkload:
             self._evaluator = self._make_evaluator()
         return self._evaluator
 
+    # -- device profiles (fault tolerance; see docs/resilience.md) -----------
+    def n_devices(self) -> int:
+        """Device count of the machine this workload maps onto (the
+        denominator of profile degradation models)."""
+        return 8
+
+    def profiles(self):
+        """The device-profile distribution robust tuning covers by
+        default: healthy, one 2x straggler, a half-mesh shrink."""
+        from ..ft.profiles import default_profiles
+        return default_profiles(self.n_devices())
+
+    def profile_evaluator(self, profile) -> Callable[[str], Feedback]:
+        """An evaluator scoring candidates under ``profile``.
+
+        The default wraps the healthy evaluator with the model-level
+        degradation of :func:`repro.ft.inject.degraded_evaluator`
+        (straggler gate, shrink parallel-width loss, OOM when a shrunk
+        mesh cannot hold the footprint).  Substrates whose cost model
+        can genuinely re-evaluate on a degraded machine override this
+        (e.g. the task-graph apps re-run the machine model with fewer
+        devices).
+        """
+        if profile.kind == "healthy":
+            return self.evaluator()
+        from ..ft.inject import degraded_evaluator
+        return degraded_evaluator(
+            self.evaluator(), profile, n_devices=self.n_devices(),
+            rule_pack=f"{self.rule_pack}+ft")
+
     # -- optimizer plumbing --------------------------------------------------
     def llm(self) -> LLMClient:
         """Proposal backend consuming this workload's feedback phrasing."""

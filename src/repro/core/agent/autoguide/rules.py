@@ -391,6 +391,86 @@ KERNEL_RULES: Tuple[Rule, ...] = (
          ()),
 )
 
+# Fault tolerance: profile-specific failures of robust tuning and the
+# degraded-profile serving path (docs/resilience.md).
+FT_RULES: Tuple[Rule, ...] = (
+    Rule("ft/straggler-dominated", ErrorCategory.OK,
+         _msg("straggler-dominated"),
+         "The robust objective is gated by the straggler profile: one "
+         "slow device stretches every bulk-synchronous step it "
+         "participates in.",
+         "Shorten the straggler's critical path: place small tasks "
+         "INLINE (a single-chip task can run on a healthy chip), use DP "
+         "so only half the devices synchronize, or lower InstanceLimit "
+         "so fewer instances land on the slow device.",
+         lambda: ExecutionReport(
+             category=ErrorCategory.OK,
+             message="Robust Metric (worst): 0.0100s across 3 device "
+                     "profiles (healthy 0.0040s; straggler:2x1 0.0100s; "
+                     "shrink:4 0.0060s). Worst profile: straggler:2x1. "
+                     "straggler-dominated: the straggler profile gates "
+                     "the objective at 2.5x the healthy step.",
+             substrate="app", score=0.01),
+         ()),
+    Rule("ft/shrink-index-out-of-bound", None,
+         lambda r: _msg("index out of bound")(r) and _msg("shrink")(r),
+         "The IndexTaskMap returns indices that are only valid on the "
+         "full machine; on the shrunk mesh they fall off the surviving "
+         "grid (shrink-incompatible sharding).",
+         "Reduce every returned index in the def body with the modulus "
+         "of the *current* machine -- % m.size[0] and % m.size[1] -- so "
+         "the IndexTaskMap stays valid on any geometry.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: machine index out of bound: (6, 0) "
+                   "Robust objective: no score -- the candidate fails "
+                   "under device profile shrink:4 (4 device(s) lost; "
+                   "survivors hold larger shards and replicated regions "
+                   "pay full cost).", "app"),
+         ()),
+    Rule("ft/shrink-oom", ErrorCategory.RESOURCE,
+         lambda r: _msg("shrink")(r) and (
+             (r.memory is not None and r.memory.over_limit)
+             or _msg("out of memory")(r)),
+         "The mapping fits the healthy mesh but not the survivors: with "
+         "fewer devices each chip holds a larger shard, and replicated "
+         "regions pay their full footprint on every surviving chip.",
+         "Shard instead of replicating: keep big regions in FBMEM "
+         "(sharded) rather than ZCMEM (replicated), move activations to "
+         "REMAT, or raise InstanceLimit to split the batch into "
+         "microbatches that fit the smaller mesh.",
+         _ex_error(ErrorCategory.RESOURCE,
+                   "Execution Error: out of memory under device profile "
+                   "shrink:4 -- peak HBM 40.0 GiB exceeds HBM capacity "
+                   "16 GiB per surviving chip.", "app"),
+         ()),
+    Rule("ft/transient", ErrorCategory.EXECUTION,
+         _msg("fault injection", "transient evaluator failure"),
+         "An injected/ephemeral failure, not a property of the mapper: "
+         "the candidate was never actually evaluated.",
+         "Keep the current Task and Region statements unchanged and "
+         "re-evaluate -- a transient failure carries no signal about "
+         "the mapping.",
+         _ex_error(ErrorCategory.EXECUTION,
+                   "Execution Error: transient evaluator failure injected "
+                   "at call 3 (fault injection); the mapper itself was "
+                   "not evaluated.", "app"),
+         ()),
+    Rule("ft/robust-metric", ErrorCategory.OK,
+         lambda r: _scored(r) and _msg("robust metric")(r),
+         "The score aggregates every device profile: an improvement "
+         "only counts if it does not regress the worst profile.",
+         "Prefer moves that stay valid everywhere: FBMEM (sharded) over "
+         "ZCMEM (replicated) placements, and IndexTaskMap defs reduced "
+         "with % m.size[0] so they survive a mesh shrink.",
+         lambda: ExecutionReport(
+             category=ErrorCategory.OK,
+             message="Robust Metric (worst): 0.0100s across 2 device "
+                     "profiles (healthy 0.0040s; shrink:4 0.0100s). "
+                     "Worst profile: shrink:4.",
+             substrate="app", score=0.01),
+         ()),
+)
+
 RULE_PACKS: Dict[str, Tuple[Rule, ...]] = {
     "base": BASE_RULES,
     "lm": BASE_RULES + LM_RULES,
@@ -398,17 +478,39 @@ RULE_PACKS: Dict[str, Tuple[Rule, ...]] = {
     "app-jax": BASE_RULES + APP_RULES,
     "matmul": BASE_RULES + MM_RULES,
     "kernel": BASE_RULES + KERNEL_RULES,
+    "ft": BASE_RULES + FT_RULES,
     # Legacy single-list order (the retired ENHANCE_RULES precedence):
     # errors first, then bottleneck terms, then the generic metric rules.
-    "all": BASE_RULES + LM_RULES + APP_RULES + MM_RULES + KERNEL_RULES,
+    "all": (BASE_RULES + LM_RULES + APP_RULES + MM_RULES + KERNEL_RULES
+            + FT_RULES),
+}
+
+#: Add-on packs composable onto any base pack via "+": "app+ft" is the
+#: app pack followed by the fault-tolerance rules.
+EXTRA_PACKS: Dict[str, Tuple[Rule, ...]] = {
+    "ft": FT_RULES,
 }
 
 
 def get_pack(name: str) -> Tuple[Rule, ...]:
     """Resolve a pack name ('lm' | 'app' | 'app-jax' | 'matmul' |
-    'kernel' | 'base' | 'all').  Unknown names raise KeyError: a typo must not silently
+    'kernel' | 'ft' | 'base' | 'all'), or a '+'-composed name like
+    'app+ft' (the base pack followed by each add-on from EXTRA_PACKS).
+    Unknown names raise KeyError: a typo must not silently
     degrade diagnostics -- custom substrates register their pack in
     RULE_PACKS (docs/feedback.md)."""
+    if "+" in name:
+        head, *extras = name.split("+")
+        rules = list(get_pack(head))
+        for extra in extras:
+            try:
+                addon = EXTRA_PACKS[extra]
+            except KeyError:
+                raise KeyError(
+                    f"unknown add-on pack {extra!r} in {name!r}; "
+                    f"known add-ons: {sorted(EXTRA_PACKS)}") from None
+            rules.extend(r for r in addon if r not in rules)
+        return tuple(rules)
     try:
         return RULE_PACKS[name]
     except KeyError:

@@ -1,0 +1,58 @@
+"""repro.ft -- fault tolerance: profiles, injection, robust tuning, elastic restore.
+
+The resilience layer (docs/resilience.md).  Four surfaces:
+
+* **Profiles** (:mod:`~repro.ft.profiles`) -- :class:`DeviceProfile`
+  models the degraded machines a mapper must survive (``healthy`` /
+  ``straggler`` / ``shrink``), with stable string keys that act as the
+  third axis of the :class:`~repro.service.MapperStore`;
+  :func:`robust_score` is the worst-case / CVaR tuning objective over a
+  profile distribution.
+* **Injection** (:mod:`~repro.ft.inject`) -- :class:`FaultSchedule` /
+  :class:`FaultInjector` replay a seeded timeline of straggler onset,
+  device loss, and transient eval failures against evaluators and the
+  serving executor, on a :class:`VirtualClock` (no sleeps, fully
+  deterministic).
+* **Robust tuning** (:mod:`~repro.ft.robust`) -- :class:`RobustWorkload`
+  evaluates every candidate across the profile distribution and scores
+  the aggregate; :func:`robust_variant` wraps any registry workload.
+* **Runtime** -- :class:`StepWatchdog` (EMA step-time straggler
+  detection, injectable clock) and :func:`resume_on_mesh` /
+  :func:`plan_for_mesh` (recompile the mapper for a new mesh and
+  reshard the checkpoint onto it).
+"""
+
+from .elastic import plan_for_mesh, resume_on_mesh
+from .inject import (FAULT_KINDS, FaultEvent, FaultInjector, FaultSchedule,
+                     VirtualClock, degraded_evaluator, degraded_report)
+from .robust import RobustWorkload, robust_variant
+from .straggler import StepWatchdog
+# last: the straggler() profile constructor must win over the
+# .straggler submodule attribute the import above just bound
+from .profiles import (DeviceProfile, PROFILE_KINDS, ROBUST_MODES,
+                       default_profiles, healthy, parse_profile,
+                       robust_score, shrink, straggler)
+
+__all__ = [
+    "DeviceProfile",
+    "PROFILE_KINDS",
+    "ROBUST_MODES",
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "FaultSchedule",
+    "RobustWorkload",
+    "StepWatchdog",
+    "VirtualClock",
+    "default_profiles",
+    "degraded_evaluator",
+    "degraded_report",
+    "healthy",
+    "parse_profile",
+    "plan_for_mesh",
+    "resume_on_mesh",
+    "robust_score",
+    "robust_variant",
+    "shrink",
+    "straggler",
+]

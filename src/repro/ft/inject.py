@@ -1,0 +1,320 @@
+"""Deterministic fault injection around evaluators and executors.
+
+Resilience claims need reproducible failures.  A :class:`FaultSchedule`
+is a seeded (or hand-scripted) timeline of fault events -- straggler
+onset/recovery, device loss, transient evaluator failures -- and a
+:class:`FaultInjector` replays it against the two places the system
+touches real machines:
+
+* ``wrap_evaluator`` -- a tuning-side evaluator that raises the
+  scheduled transient failures as classified Execution Errors (the
+  SREGym pattern: an injected fault becomes a structured trace the
+  agent can act on, not a dead job);
+* ``wrap_executor`` -- a serving-side :class:`ModelExecutor` proxy that
+  advances a :class:`VirtualClock` by the profile-degraded step cost on
+  every decode, so the :class:`~repro.ft.straggler.StepWatchdog` sees a
+  straggler exactly when the schedule says so -- no sleeps, no flaky
+  timing.  Executors whose tag is in ``immune_tags`` (e.g. a mapper
+  tuned for the degraded profile) decode at nominal cost, which is what
+  makes a hot-swap measurably restore tokens/s.
+
+``degraded_evaluator`` is the model-level fallback for workloads with
+no native profile support: it rescales a healthy evaluator's report
+under a :class:`~repro.ft.profiles.DeviceProfile` (straggler gate,
+shrink parallel-width loss, and OOM when the shrunk mesh can no longer
+hold the replicated footprint).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Set, Tuple
+
+from .profiles import DeviceProfile, healthy, shrink, straggler
+
+FAULT_KINDS = ("straggler_on", "straggler_off", "shrink", "eval_fail")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: at decode-step / eval-call index ``at``."""
+
+    at: int
+    kind: str
+    profile: Optional[DeviceProfile] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"known: {FAULT_KINDS}")
+        if self.at < 0:
+            raise ValueError("fault events cannot be scheduled before 0")
+        if self.kind == "straggler_on" and (
+                self.profile is None or self.profile.kind != "straggler"):
+            raise ValueError("straggler_on needs a straggler profile")
+        if self.kind == "shrink" and (
+                self.profile is None or self.profile.kind != "shrink"):
+            raise ValueError("shrink needs a shrink profile")
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """A deterministic timeline of :class:`FaultEvent`s."""
+
+    events: Tuple[FaultEvent, ...] = ()
+    seed: Optional[int] = None
+
+    @classmethod
+    def scripted(cls, *events: FaultEvent) -> "FaultSchedule":
+        return cls(events=tuple(sorted(events, key=lambda e: e.at)))
+
+    @classmethod
+    def seeded(cls, seed: int, *, horizon: int = 64,
+               straggler_factor: float = 2.0, n_stragglers: int = 1,
+               recover: bool = False, shrink_lost: int = 0,
+               eval_fail_rate: float = 0.0) -> "FaultSchedule":
+        """Generate a schedule deterministically from ``seed``: one
+        straggler onset in the first half of ``horizon`` (optionally
+        recovering later), an optional device-loss event in the second
+        half, and ``eval_fail_rate`` of eval calls failing transiently."""
+        rng = random.Random(seed)
+        events: List[FaultEvent] = []
+        if n_stragglers > 0 and straggler_factor > 1.0:
+            onset = rng.randrange(max(1, horizon // 8),
+                                  max(2, horizon // 2))
+            events.append(FaultEvent(
+                onset, "straggler_on",
+                straggler(straggler_factor, n_stragglers)))
+            if recover:
+                events.append(FaultEvent(
+                    rng.randrange(onset + 1, horizon), "straggler_off"))
+        if shrink_lost > 0:
+            events.append(FaultEvent(
+                rng.randrange(max(1, horizon // 2), horizon), "shrink",
+                shrink(shrink_lost)))
+        if eval_fail_rate > 0.0:
+            for i in range(horizon):
+                if rng.random() < eval_fail_rate:
+                    events.append(FaultEvent(i, "eval_fail"))
+        return cls(events=tuple(sorted(events, key=lambda e: e.at)),
+                   seed=seed)
+
+    def active_profile(self, step: int) -> DeviceProfile:
+        """Fold events up to ``step``: device loss is sticky and takes
+        precedence; a straggler can recover via ``straggler_off``."""
+        prof = healthy()
+        shrunk: Optional[DeviceProfile] = None
+        for ev in self.events:
+            if ev.at > step:
+                break
+            if ev.kind == "shrink":
+                shrunk = ev.profile
+            elif ev.kind == "straggler_on":
+                prof = ev.profile
+            elif ev.kind == "straggler_off":
+                prof = healthy()
+        return shrunk if shrunk is not None else prof
+
+    def fail_at(self, call: int) -> bool:
+        return any(e.kind == "eval_fail" and e.at == call
+                   for e in self.events)
+
+    def shrink_step(self) -> Optional[int]:
+        """Step index of the (first) device-loss event, if any."""
+        for ev in self.events:
+            if ev.kind == "shrink":
+                return ev.at
+        return None
+
+
+class VirtualClock:
+    """A clock that only moves when told to -- the injection analogue of
+    the ScriptClock test pattern (tests/test_measure.py)."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("a clock cannot run backwards")
+        self.now += float(dt)
+
+    def __repr__(self) -> str:
+        return f"<VirtualClock t={self.now:.6f}>"
+
+
+# ---------------------------------------------------------------------------
+# Model-level profile degradation (generic evaluator fallback)
+# ---------------------------------------------------------------------------
+def degraded_report(report, profile: DeviceProfile, n_devices: int):
+    """Re-derive an :class:`ExecutionReport` under ``profile``.
+
+    Scored reports get the model-level step-time degradation; under a
+    shrink profile a sharded memory footprint is rescaled onto the
+    surviving devices and turned into a RESOURCE failure when it no
+    longer fits -- OOM-on-fewer-devices is a real failure mode, not a
+    slowdown.
+    """
+    from ..core.agent.autoguide.report import (ErrorCategory,
+                                               ExecutionReport,
+                                               MemoryFootprint)
+    if profile.kind == "healthy" or report.score is None:
+        return report
+    memory = report.memory
+    if profile.kind == "shrink" and memory is not None:
+        scale = n_devices / profile.effective_devices(n_devices)
+        peak = memory.peak_bytes_per_device * scale
+        memory = MemoryFootprint(
+            peak_bytes_per_device=peak,
+            limit_bytes_per_device=memory.limit_bytes_per_device)
+        if memory.over_limit:
+            return ExecutionReport(
+                category=ErrorCategory.RESOURCE,
+                message=(f"Execution Error: out of memory under device "
+                         f"profile {profile.key()} -- peak HBM "
+                         f"{peak / 2**30:.1f} GiB exceeds HBM capacity "
+                         f"{memory.limit_bytes_per_device / 2**30:.0f} GiB "
+                         "per surviving chip."),
+                substrate=report.substrate, score=None, memory=memory,
+                details={**report.details, "profile": profile.key()})
+    scaled = profile.degrade_seconds(report.score, n_devices)
+    return ExecutionReport(
+        category=report.category,
+        message=(f"{report.message} Under device profile {profile.key()} "
+                 f"({profile.describe()}): degraded time {scaled:.4f}s."),
+        substrate=report.substrate, score=scaled, cost=report.cost,
+        memory=memory,
+        details={**report.details, "profile": profile.key()})
+
+
+def degraded_evaluator(evaluator: Callable, profile: DeviceProfile, *,
+                       n_devices: int = 8,
+                       rule_pack: str = "base") -> Callable:
+    """Wrap a Feedback-producing evaluator so its scores and reports are
+    re-derived under ``profile`` (see :func:`degraded_report`)."""
+    from ..core.agent.autoguide import diagnose
+
+    def run(mapper_src: str):
+        fb = evaluator(mapper_src)
+        report = getattr(fb, "report", None)
+        if report is None:
+            return fb
+        degraded = degraded_report(report, profile, n_devices)
+        if degraded is report:
+            return fb
+        return diagnose(degraded, pack=rule_pack)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# The injector
+# ---------------------------------------------------------------------------
+class _InjectedEvaluator:
+    """Evaluator proxy raising scheduled transient failures."""
+
+    def __init__(self, injector: "FaultInjector", evaluator: Callable,
+                 substrate: str, rule_pack: str):
+        self._injector = injector
+        self._evaluator = evaluator
+        self._substrate = substrate
+        self._rule_pack = rule_pack
+
+    def __call__(self, mapper_src: str):
+        inj = self._injector
+        call = inj.eval_calls
+        inj.eval_calls += 1
+        if inj.schedule.fail_at(call):
+            from ..core.agent.autoguide import diagnose, report_from_error
+            from ..core.dsl.errors import ExecutionError
+            inj.log.append({"kind": "eval_fail", "call": call})
+            xr = report_from_error(
+                ExecutionError(
+                    f"transient evaluator failure injected at call {call} "
+                    "(fault injection); the mapper itself was not "
+                    "evaluated"),
+                self._substrate)
+            return diagnose(xr, pack=self._rule_pack)
+        return self._evaluator(mapper_src)
+
+    def __getattr__(self, name):
+        return getattr(self._evaluator, name)
+
+
+class _InjectedExecutor:
+    """ModelExecutor proxy: every decode advances the injector's virtual
+    clock by the profile-degraded step cost."""
+
+    def __init__(self, inner, injector: "FaultInjector",
+                 base_step_s: float):
+        self._inner = inner
+        self._injector = injector
+        self._base_step_s = base_step_s
+
+    def with_mapper(self, mapper_src: str, tag: str = "", **kwargs):
+        return _InjectedExecutor(
+            self._inner.with_mapper(mapper_src, tag=tag, **kwargs),
+            self._injector, self._base_step_s)
+
+    def decode(self, *args, **kwargs):
+        out = self._inner.decode(*args, **kwargs)
+        self._injector.on_decode(self._inner.tag, self._base_step_s)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def __repr__(self) -> str:
+        return f"<Injected {self._inner!r}>"
+
+
+class FaultInjector:
+    """Replays a :class:`FaultSchedule` against evaluators/executors.
+
+    One injector owns one :class:`VirtualClock` and two monotone
+    counters: ``eval_calls`` (tuning side) and ``steps`` (serving side,
+    one per decode call).  ``immune_tags`` lists executor tags that are
+    not slowed by the active profile -- the degraded-profile mapper the
+    scheduler swaps to.
+    """
+
+    def __init__(self, schedule: FaultSchedule, *, n_devices: int = 8):
+        self.schedule = schedule
+        self.n_devices = int(n_devices)
+        self.clock = VirtualClock()
+        self.eval_calls = 0
+        self.steps = 0
+        self.immune_tags: Set[str] = set()
+        self.log: List[dict] = []
+
+    # -- wrapping -------------------------------------------------------------
+    def wrap_evaluator(self, evaluator: Callable, *, substrate: str = "",
+                      rule_pack: str = "base") -> Callable:
+        return _InjectedEvaluator(self, evaluator, substrate, rule_pack)
+
+    def wrap_executor(self, executor, *, base_step_s: float = 1.0):
+        return _InjectedExecutor(executor, self, base_step_s)
+
+    # -- serving-side bookkeeping --------------------------------------------
+    def active_profile(self) -> DeviceProfile:
+        return self.schedule.active_profile(self.steps)
+
+    def on_decode(self, tag: str, base_step_s: float) -> None:
+        prof = self.schedule.active_profile(self.steps)
+        cost = base_step_s
+        if prof.kind != "healthy" and tag not in self.immune_tags:
+            cost = prof.degrade_seconds(base_step_s, self.n_devices)
+            self.log.append({"kind": "degraded_step", "step": self.steps,
+                             "tag": tag, "profile": prof.key(),
+                             "cost_s": cost})
+        self.steps += 1
+        self.clock.advance(cost)
+
+    def __repr__(self) -> str:
+        return (f"<FaultInjector steps={self.steps} "
+                f"eval_calls={self.eval_calls} "
+                f"profile={self.active_profile().key()}>")

@@ -1,0 +1,180 @@
+"""Device profiles: the degraded machines a mapper must survive.
+
+The paper tunes mappers for one fixed, healthy machine; Mapple's point
+(PAPERS.md) is that the mapping space is really *per machine state* --
+a mesh that lost devices or grew a straggler is a different machine
+with a different best mapping.  A :class:`DeviceProfile` names one such
+machine state:
+
+* ``healthy()``          -- the nominal machine,
+* ``straggler(f, n)``    -- ``n`` devices run ``f``x slower; a
+  bulk-synchronous step is gated by the slowest participant,
+* ``shrink(k)``          -- ``k`` devices are gone; surviving devices
+  hold bigger shards and replicated regions cost the same per device
+  while sharded compute loses parallel width.
+
+Profiles serialize to stable string keys (``"healthy"``,
+``"straggler:2x1"``, ``"shrink:2"``) so they can act as the third axis
+of the :class:`~repro.service.store.MapperStore` key and ride inside
+artifact provenance.  :func:`robust_score` is the tuning objective over
+a profile distribution: worst-case by default, CVaR when the tail --
+not the maximum -- should drive the search.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+PROFILE_KINDS = ("healthy", "straggler", "shrink")
+
+#: Aggregation modes for :func:`robust_score`.
+ROBUST_MODES = ("worst", "cvar")
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """One machine state: healthy, straggler-degraded, or shrunk."""
+
+    kind: str = "healthy"
+    #: Per-straggler slowdown factors (straggler kind only), each > 1.
+    slowdown: Tuple[float, ...] = ()
+    #: Devices removed from the mesh (shrink kind only).
+    devices_lost: int = 0
+
+    def __post_init__(self):
+        if self.kind not in PROFILE_KINDS:
+            raise ValueError(f"unknown profile kind {self.kind!r}; "
+                             f"known: {PROFILE_KINDS}")
+        if self.kind == "straggler":
+            if not self.slowdown or any(f <= 1.0 for f in self.slowdown):
+                raise ValueError(
+                    "a straggler profile needs per-device slowdown "
+                    f"factors > 1, got {self.slowdown!r}")
+        elif self.slowdown:
+            raise ValueError(f"{self.kind!r} profile takes no slowdown")
+        if self.kind == "shrink":
+            if self.devices_lost < 1:
+                raise ValueError("a shrink profile must lose >= 1 device")
+        elif self.devices_lost:
+            raise ValueError(f"{self.kind!r} profile loses no devices")
+
+    # -- identity ------------------------------------------------------------
+    def key(self) -> str:
+        """Stable store-axis key: ``healthy | straggler:<f>x<n> |
+        shrink:<k>``."""
+        if self.kind == "straggler":
+            return f"straggler:{max(self.slowdown):g}x{len(self.slowdown)}"
+        if self.kind == "shrink":
+            return f"shrink:{self.devices_lost}"
+        return "healthy"
+
+    # -- degradation model ---------------------------------------------------
+    @property
+    def slowdown_factor(self) -> float:
+        """Step-time multiplier of the slowest participant (1.0 when
+        healthy/shrunk: shrink changes width, not speed)."""
+        return max(self.slowdown) if self.slowdown else 1.0
+
+    def effective_devices(self, n_devices: int) -> int:
+        """Devices still participating under this profile."""
+        if self.kind != "shrink":
+            return int(n_devices)
+        left = int(n_devices) - self.devices_lost
+        if left < 1:
+            raise ValueError(
+                f"profile {self.key()} removes all {n_devices} devices")
+        return left
+
+    def degrade_seconds(self, seconds: float, n_devices: int) -> float:
+        """Model-level step-time degradation for evaluators with no
+        native profile support: a bulk-synchronous step is gated by the
+        slowest device (straggler) or by the lost parallel width
+        (shrink: the perfectly-parallel bound ``n / (n - k)``)."""
+        if self.kind == "straggler":
+            return seconds * self.slowdown_factor
+        if self.kind == "shrink":
+            return seconds * n_devices / self.effective_devices(n_devices)
+        return seconds
+
+    def describe(self) -> str:
+        if self.kind == "straggler":
+            return (f"{len(self.slowdown)} device(s) up to "
+                    f"{self.slowdown_factor:g}x slow; each step is gated "
+                    "by the slowest participant")
+        if self.kind == "shrink":
+            return (f"{self.devices_lost} device(s) lost; survivors hold "
+                    "larger shards and replicated regions pay full cost")
+        return "nominal machine, no degradation"
+
+    def __repr__(self) -> str:
+        return f"<DeviceProfile {self.key()}>"
+
+
+# -- constructors -------------------------------------------------------------
+def healthy() -> DeviceProfile:
+    return DeviceProfile()
+
+
+def straggler(factor: float = 2.0, n: int = 1) -> DeviceProfile:
+    """``n`` devices running ``factor``x slower than nominal."""
+    return DeviceProfile(kind="straggler",
+                         slowdown=tuple([float(factor)] * int(n)))
+
+
+def shrink(devices_lost: int) -> DeviceProfile:
+    """A mesh that lost ``devices_lost`` devices."""
+    return DeviceProfile(kind="shrink", devices_lost=int(devices_lost))
+
+
+def parse_profile(key: str) -> DeviceProfile:
+    """Inverse of :meth:`DeviceProfile.key`."""
+    key = key.strip()
+    if key == "healthy":
+        return healthy()
+    if key.startswith("straggler:"):
+        spec = key.split(":", 1)[1]
+        factor, _, n = spec.partition("x")
+        return straggler(float(factor), int(n or 1))
+    if key.startswith("shrink:"):
+        return shrink(int(key.split(":", 1)[1]))
+    raise ValueError(f"unparseable device-profile key {key!r}")
+
+
+def default_profiles(n_devices: int = 8) -> Tuple[DeviceProfile, ...]:
+    """The default tuning distribution: nominal, one 2x straggler, and
+    a half-mesh shrink (the classic lose-a-node event)."""
+    profs = [healthy(), straggler(2.0, 1)]
+    if n_devices >= 2:
+        profs.append(shrink(n_devices // 2))
+    return tuple(profs)
+
+
+# -- the robust objective -----------------------------------------------------
+def robust_score(scores: Sequence[Optional[float]], mode: str = "worst",
+                 alpha: float = 0.5) -> Optional[float]:
+    """Aggregate per-profile scores (seconds, lower better) into one
+    robust objective.
+
+    ``None`` anywhere -- the candidate failed on some profile -- makes
+    the aggregate ``None``: a mapper that OOMs on the shrunk mesh is
+    not a valid robust candidate at any speed.  ``worst`` is the max;
+    ``cvar`` averages the worst ``ceil(alpha * len)`` scores, so a
+    single mild outlier does not fully dominate the objective.
+    """
+    if mode not in ROBUST_MODES:
+        raise ValueError(f"unknown robust mode {mode!r}; "
+                         f"known: {ROBUST_MODES}")
+    if not scores:
+        raise ValueError("robust_score needs at least one profile score")
+    if any(s is None or not math.isfinite(s) for s in scores):
+        return None
+    vals = sorted(float(s) for s in scores)
+    if mode == "worst":
+        return vals[-1]
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"cvar alpha must be in (0, 1], got {alpha}")
+    k = max(1, math.ceil(alpha * len(vals)))
+    tail = vals[-k:]
+    return sum(tail) / len(tail)

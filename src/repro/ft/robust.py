@@ -1,0 +1,199 @@
+"""Robust tuning: optimize one mapper across a device-profile distribution.
+
+A :class:`RobustWorkload` wraps any base workload: the decision space,
+rendering, and proposal LLM are the base's, but each candidate is
+evaluated under *every* profile in the distribution and scored with the
+:func:`~repro.ft.profiles.robust_score` aggregate (worst-case or CVaR).
+A candidate that fails on any profile -- OOM on the shrunk mesh, an
+IndexTaskMap that walks off the smaller machine -- gets no score at
+all, so the search is pushed toward mappings that are *valid
+everywhere* first and fast second.
+
+Feedback is the aggregate report, always led by the *binding* profile's
+own diagnostic (the worst profile's metric sentence on success, the
+failing profile's error on failure) followed by the per-profile
+breakdown -- classified through the base pack composed with
+``FT_RULES`` (``"<base>+ft"``), so the agent keeps the base pack's
+bottleneck explanations and is additionally told *why* a profile binds
+or kills the candidate (straggler-dominated step, shrink-incompatible
+sharding, OOM on fewer devices) in the same suggest vocabulary as
+every other rule.
+
+``RobustWorkload.name`` equals the base name on purpose: the tuned
+winner publishes into the :class:`~repro.service.MapperStore` under the
+*same* ``(workload, mesh)`` as the healthy artifact, distinguished only
+by the profile axis (``profile_key()``), which is exactly what
+``resolve_mapper(..., profile=...)`` looks up at serving time.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from ..asi.workload import AgentWorkload
+from .profiles import (DeviceProfile, ROBUST_MODES, robust_score)
+
+
+def robust_report(per_profile, mode: str, alpha: float, substrate: str):
+    """Aggregate (profile, Feedback) pairs into one ExecutionReport."""
+    from ..core.agent.autoguide.report import ErrorCategory, ExecutionReport
+
+    breakdown = {p.key(): (fb.score if fb.score is None else float(fb.score))
+                 for p, fb in per_profile}
+    agg = robust_score([fb.score for _, fb in per_profile],
+                       mode=mode, alpha=alpha)
+    if agg is None:
+        prof, fb = next((p, fb) for p, fb in per_profile
+                        if fb.score is None)
+        base_msg = fb.report.message if fb.report is not None else fb.system
+        return ExecutionReport(
+            category=(fb.report.category if fb.report is not None
+                      else ErrorCategory.EXECUTION),
+            message=(f"{base_msg} Robust objective: no score -- the "
+                     f"candidate fails under device profile {prof.key()} "
+                     f"({prof.describe()})."),
+            substrate=substrate, score=None,
+            memory=fb.report.memory if fb.report is not None else None,
+            details={"profiles": breakdown, "failed_profile": prof.key(),
+                     "robust": {"mode": mode, "alpha": alpha}})
+
+    worst_p, worst_fb = max(per_profile, key=lambda pf: pf[1].score)
+    parts = "; ".join(f"{p.key()} {fb.score:.4f}s" for p, fb in per_profile)
+    # lead with the binding profile's own metric sentence: the base
+    # pack's bottleneck rules (and the proposer heuristics keyed on
+    # their suggest phrasing) must keep firing under the robust wrapper,
+    # or the search degrades to blind exploration
+    worst_msg = (worst_fb.report.message if worst_fb.report is not None
+                 else worst_fb.system)
+    msg = (f"{worst_msg} Robust Metric ({mode}): {agg:.4f}s across "
+           f"{len(per_profile)} device profiles ({parts}). "
+           f"Worst profile: {worst_p.key()}.")
+    healthy_s = next((fb.score for p, fb in per_profile
+                      if p.kind == "healthy"), None)
+    if (worst_p.kind == "straggler" and healthy_s
+            and worst_fb.score > 1.2 * healthy_s):
+        msg += (f" straggler-dominated: the straggler profile gates the "
+                f"objective at {worst_fb.score / healthy_s:.1f}x the "
+                "healthy step.")
+    return ExecutionReport(
+        category=ErrorCategory.OK, message=msg, substrate=substrate,
+        score=agg,
+        details={"profiles": breakdown, "worst_profile": worst_p.key(),
+                 "robust": {"mode": mode, "alpha": alpha}})
+
+
+class RobustWorkload(AgentWorkload):
+    """A base workload scored by its worst (or CVaR) profile."""
+
+    def __init__(self, base, profiles: Optional[
+            Sequence[DeviceProfile]] = None, *, mode: str = "worst",
+            alpha: float = 0.5):
+        super().__init__()
+        self.base = base
+        profs = tuple(profiles if profiles is not None else base.profiles())
+        if not profs:
+            raise ValueError("RobustWorkload needs at least one profile")
+        keys = [p.key() for p in profs]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"duplicate profiles in distribution: {keys}")
+        if mode not in ROBUST_MODES:
+            raise ValueError(f"unknown robust mode {mode!r}; "
+                             f"known: {ROBUST_MODES}")
+        self._profiles = profs
+        self.mode = mode
+        self.alpha = float(alpha)
+        # same name as the base: robust artifacts share the (workload,
+        # mesh) store key and differ only on the profile axis
+        self.name = base.name
+        self.substrate = base.substrate
+        self.parallel_safe = base.parallel_safe
+        self.expert_mapper = getattr(base, "expert_mapper", None)
+        self.rule_pack = f"{base.rule_pack}+ft"
+        self.description = (f"robust({mode}) over {keys}: "
+                            f"{base.description}")
+
+    # -- profile surface ------------------------------------------------------
+    def profiles(self) -> Tuple[DeviceProfile, ...]:
+        return self._profiles
+
+    def profile_key(self) -> str:
+        """Store-axis key the tuned winner publishes under: the most
+        degraded profile in the distribution (the machine state this
+        tuning run exists to cover)."""
+        n = self.base.n_devices()
+        degraded = [p for p in self._profiles if p.kind != "healthy"]
+        if not degraded:
+            return "healthy"
+        return max(degraded, key=lambda p: p.degrade_seconds(1.0, n)).key()
+
+    # -- decision space: all the base's --------------------------------------
+    def make_agent(self, decisions=None):
+        return self.base.make_agent(decisions)
+
+    def bundles(self):
+        return self.base.bundles()
+
+    def default_decisions(self):
+        return self.base.default_decisions()
+
+    def random_decisions(self, seed: int):
+        return self.base.random_decisions(seed)
+
+    def neighbors(self, decisions, rng, k: int = 1):
+        return self.base.neighbors(decisions, rng, k)
+
+    def render_mapper(self, decisions):
+        return self.base.render_mapper(decisions)
+
+    def validate_mapper(self, src: str) -> None:
+        self.base.validate_mapper(src)
+
+    def llm(self):
+        return self.base.llm()
+
+    def n_devices(self) -> int:
+        return self.base.n_devices()
+
+    # -- evaluation -----------------------------------------------------------
+    def _make_evaluator(self):
+        from ..core.agent.autoguide import diagnose
+        pairs = [(p, self.base.profile_evaluator(p))
+                 for p in self._profiles]
+
+        def run(mapper_src: str):
+            per = [(p, ev(mapper_src)) for p, ev in pairs]
+            report = robust_report(per, self.mode, self.alpha,
+                                   self.substrate)
+            return diagnose(report, pack=self.rule_pack)
+
+        return run
+
+    def artifact_provenance(self):
+        base_fn = getattr(self.base, "artifact_provenance", None)
+        prov = dict(base_fn()) if callable(base_fn) else {}
+        prov["robust"] = {"mode": self.mode, "alpha": self.alpha,
+                          "profiles": [p.key() for p in self._profiles]}
+        return prov
+
+    def __getattr__(self, name):
+        # base-specific surfaces (smoke, set_tier, mesh_geometry, ...)
+        # pass through so store keys and tier plumbing stay correct
+        if name.startswith("_") or name == "base":
+            raise AttributeError(name)
+        return getattr(self.base, name)
+
+    def __repr__(self):
+        keys = [p.key() for p in self._profiles]
+        return (f"<RobustWorkload {self.name!r} mode={self.mode} "
+                f"profiles={keys}>")
+
+
+def robust_variant(workload, profiles: Optional[
+        Sequence[DeviceProfile]] = None, *, mode: str = "worst",
+        alpha: float = 0.5) -> RobustWorkload:
+    """Build a :class:`RobustWorkload` from a workload instance or a
+    registry name."""
+    if isinstance(workload, str):
+        from ..asi import registry
+        workload = registry.populate().get(workload)
+    return RobustWorkload(workload, profiles, mode=mode, alpha=alpha)

@@ -6,10 +6,18 @@ The watchdog keeps an EMA of step time; a step slower than
 data pipeline is deterministic per (step, host) so the launcher can
 reissue a slow host's work elsewhere without data-path coordination;
 checkpoint + elastic restore covers hard failures.
+
+Two ways to feed it: as a context manager around a step (``with wd:``,
+timed on the injectable ``clock``), or by handing it measured durations
+directly (:meth:`StepWatchdog.record` -- how the serving scheduler
+wires it in).  The EMA is seeded with the *median* of the warmup
+samples, so one slow compile step during warmup neither masks a real
+straggler nor flags the first healthy post-warmup step.
 """
 
 from __future__ import annotations
 
+import statistics
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -21,26 +29,39 @@ class StepWatchdog:
     ema_decay: float = 0.9
     warmup_steps: int = 3           # compile steps excluded
     on_straggler: Optional[Callable[[int, float, float], None]] = None
+    #: Injectable time source (tests/injectors pass a fake clock).
+    clock: Callable[[], float] = time.perf_counter
     ema: float = 0.0
     steps_seen: int = 0
     straggler_steps: List[int] = field(default_factory=list)
+    _warmup: List[float] = field(default_factory=list)
     _t0: float = 0.0
 
     def __enter__(self):
-        self._t0 = time.perf_counter()
+        self._t0 = self.clock()
         return self
 
     def __exit__(self, *exc):
         if exc[0] is not None:
             return False
-        dt = time.perf_counter() - self._t0
+        self.record(self.clock() - self._t0)
+        return False
+
+    def record(self, dt: float) -> bool:
+        """Feed one measured step duration; True when it flags as a
+        straggler step."""
         self.steps_seen += 1
         if self.steps_seen <= self.warmup_steps:
-            self.ema = dt
+            self._warmup.append(dt)
+            # seed with the warmup *median*: the first post-warmup step
+            # is judged against typical warmup time, not whichever
+            # sample (fast or slow) happened to come last
+            self.ema = statistics.median(self._warmup)
             return False
-        if self.ema > 0 and dt > self.threshold * self.ema:
+        flagged = self.ema > 0 and dt > self.threshold * self.ema
+        if flagged:
             self.straggler_steps.append(self.steps_seen)
             if self.on_straggler:
                 self.on_straggler(self.steps_seen, dt, self.ema)
         self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * dt
-        return False
+        return flagged

@@ -11,13 +11,21 @@ live (workload, mesh) key, a :class:`StoreWatcher` reports it and the
 scheduler swaps in a freshly compiled executor at a step boundary
 while in-flight sequences drain on the old one.  :func:`run_load` /
 :func:`compare_batching` (:class:`LoadGenConfig`) put the whole stack
-under synthetic traffic.  See docs/serving.md.
+under synthetic traffic.
+
+Resilience (see docs/resilience.md): a
+:class:`DegradedModeController` (:class:`ResilienceConfig`) feeds the
+scheduler's per-tick durations into a step watchdog and, on sustained
+straggling or an explicit ``notify_shrink``, swaps in the mapper tuned
+for the degraded device profile through the same hot-reload path.
+See docs/serving.md.
 """
 
 from .executor import ModelExecutor
 from .loadgen import LoadGenConfig, compare_batching, run_load, \
     synthetic_requests
 from .reload import StoreWatcher
+from .resilience import DegradedModeController, ResilienceConfig
 from .scheduler import REQUEST_STATES, Request, Scheduler, SchedulerConfig
 from .slots import SlotManager
 
@@ -29,6 +37,8 @@ __all__ = [
     "REQUEST_STATES",
     "SlotManager",
     "StoreWatcher",
+    "DegradedModeController",
+    "ResilienceConfig",
     "LoadGenConfig",
     "run_load",
     "compare_batching",

@@ -50,11 +50,19 @@ class ModelExecutor:
             make_serve_step(model, self.rules, self.order))
         self._batch_axes = None
 
-    def with_mapper(self, mapper_src: str, tag: str = "") -> "ModelExecutor":
-        """A fresh executor for a new plan, sharing model/mesh/params."""
-        return ModelExecutor(self.model, self.mesh, mapper_src,
-                             max_len=self.max_len, params=self.params,
-                             tag=tag)
+    def with_mapper(self, mapper_src: str, tag: str = "",
+                    mesh=None) -> "ModelExecutor":
+        """A fresh executor for a new plan, sharing model/mesh/params.
+
+        ``mesh`` overrides the executor's mesh -- the elastic-shrink
+        recompile path: the plan, shardings, and step functions are
+        rebuilt against the surviving geometry (params resharding is
+        the caller's job via ``repro.ft.resume_on_mesh``).
+        """
+        return ModelExecutor(self.model,
+                             self.mesh if mesh is None else mesh,
+                             mapper_src, max_len=self.max_len,
+                             params=self.params, tag=tag)
 
     # -- step execution ------------------------------------------------------
     def _require_params(self):

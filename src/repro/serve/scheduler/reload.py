@@ -23,6 +23,7 @@ class StoreWatcher:
     """Reports new best artifacts for one (workload, mesh) store key."""
 
     def __init__(self, store, workload: str, mesh, *,
+                 profile: str = "healthy",
                  current_artifact=None, current_score: Optional[float] = None,
                  min_interval_s: float = 0.0):
         from ...service import mesh_key
@@ -30,6 +31,9 @@ class StoreWatcher:
         self.workload = (workload if isinstance(workload, str)
                          else workload.name)
         self.mesh = mesh_key(mesh) if mesh is not None else None
+        #: Device-profile axis watched (see repro.ft.profiles); the
+        #: degraded-mode controller runs its own watcher per profile.
+        self.profile = profile
         self.min_interval_s = float(min_interval_s)
         self._last_poll = 0.0
         # seed from what is already serving, so the first poll does not
@@ -50,7 +54,7 @@ class StoreWatcher:
         if self.min_interval_s and now - self._last_poll < self.min_interval_s:
             return None
         self._last_poll = now
-        artifact = self.store.best(self.workload, self.mesh)
+        artifact = self.store.best(self.workload, self.mesh, self.profile)
         if artifact is None or artifact.id == self._seen_id:
             return None
         if self._best_score is not None and (

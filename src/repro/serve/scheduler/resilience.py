@@ -1,0 +1,122 @@
+"""Profile-aware re-mapping for the serving loop.
+
+The :class:`Scheduler` can survive a machine that degrades mid-serve.
+A :class:`DegradedModeController` watches step durations through the
+:class:`~repro.ft.straggler.StepWatchdog`; when straggling *sustains*
+(``sustain`` consecutive flagged steps -- one slow step is noise, a
+run of them is a sick device) it resolves the mapper tuned for the
+degraded profile from the :class:`~repro.service.MapperStore` via the
+``resolve_mapper`` fallback chain (profile -> healthy -> preset ->
+default) and hands the scheduler a swap target.  The scheduler then
+reuses the exact hot-reload path the :class:`StoreWatcher` uses:
+compile a fresh executor, admit new work there, drain in-flight
+sequences on the old one.  Nothing is dropped.
+
+Mesh shrink is push, not detection: the launcher that noticed the lost
+slice calls :meth:`Scheduler.notify_shrink` with the shrink profile
+(and optionally the surviving mesh, which forces a recompile against
+the new geometry -- ``repro.ft.resume_on_mesh`` is the analogous
+training-side path).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from ...ft.straggler import StepWatchdog
+
+
+@dataclass
+class ResilienceConfig:
+    """Degraded-mode policy knobs."""
+
+    #: Store-axis profile key to swap to on sustained straggling.
+    degraded_profile: str = "straggler:2x1"
+    #: Consecutive watchdog-flagged steps before the swap triggers.
+    sustain: int = 2
+    #: StepWatchdog knobs (used when no watchdog instance is passed).
+    threshold: float = 2.5
+    warmup_steps: int = 3
+    #: Mapper step kind for preset fallback resolution.
+    step: str = "decode"
+
+    def validate(self) -> None:
+        if self.sustain < 1:
+            raise ValueError("sustain must be >= 1")
+        if self.threshold <= 1.0:
+            raise ValueError("threshold must exceed 1.0")
+
+
+class DegradedModeController:
+    """Watchdog + store resolution = the scheduler's resilience brain.
+
+    ``observe(dt)`` is called by the scheduler once per tick with the
+    measured step duration; it returns a
+    :class:`~repro.service.resolve.Resolution` exactly once, when
+    sustained straggling first crosses the policy, and ``None``
+    otherwise.  ``shrink(profile)`` resolves the shrink-profile mapper
+    on demand.  ``events`` is the audit trail.
+    """
+
+    MODES = ("healthy", "degraded", "shrunk")
+
+    def __init__(self, store, workload, mesh=None,
+                 cfg: Optional[ResilienceConfig] = None, *,
+                 watchdog: Optional[StepWatchdog] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        from ...service import mesh_key
+        self.cfg = cfg or ResilienceConfig()
+        self.cfg.validate()
+        self.store = store
+        self.workload = (workload if isinstance(workload, str)
+                         else workload.name)
+        self.mesh = mesh_key(mesh) if mesh is not None else None
+        self.watchdog = watchdog or StepWatchdog(
+            threshold=self.cfg.threshold,
+            warmup_steps=self.cfg.warmup_steps, clock=clock)
+        self.mode = "healthy"
+        self.events: List[Dict] = []
+        self._consecutive = 0
+
+    # -- the per-tick hook ---------------------------------------------------
+    def observe(self, dt: float):
+        """Feed one step duration; a Resolution when a swap should
+        happen now, else None."""
+        flagged = self.watchdog.record(dt)
+        self._consecutive = self._consecutive + 1 if flagged else 0
+        if self.mode == "healthy" and \
+                self._consecutive >= self.cfg.sustain:
+            res = self.resolve(self.cfg.degraded_profile)
+            self.mode = "degraded"
+            self.events.append({
+                "kind": "straggler-degrade",
+                "profile": self.cfg.degraded_profile,
+                "origin": res.origin,
+                "flagged_steps": list(self.watchdog.straggler_steps),
+                "step_s": dt, "ema_s": self.watchdog.ema})
+            return res
+        return None
+
+    # -- resolution ----------------------------------------------------------
+    def resolve(self, profile: str):
+        """Resolve the mapper for ``profile`` (fallback chain profile ->
+        healthy -> preset -> default; see resolve_mapper)."""
+        from ...service.resolve import resolve_mapper
+        return resolve_mapper(self.store, self.workload, self.mesh,
+                              step=self.cfg.step, profile=profile)
+
+    def shrink(self, profile: str = "shrink:1"):
+        """External device-loss signal: resolve the shrink-profile
+        mapper and enter shrunk mode (sticky -- a shrunk mesh does not
+        recover by watching step times)."""
+        res = self.resolve(profile)
+        self.mode = "shrunk"
+        self.events.append({"kind": "shrink", "profile": profile,
+                            "origin": res.origin})
+        return res
+
+    def __repr__(self) -> str:
+        return (f"<DegradedModeController {self.workload!r}@{self.mesh} "
+                f"mode={self.mode} flagged={self._consecutive}>")

@@ -24,6 +24,15 @@ One :meth:`Scheduler.step` is one serving tick:
 The scheduler is synchronous and deterministic: same submissions, same
 tokens -- batched output is token-identical to running each request
 alone (dense models; MoE capacity is batch-coupled by construction).
+
+Resilience rides the same swap path.  With a
+:class:`~repro.serve.scheduler.resilience.DegradedModeController`, each
+tick's measured duration feeds the controller; sustained straggling
+resolves the degraded-profile artifact from the store and swaps it in
+exactly like a watcher-reported reload (reason ``straggler-degrade``).
+:meth:`Scheduler.notify_shrink` is the push-side analogue for device
+loss.  ``clock`` is injectable so all of this is testable without
+sleeps (pass a ``VirtualClock`` / ``ScriptClock``).
 """
 
 from __future__ import annotations
@@ -115,7 +124,8 @@ class Scheduler:
     """Admission queue + continuous batching + mapper hot-reload."""
 
     def __init__(self, executor, cfg: Optional[SchedulerConfig] = None, *,
-                 watcher=None):
+                 watcher=None, resilience=None,
+                 clock=time.perf_counter):
         if executor.model.cfg.is_encoder_decoder:
             raise ValueError(
                 "the continuous-batching scheduler serves decoder-only "
@@ -123,6 +133,12 @@ class Scheduler:
                 "lockstep path")
         self.cfg = cfg or SchedulerConfig()
         self.watcher = watcher
+        #: DegradedModeController (or None): fed every tick duration,
+        #: may answer with a degraded-profile mapper to swap to.
+        self.resilience = resilience
+        #: Time source for request timestamps and step durations --
+        #: injectable so straggler handling is testable without sleeps.
+        self.clock = clock
         self._groups: List[_ExecutorGroup] = [
             _ExecutorGroup(executor, self.cfg.max_slots)]
         self._queue: List[Request] = []
@@ -164,7 +180,7 @@ class Scheduler:
              else int(max_new_tokens))
         self.cfg.validate(int(prompt.shape[0]), n)
         req = Request(id=next(self._ids), prompt=prompt, max_new_tokens=n,
-                      submitted=time.perf_counter())
+                      submitted=self.clock())
         self._queue.append(req)
         self._all.append(req)
         return req
@@ -177,11 +193,16 @@ class Scheduler:
         if self.watcher is not None and \
                 self._steps % max(1, self.cfg.reload_poll_every) == 0:
             self._maybe_reload()
+        t0 = self.clock()
         self._admit()
         emitted = 0
         for group in self._groups:
             emitted += self._decode(group)
         self._retire_drained()
+        if self.resilience is not None and emitted:
+            res = self.resilience.observe(self.clock() - t0)
+            if res is not None:
+                self._swap_to_resolution(res, reason="straggler-degrade")
         return emitted
 
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
@@ -197,27 +218,72 @@ class Scheduler:
             steps += 1
         return [r for r in self._all if r.state == "finished"]
 
+    # -- elasticity ----------------------------------------------------------
+    def notify_shrink(self, profile: str = "shrink:1", mesh=None):
+        """External device-loss signal: swap to the shrink-profile
+        mapper now (fallback chain via the resilience controller).
+
+        ``mesh`` is the surviving geometry; when given, the replacement
+        executor is recompiled against it (resharding the params is the
+        caller's job -- ``repro.ft.resume_on_mesh`` is the training-side
+        analogue).  In-flight sequences still drain on the old executor:
+        their caches live on whatever devices prefilled them.  Returns
+        the Resolution that was swapped in.
+        """
+        if self.resilience is None:
+            raise RuntimeError(
+                "notify_shrink needs a DegradedModeController: pass "
+                "resilience= to the Scheduler")
+        res = self.resilience.shrink(profile)
+        self._swap_to_resolution(res, reason="shrink", mesh=mesh)
+        return res
+
     # -- internals -----------------------------------------------------------
     def _maybe_reload(self) -> None:
         artifact = self.watcher.poll()
         if artifact is None:
             return
+        self._swap_to(artifact.mapper, artifact.id[:12],
+                      reason="store-watch", score=artifact.score,
+                      artifact_id=artifact.id,
+                      profile=getattr(artifact, "profile", "healthy"))
+
+    def _swap_to_resolution(self, res, *, reason: str, mesh=None) -> bool:
+        art = res.artifact
+        tag = art.id[:12] if art is not None else f"{res.origin}:{res.profile}"
+        return self._swap_to(
+            res.mapper, tag, reason=reason, mesh=mesh,
+            score=art.score if art is not None else None,
+            artifact_id=art.id if art is not None else None,
+            profile=art.profile if art is not None else res.profile)
+
+    def _swap_to(self, mapper: str, tag: str, *, reason: str,
+                 score=None, artifact_id=None, profile: str = "healthy",
+                 mesh=None) -> bool:
+        """Swap admissions to a freshly compiled executor for ``mapper``
+        (the one hot-reload path -- store watch, straggler degrade, and
+        shrink all land here).  Old executors drain; nothing is dropped.
+        A no-op (False) when the mapper is already serving, unless a new
+        ``mesh`` forces a recompile."""
         current = self._groups[-1]
-        if artifact.mapper == current.executor.mapper_src:
-            return
-        new_exec = current.executor.with_mapper(
-            artifact.mapper, tag=artifact.id[:12])
+        if mapper == current.executor.mapper_src and mesh is None:
+            return False
+        kwargs = {} if mesh is None else {"mesh": mesh}
+        new_exec = current.executor.with_mapper(mapper, tag=tag, **kwargs)
         for group in self._groups:
             group.draining = True
         self._groups.append(_ExecutorGroup(new_exec, self.cfg.max_slots))
         self.reload_events.append({
             "step": self._steps,
-            "artifact_id": artifact.id,
-            "score": artifact.score,
+            "reason": reason,
+            "profile": profile,
+            "artifact_id": artifact_id,
+            "score": score,
             "from_tag": current.executor.tag,
             "to_tag": new_exec.tag,
             "in_flight_on_old": current.n_active,
         })
+        return True
 
     def _admit(self) -> None:
         """Prefill phase: fill the newest executor's free slots."""
@@ -227,7 +293,7 @@ class Scheduler:
             ex = group.executor
             logits, seq_caches = ex.prefill(req.prompt[None])
             tok = int(np.argmax(np.asarray(logits[0])))
-            now = time.perf_counter()
+            now = self.clock()
             req.tokens.append(tok)
             req.first_token_at = now
             req.executor_tag = ex.tag
@@ -250,7 +316,7 @@ class Scheduler:
             group.cur_tokens, group.slots.caches, group.index)
         group.slots.update(caches)
         toks = np.asarray(next_tok)
-        now = time.perf_counter()
+        now = self.clock()
         emitted = 0
         for slot in group.slots.active_slots():
             req = group.requests[slot]

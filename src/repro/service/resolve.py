@@ -29,11 +29,17 @@ class Resolution:
     mesh: Optional[str] = None
     artifact: Optional[MapperArtifact] = None
     job: Optional[object] = None    # tune-on-miss Job, when one was enqueued
+    #: Device-profile key the caller asked for (the artifact's own
+    #: ``profile`` says what was actually served -- a degraded request
+    #: may fall back to the healthy artifact).
+    profile: str = "healthy"
 
     def __repr__(self) -> str:
         ref = self.artifact.id[:12] if self.artifact else "-"
+        served = self.artifact.profile if self.artifact else "-"
         return (f"<Resolution {self.workload!r}@{self.mesh} "
-                f"origin={self.origin} artifact={ref}>")
+                f"origin={self.origin} artifact={ref} "
+                f"profile={self.profile}->{served}>")
 
 
 def _workload_instance(workload):
@@ -60,24 +66,29 @@ def preset_mapper(workload, step: str = "decode") -> Optional[str]:
 
 
 def resolve_mapper(store: Optional[MapperStore], workload, mesh=None, *,
-                   step: str = "decode", service=None,
-                   tune_on_miss: bool = False) -> Resolution:
+                   step: str = "decode", profile: str = "healthy",
+                   service=None, tune_on_miss: bool = False) -> Resolution:
     """Resolve the mapper to serve ``workload`` on ``mesh``.
 
     ``workload`` is a registry name or a ``Workload`` instance; ``mesh``
     a real/abstract mesh, a geometry key string, or None (any geometry
     -- artifacts do not port across geometries, so serving callers
-    should pin one).  Resolution order: best store artifact for the key,
-    else expert preset for ``step``, else the workload's rendered
-    default decisions.  On a store miss with ``tune_on_miss`` and a
+    should pin one).  ``profile`` is a device-profile key
+    (:mod:`repro.ft.profiles`): the fallback chain is *profile artifact
+    -> healthy artifact -> expert preset -> rendered defaults*, so a
+    degraded mesh always serves the most specific mapper available and
+    never blocks.  On a store miss with ``tune_on_miss`` and a
     ``service``, a background tuning job is enqueued (deduped by the
     service) and returned on the Resolution.
     """
     name = workload if isinstance(workload, str) else workload.name
     mkey = mesh_key(mesh) if mesh is not None else None
-    art = store.best(name, mkey) if store is not None else None
+    art = store.best(name, mkey, profile) if store is not None else None
+    if art is None and store is not None and profile != "healthy":
+        art = store.best(name, mkey, "healthy")
     if art is not None:
-        return Resolution(art.mapper, "artifact", name, mkey, artifact=art)
+        return Resolution(art.mapper, "artifact", name, mkey, artifact=art,
+                          profile=profile)
 
     job = None
     if tune_on_miss and service is not None:
@@ -91,11 +102,12 @@ def resolve_mapper(store: Optional[MapperStore], workload, mesh=None, *,
             job = service.submit(wl)
     preset = preset_mapper(workload, step)
     if preset:
-        return Resolution(preset, "preset", name, mkey, job=job)
+        return Resolution(preset, "preset", name, mkey, job=job,
+                          profile=profile)
     wl = _workload_instance(workload)
     if wl is None:
         raise KeyError(
             f"cannot resolve a mapper for unknown workload {name!r}: no "
             "store artifact, no expert preset, and not in the registry")
     return Resolution(wl.render_mapper(wl.default_decisions()), "default",
-                      name, mkey, job=job)
+                      name, mkey, job=job, profile=profile)

@@ -30,9 +30,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 #: Bump when the artifact schema changes.  Enforced via sqlite's
-#: ``user_version`` pragma: opening a store written at another version
-#: raises instead of misreading rows one by one.
-STORE_VERSION = 1
+#: ``user_version`` pragma: opening a store written at a *newer* version
+#: raises instead of misreading rows one by one; older versions with a
+#: known upgrade path are migrated in place (v1 -> v2 added the device-
+#: profile axis; pre-profile artifacts are all ``profile="healthy"``).
+STORE_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +122,10 @@ class MapperArtifact:
     mesh: str             # machine-geometry key (see mesh_key)
     mapper: str           # DSL source
     fingerprint: str      # plan fingerprint (or "text:<sha1>" fallback)
+    #: Device-profile key ("healthy" | "straggler:<f>x<n>" | "shrink:<k>",
+    #: see repro.ft.profiles) -- the machine state this mapper was tuned
+    #: for.  The third axis of the store key.
+    profile: str = "healthy"
     score: Optional[float] = None     # seconds, lower better; None = unscored
     provenance: Dict = field(default_factory=dict)
     created: float = 0.0
@@ -127,15 +133,16 @@ class MapperArtifact:
 
     @classmethod
     def build(cls, workload: str, substrate: str, mesh: str, mapper: str, *,
-              fingerprint: str = "", score: Optional[float] = None,
+              profile: str = "healthy", fingerprint: str = "",
+              score: Optional[float] = None,
               provenance: Optional[Dict] = None,
               created: Optional[float] = None) -> "MapperArtifact":
         if not fingerprint:
             from ..core.evalengine.fingerprint import text_key
             fingerprint = "text:" + text_key(mapper)
         art = cls(workload=workload, substrate=substrate, mesh=mesh,
-                  mapper=mapper, fingerprint=fingerprint, score=score,
-                  provenance=dict(provenance or {}),
+                  mapper=mapper, fingerprint=fingerprint, profile=profile,
+                  score=score, provenance=dict(provenance or {}),
                   created=time.time() if created is None else created)
         art.id = art.content_id()
         return art
@@ -146,16 +153,18 @@ class MapperArtifact:
         blob = json.dumps(
             {"v": STORE_VERSION, "workload": self.workload,
              "substrate": self.substrate, "mesh": self.mesh,
+             "profile": self.profile,
              "mapper": self.mapper, "fingerprint": self.fingerprint},
             sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()
 
-    def key(self) -> Tuple[str, str]:
-        return (self.workload, self.mesh)
+    def key(self) -> Tuple[str, str, str]:
+        return (self.workload, self.mesh, self.profile)
 
     def to_dict(self) -> Dict:
         return {"id": self.id, "workload": self.workload,
                 "substrate": self.substrate, "mesh": self.mesh,
+                "profile": self.profile,
                 "mapper": self.mapper, "fingerprint": self.fingerprint,
                 "score": self.score, "provenance": self.provenance,
                 "created": self.created}
@@ -164,7 +173,9 @@ class MapperArtifact:
     def from_dict(cls, d: Dict) -> "MapperArtifact":
         return cls(workload=d["workload"], substrate=d["substrate"],
                    mesh=d["mesh"], mapper=d["mapper"],
-                   fingerprint=d["fingerprint"], score=d.get("score"),
+                   fingerprint=d["fingerprint"],
+                   profile=d.get("profile", "healthy"),
+                   score=d.get("score"),
                    provenance=d.get("provenance", {}),
                    created=d.get("created", 0.0), id=d.get("id", ""))
 
@@ -187,12 +198,21 @@ class MapperStore:
             has_table = self._conn.execute(
                 "SELECT name FROM sqlite_master WHERE type='table' "
                 "AND name='artifacts'").fetchone() is not None
-            if has_table and ver != STORE_VERSION:
+            if has_table and ver not in (1, STORE_VERSION):
                 self._conn.close()
                 raise ValueError(
                     f"mapper store {path!r} is schema version {ver}, "
                     f"this code expects {STORE_VERSION}; migrate or "
                     "start a fresh store")
+            if has_table and ver == 1:
+                # v1 -> v2: the device-profile axis.  Every pre-profile
+                # artifact was tuned on the healthy machine, so the new
+                # column backfills to "healthy"; ids and payloads are
+                # untouched (payloads without a profile field resolve
+                # as healthy on read).
+                self._conn.execute(
+                    "ALTER TABLE artifacts ADD COLUMN profile TEXT "
+                    "NOT NULL DEFAULT 'healthy'")
             self._conn.execute(
                 f"PRAGMA user_version = {int(STORE_VERSION)}")
             self._conn.execute(
@@ -201,6 +221,7 @@ class MapperStore:
                 "  workload TEXT NOT NULL,"
                 "  substrate TEXT NOT NULL,"
                 "  mesh TEXT NOT NULL,"
+                "  profile TEXT NOT NULL DEFAULT 'healthy',"
                 "  fingerprint TEXT NOT NULL,"
                 "  score REAL,"
                 "  created REAL NOT NULL,"
@@ -208,6 +229,9 @@ class MapperStore:
             self._conn.execute(
                 "CREATE INDEX IF NOT EXISTS idx_artifacts_key "
                 "ON artifacts (workload, mesh)")
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS idx_artifacts_profile "
+                "ON artifacts (workload, mesh, profile)")
             self._conn.commit()
 
     # -- write --------------------------------------------------------------
@@ -220,11 +244,12 @@ class MapperStore:
         with self._lock:
             self._conn.execute(
                 "INSERT OR REPLACE INTO artifacts "
-                "(id, workload, substrate, mesh, fingerprint, score, "
-                " created, payload) VALUES (?, ?, ?, ?, ?, ?, ?, ?)",
+                "(id, workload, substrate, mesh, profile, fingerprint, "
+                " score, created, payload) "
+                "VALUES (?, ?, ?, ?, ?, ?, ?, ?, ?)",
                 (artifact.id, artifact.workload, artifact.substrate,
-                 artifact.mesh, artifact.fingerprint, artifact.score,
-                 artifact.created, blob))
+                 artifact.mesh, artifact.profile, artifact.fingerprint,
+                 artifact.score, artifact.created, blob))
             self._conn.commit()
         return artifact
 
@@ -241,14 +266,17 @@ class MapperStore:
         except (json.JSONDecodeError, KeyError):
             return None    # corrupt blob: treat as a miss
 
-    def best(self, workload: str,
-             mesh: Optional[str] = None) -> Optional[MapperArtifact]:
-        """Lowest-scoring artifact for ``(workload, mesh)``.
+    def best(self, workload: str, mesh: Optional[str] = None,
+             profile: Optional[str] = "healthy"
+             ) -> Optional[MapperArtifact]:
+        """Lowest-scoring artifact for ``(workload, mesh, profile)``.
 
         ``mesh`` is a geometry key (or a mesh; see :func:`mesh_key`);
         ``None`` matches any geometry -- mappers do not port across
-        geometries, so serving callers should always pin one.  Unscored
-        artifacts never win.
+        geometries, so serving callers should always pin one.
+        ``profile`` defaults to ``"healthy"`` (pre-profile behaviour);
+        pass a profile key for degraded-machine artifacts, or ``None``
+        to match any profile.  Unscored artifacts never win.
         """
         q = ("SELECT payload FROM artifacts WHERE workload = ? "
              "AND score IS NOT NULL")
@@ -256,6 +284,9 @@ class MapperStore:
         if mesh is not None:
             q += " AND mesh = ?"
             args.append(mesh_key(mesh))
+        if profile is not None:
+            q += " AND profile = ?"
+            args.append(profile)
         q += " ORDER BY score ASC, created DESC LIMIT 1"
         with self._lock:
             row = self._conn.execute(q, args).fetchone()
@@ -263,7 +294,8 @@ class MapperStore:
                 if row else None)
 
     def list(self, workload: Optional[str] = None,
-             mesh: Optional[str] = None) -> List[MapperArtifact]:
+             mesh: Optional[str] = None,
+             profile: Optional[str] = None) -> List[MapperArtifact]:
         q = "SELECT payload FROM artifacts"
         conds, args = [], []
         if workload is not None:
@@ -272,45 +304,51 @@ class MapperStore:
         if mesh is not None:
             conds.append("mesh = ?")
             args.append(mesh_key(mesh))
+        if profile is not None:
+            conds.append("profile = ?")
+            args.append(profile)
         if conds:
             q += " WHERE " + " AND ".join(conds)
-        q += " ORDER BY workload, mesh, (score IS NULL), score, created DESC"
+        q += (" ORDER BY workload, mesh, profile, (score IS NULL), "
+              "score, created DESC")
         with self._lock:
             rows = self._conn.execute(q, args).fetchall()
         return [MapperArtifact.from_dict(json.loads(r[0])) for r in rows]
 
     def summary(self) -> List[Dict]:
-        """One row per (workload, mesh): count + the current best."""
+        """One row per (workload, mesh, profile): count + current best."""
         with self._lock:
             rows = self._conn.execute(
-                "SELECT workload, mesh, COUNT(*), MIN(score) "
-                "FROM artifacts GROUP BY workload, mesh "
-                "ORDER BY workload, mesh").fetchall()
+                "SELECT workload, mesh, profile, COUNT(*), MIN(score) "
+                "FROM artifacts GROUP BY workload, mesh, profile "
+                "ORDER BY workload, mesh, profile").fetchall()
         out = []
-        for workload, mesh, count, best_score in rows:
-            best = self.best(workload, mesh)
+        for workload, mesh, profile, count, best_score in rows:
+            best = self.best(workload, mesh, profile)
             out.append({"workload": workload, "mesh": mesh,
+                        "profile": profile,
                         "artifacts": count, "best_score": best_score,
                         "best_id": best.id if best else None})
         return out
 
     # -- maintenance --------------------------------------------------------
     def gc(self, keep: int = 1) -> int:
-        """Keep the ``keep`` best artifacts per (workload, mesh); delete
-        the rest (unscored artifacts are pruned first).  Returns the
-        number deleted."""
+        """Keep the ``keep`` best artifacts per (workload, mesh,
+        profile); delete the rest (unscored artifacts are pruned
+        first).  Returns the number deleted."""
         if keep < 0:
             raise ValueError("keep must be >= 0")
         deleted = 0
         with self._lock:
             keys = self._conn.execute(
-                "SELECT DISTINCT workload, mesh FROM artifacts").fetchall()
-            for workload, mesh in keys:
+                "SELECT DISTINCT workload, mesh, profile "
+                "FROM artifacts").fetchall()
+            for workload, mesh, profile in keys:
                 ids = [r[0] for r in self._conn.execute(
                     "SELECT id FROM artifacts WHERE workload = ? "
-                    "AND mesh = ? "
+                    "AND mesh = ? AND profile = ? "
                     "ORDER BY (score IS NULL), score, created DESC",
-                    (workload, mesh)).fetchall()]
+                    (workload, mesh, profile)).fetchall()]
                 for aid in ids[keep:]:
                     self._conn.execute(
                         "DELETE FROM artifacts WHERE id = ?", (aid,))
@@ -344,14 +382,27 @@ class MapperStore:
 # ---------------------------------------------------------------------------
 # Publishing (the one path tuner / service / experiments all go through)
 # ---------------------------------------------------------------------------
+def workload_profile(workload) -> str:
+    """The device-profile key a workload's winner publishes under.
+
+    Robust workloads (:class:`~repro.ft.robust.RobustWorkload`) expose
+    ``profile_key()`` -- the most degraded profile of their tuning
+    distribution; everything else tunes on the healthy machine.
+    """
+    pk = getattr(workload, "profile_key", None)
+    return str(pk()) if callable(pk) else "healthy"
+
+
 def publish_result(store: MapperStore, workload, result,
-                   provenance: Optional[Dict] = None
+                   provenance: Optional[Dict] = None,
+                   profile: Optional[str] = None
                    ) -> Optional[MapperArtifact]:
     """Publish a tuning run's winner (a ``SearchResult``) to ``store``.
 
     Returns ``None`` -- publishing nothing -- when the run found no valid
     candidate (no finite best score): the registry only holds mappers
-    that actually executed.
+    that actually executed.  ``profile`` overrides the store-axis key
+    the artifact lands under (default: :func:`workload_profile`).
     """
     import math
     score = result.best_score
@@ -362,6 +413,8 @@ def publish_result(store: MapperStore, workload, result,
         substrate=getattr(workload, "substrate", ""),
         mesh=workload_mesh(workload),
         mapper=result.best_mapper,
+        profile=profile if profile is not None else
+        workload_profile(workload),
         fingerprint=mapper_fingerprint(workload, result.best_mapper),
         score=float(score),
         provenance=dict(provenance or {})))
