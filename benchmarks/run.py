@@ -19,6 +19,10 @@
     (ours)   resilience           robust-vs-healthy tuning on degraded
                                   device profiles + deterministic
                                   straggler-swap serving demo (repro.ft)
+    (ours)   fleet                portfolio racing: 4-lane race vs best
+                                  single lane time-to-expert-bar, plus
+                                  the N-process store contention harness
+                                  (repro.fleet)
 
 Output: ``name,us_per_call,derived`` CSV rows.
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -817,6 +821,110 @@ def bench_resilience(out_json="BENCH_resilience.json"):
 
 
 # ---------------------------------------------------------------------------
+def bench_fleet(out_json="BENCH_fleet.json"):
+    """(ours) Fleet racing smoke: on each raceable workload, race the
+    full 4-lane portfolio and every lane solo, and compare
+    *time-to-expert-bar* (bar-cleared instant minus the winning lane's
+    own start, so process spawn is excluded on both sides).  The race
+    must reach the bar no later than the best single lane plus a small
+    scheduler-jitter allowance -- the portfolio costs (almost) nothing
+    over the oracle choice of optimizer, while the worst single lane
+    never clears the bar at all.  Early termination and
+    cross-pollination are audited from the race logs.  Also runs the
+    multi-process store contention harness (zero lost publishes).
+    Writes ``BENCH_fleet.json``.
+    """
+    import json
+    import shutil
+    import tempfile
+
+    from repro.fleet import DEFAULT_PORTFOLIO, RaceConfig, run_contention, \
+        run_race
+
+    iterations, pace_s, poll_s = 16, 0.15, 0.03
+    # start-to-bar comparisons tolerate polling granularity, one paced
+    # iteration of skew, and the CPU contention of 4 concurrent lanes
+    # importing and evaluating at once (a solo lane has the machine to
+    # itself, so its per-iteration cost is systematically lower)
+    slack_s = pace_s + 2 * poll_s + 1.25
+    tmp = tempfile.mkdtemp(prefix="bench_fleet_")
+    payload = {"config": {"iterations": iterations, "pace_s": pace_s,
+                          "poll_s": poll_s, "slack_s": slack_s,
+                          "portfolio": [s.name for s in DEFAULT_PORTFOLIO]},
+               "workloads": {}}
+    try:
+        cross_pollinations = 0
+        for wname in ("circuit", "pennant"):
+            slug = wname.replace("/", "_")
+            race = run_race(RaceConfig(
+                workload=wname, portfolio=DEFAULT_PORTFOLIO,
+                iterations=iterations, poll_s=poll_s, pace_s=pace_s,
+                run_dir=f"{tmp}/{slug}/race"))
+            assert race.winner is not None, \
+                f"{wname}: 4-lane race never cleared the expert bar"
+            events = [e["event"] for e in race.events]
+            stopped_early = [
+                n for n, st in race.lanes.items()
+                if st and st["state"] == "stopped"
+                and st["iteration"] < iterations]
+            assert "early_termination" in events and stopped_early, \
+                f"{wname}: no audited early termination in the race log"
+            cross_pollinations += events.count("cross_pollinate")
+
+            solos = {}
+            for spec in DEFAULT_PORTFOLIO:
+                solo = run_race(RaceConfig(
+                    workload=wname, portfolio=(spec,),
+                    iterations=iterations, poll_s=poll_s, pace_s=pace_s,
+                    run_dir=f"{tmp}/{slug}/solo-{spec.name}"))
+                solos[spec.name] = solo.time_to_bar
+            reached = {n: t for n, t in solos.items() if t is not None}
+            assert reached, f"{wname}: no single lane ever cleared the bar"
+            best_single = min(reached.values())
+            assert race.time_to_bar <= best_single + slack_s, (
+                f"{wname}: race time-to-bar {race.time_to_bar:.2f}s vs "
+                f"best single lane {best_single:.2f}s (+{slack_s:.2f}s)")
+            _emit(f"fleet/race/{slug}", race.time_to_bar * 1e6,
+                  f"winner={race.winner};bar={race.bar:.6g};"
+                  f"best_single_s={best_single:.3f};"
+                  f"solo_reached={len(reached)}/{len(solos)};"
+                  f"stopped_early={len(stopped_early)}")
+            payload["workloads"][wname] = {
+                "bar": race.bar,
+                "winner": race.winner,
+                "race_time_to_bar_s": race.time_to_bar,
+                "race_wall_s": race.wall_s,
+                "best_single_lane_s": best_single,
+                "solo_time_to_bar_s": solos,
+                "lanes_stopped_early": stopped_early,
+                "cross_pollinate_events": events.count("cross_pollinate"),
+                "events": race.events,
+            }
+        # at least one race must show the leader's decisions reaching a
+        # trailing agentic lane (pennant reliably does)
+        assert cross_pollinations >= 1, payload
+        payload["cross_pollinations"] = cross_pollinations
+
+        contention = run_contention(f"{tmp}/contention.db",
+                                    f"{tmp}/contention-sync",
+                                    n_procs=4, n_puts=25)
+        assert contention["lost"] == 0, contention
+        assert contention["locked"] == 0, contention
+        assert contention["best_ok"], contention
+        _emit("fleet/contention", contention["wall_s"] * 1e6,
+              f"procs={contention['procs']};puts={contention['puts']};"
+              f"lost={contention['lost']};locked={contention['locked']};"
+              f"journal={contention['journal_mode']}")
+        payload["contention"] = contention
+
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        _emit("fleet/summary", 0.0, f"written={out_json}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -851,6 +959,7 @@ SECTIONS = {
     "service": bench_service,
     "serving_load": bench_serving_load,
     "resilience": bench_resilience,
+    "fleet": bench_fleet,
 }
 
 

@@ -133,6 +133,23 @@ class Tuner:
     #: None keeps the workload's default.  Persisted in checkpoints so a
     #: resumed run measures (or doesn't) exactly like the original.
     tier: Optional[str] = None
+    #: Cooperative stop flag -- a ``threading.Event`` or a zero-arg
+    #: callable returning bool, polled at every iteration boundary.  Once
+    #: it fires the run halts, the result carries ``stopped=True``, and
+    #: the ``store`` hook publishes nothing: a cancelled job or a
+    #: terminated race lane never overwrites the leaderboard.  Runtime
+    #: wiring only, never checkpointed.
+    stop: Optional[object] = None
+    #: Cross-pollination source -- a zero-arg callable returning either
+    #: None or ``{"decisions": ..., "score": ...}``, polled at every
+    #: iteration boundary and injected into the search via
+    #: ``Search.inject_hint`` (the fleet racer feeds the leader's best
+    #: decisions to laggard lanes this way).  Runtime wiring only.
+    hints: Optional[object] = None
+    #: Extra per-iteration callback (after the checkpoint save), called
+    #: with the live ``TuneSession`` -- race lanes publish improvements
+    #: and heartbeat their status files here.  Runtime wiring only.
+    on_iteration: Optional[object] = None
 
     def __post_init__(self):
         if isinstance(self.workload, str):
@@ -204,10 +221,23 @@ class Tuner:
         agent = wl.make_agent(_norm(start) if start else None)
         if session.iteration:   # resumed: restore the agent's position
             agent.set_decisions(session.graph.records[-1].values)
-        on_it = (lambda s: self._save(search, s)) if self.checkpoint else None
+        hooks = []
+        if self.checkpoint:
+            hooks.append(lambda s: self._save(search, s))
+        if self.on_iteration is not None:
+            hooks.append(self.on_iteration)
+        on_it = ((lambda s: [h(s) for h in hooks]) if hooks else None)
+        stop_fn = self.stop
+        if stop_fn is not None and hasattr(stop_fn, "is_set"):
+            stop_fn = stop_fn.is_set     # accept a threading.Event
         result = run_loop(search, agent, wl.evaluator(), self.iterations,
                           self.batch, parallel_safe=wl.parallel_safe,
-                          session=session, on_iteration=on_it)
+                          session=session, on_iteration=on_it,
+                          should_stop=stop_fn, hint_fn=self.hints)
+        if self.store is not None and result.stopped:
+            # cooperatively stopped (cancelled): never publish -- a
+            # cancelled race lane must not overwrite the leaderboard
+            return result
         if self.store is not None:
             from ..service.store import publish_result
             provenance = {

@@ -64,6 +64,11 @@ class TuneSession:
     all_texts: set = field(default_factory=set)
     best_valid: Optional[float] = None
     iteration: int = 0
+    #: True when the run halted at an iteration boundary because a
+    #: cooperative stop flag fired (see ``run_loop(should_stop=...)``).
+    #: Transient -- never serialized into checkpoints: a resumed session
+    #: starts un-stopped.
+    stopped: bool = False
 
 
 def _prescreen_extras(pool, prescreen, texts, margin):
@@ -107,9 +112,22 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
              iterations: int = 10, batch: int = 1, *,
              parallel_safe: bool = True,
              session: Optional[TuneSession] = None,
-             on_iteration: Optional[Callable[[TuneSession], None]] = None):
+             on_iteration: Optional[Callable[[TuneSession], None]] = None,
+             should_stop: Optional[Callable[[], bool]] = None,
+             hint_fn: Optional[Callable[[], Optional[dict]]] = None):
     """Run ``search`` over ``agent`` for ``iterations``, ``batch``
-    candidates per iteration; returns a ``SearchResult``."""
+    candidates per iteration; returns a ``SearchResult``.
+
+    ``should_stop`` is polled at every iteration boundary (before the
+    proposal): once it returns True the loop halts cooperatively and the
+    result carries ``stopped=True`` -- the hook a cancelled service job
+    or a terminated race lane uses to stand down without publishing.
+    ``hint_fn`` is polled at the same boundary; a non-None return (a
+    ``{"decisions": ..., "score": ...}`` dict) is injected into the
+    search via :meth:`Search.inject_hint` -- the fleet racer's
+    cross-pollination path (the leader's best decisions reach the
+    laggards' OPRO/Trace prompts).
+    """
     from .optimizers import SearchResult
 
     s = session or TuneSession()
@@ -117,7 +135,8 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
     # constructing/tearing one down per iteration wasted thread churn.
     with ThreadPoolExecutor(max_workers=8) as pool:
         _run_iterations(search, agent, evaluate, iterations, batch,
-                        parallel_safe, s, on_iteration, pool)
+                        parallel_safe, s, on_iteration, pool,
+                        should_stop, hint_fn)
 
     best = s.full.best()
     return SearchResult(
@@ -126,12 +145,21 @@ def run_loop(search, agent, evaluate: Callable[[str], Feedback],
         best_score=best.score if best else float("inf"),
         best_decisions=best.values if best else {},
         trajectory=s.trajectory,
+        stopped=s.stopped,
     )
 
 
 def _run_iterations(search, agent, evaluate, iterations, batch,
-                    parallel_safe, s, on_iteration, pool):
+                    parallel_safe, s, on_iteration, pool,
+                    should_stop=None, hint_fn=None):
     for it in range(s.iteration, iterations):
+        if should_stop is not None and should_stop():
+            s.stopped = True
+            break
+        if hint_fn is not None:
+            hint = hint_fn()
+            if hint and hint.get("decisions"):
+                search.inject_hint(hint["decisions"], hint.get("score"))
         # -- primary candidate: the legacy proposal chain -------------------
         if it > 0:
             proposal = search.propose(agent, s.graph)

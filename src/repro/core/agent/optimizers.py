@@ -68,6 +68,10 @@ class SearchResult:
     best_score: float
     best_decisions: Dict
     trajectory: List[float] = field(default_factory=list)
+    #: True when the run halted early on a cooperative stop flag (a
+    #: cancelled job / terminated race lane); such a result must not be
+    #: published as a winner.
+    stopped: bool = False
 
 
 class Search:
@@ -83,10 +87,28 @@ class Search:
         self.llm = llm or HeuristicLLM()
         self.random_fn = random_fn or space.random_decisions
         self.neighbor_fn = neighbor_fn or space.neighbors
+        # cross-pollination hint: a rival optimizer's (decisions, score),
+        # injected by the fleet racer at iteration boundaries.  Runtime
+        # state only -- never checkpointed: a resumed lane re-receives
+        # the current hint from its controller.
+        self._hint: Optional[tuple] = None
 
     # -- subclass hook -------------------------------------------------------
     def propose(self, agent: MapperAgent, graph: TraceGraph) -> Dict:
         raise NotImplementedError
+
+    # -- cross-pollination (fleet racing; see repro.fleet) -------------------
+    def inject_hint(self, decisions: Dict,
+                    score: Optional[float] = None) -> None:
+        """Feed a rival optimizer's current best into this search.
+
+        The agentic searches surface the hint in their proposal prompts
+        (OPRO) or adopt it as the mutation base when it beats their own
+        incumbent (Trace); the scalar baselines ignore it -- they model
+        tuners that only ever see their own trial scores.
+        """
+        if decisions:
+            self._hint = (copy.deepcopy(decisions), score)
 
     # -- checkpointable proposal state (JSON-safe; rng is handled by the
     # Tuner separately).  Subclasses with cross-iteration state beyond
@@ -178,12 +200,23 @@ class OPROSearch(Search):
                         f"HBM: peak {m.peak_bytes_per_device/2**30:.1f} GiB "
                         f"of {m.limit_bytes_per_device/2**30:.0f} GiB per "
                         f"device ({m.utilization:.0%}).")
+        if self._hint is not None:
+            lines.append(_rival_line(*self._hint))
         return "\n".join(lines)
 
     def propose(self, agent, graph):
         base = graph.best() or graph.last()
         decisions = base.values if base else agent.decisions()
         return self.llm.propose(self._prompt(graph), decisions, self.rng)
+
+
+def _rival_line(decisions: Dict, score: Optional[float]) -> str:
+    """One prompt line carrying a rival lane's best (cross-pollination)."""
+    desc = OPROSearch._format_decisions(decisions)
+    line = f"A rival optimizer's current best: {desc}"
+    if score is not None:
+        line += f" -> score={score:.4f}s"
+    return line + "; adopt its strong decisions where they beat yours."
 
 
 class TraceSearch(Search):
@@ -197,6 +230,16 @@ class TraceSearch(Search):
         decisions = copy.deepcopy(base.values if base else agent.decisions())
         last = graph.last()
         feedback = last.feedback if last else ""
+        if self._hint is not None:
+            hd, hs = self._hint
+            best = graph.best()
+            # a rival strictly ahead of our incumbent becomes the
+            # mutation base; either way its decisions reach the prompt
+            if hs is not None and (best is None or best.score is None
+                                   or hs < best.score):
+                decisions = copy.deepcopy(hd)
+            feedback = (feedback + "\n" if feedback else "") + \
+                _rival_line(hd, hs)
         implicated = set()
         # AutoGuide v2: structured credit assignment from the record's
         # ExecutionReport (taxonomy category / bottleneck term), gated to

@@ -31,9 +31,10 @@ See docs/experiments.md for the harness walkthrough.
 """
 
 from .runner import (DEFAULT_OPTIMIZERS, SMOKE_WORKLOADS, ExperimentConfig,
-                     OptimizerSpec, format_table, run_experiments)
+                     OptimizerSpec, expert_score, format_table,
+                     run_experiments)
 
 __all__ = [
     "DEFAULT_OPTIMIZERS", "ExperimentConfig", "OptimizerSpec",
-    "SMOKE_WORKLOADS", "format_table", "run_experiments",
+    "SMOKE_WORKLOADS", "expert_score", "format_table", "run_experiments",
 ]

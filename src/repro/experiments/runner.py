@@ -107,7 +107,10 @@ def _tune_once(workload: str, spec: OptimizerSpec, iterations: int,
             "best_mapper": res.best_mapper}
 
 
-def _expert_score(workload: str) -> Optional[float]:
+def expert_score(workload: str) -> Optional[float]:
+    """Score of the workload's expert-written mapper (None when the
+    workload ships no expert).  The sweep's normalization denominator
+    and the fleet racer's early-termination bar."""
     from ..asi import registry
     wl = registry.get(workload)
     expert = getattr(wl, "expert_mapper", None)
@@ -115,6 +118,9 @@ def _expert_score(workload: str) -> Optional[float]:
         return None
     fb = wl.evaluator()(expert)
     return _null(fb.score)
+
+
+_expert_score = expert_score     # backwards-compatible private alias
 
 
 def _mean_curve(runs: Dict[str, Dict]) -> List[Optional[float]]:

@@ -1,0 +1,44 @@
+"""repro.fleet -- fleet-scale portfolio racing over the mapper store.
+
+No single optimizer wins everywhere (the ``repro.experiments`` sweep
+shows trace, OPRO, annealing, and the bandit each winning somewhere), so
+the fleet layer races a *portfolio*: one worker process per
+:class:`~repro.experiments.OptimizerSpec`, all tuning the same workload
+against the shared sqlite :class:`~repro.service.store.MapperStore`,
+first lane past the expert bar wins (the paper's M1-Parallel
+first-successful-rollout rule).
+
+* :func:`run_race` / :class:`RaceConfig` / :class:`RaceResult` -- spawn
+  the lanes, poll their status files, stop everyone when the bar is
+  cleared, write the ``race_log.json`` audit trail.
+* :class:`RaceController` -- the pure race policy (leaderboard, early
+  termination, cross-pollination of the leader's best decisions into
+  trailing agentic lanes), testable on a fake clock.
+* :func:`run_lane` -- one lane: a checkpointed Tuner that heartbeats
+  ``status.json``, publishes every improvement immediately, honours the
+  STOP file at iteration boundaries, and resumes warm after a kill.
+  Also a standalone CLI (``python -m repro.fleet.worker``) for lanes on
+  other hosts sharing the race directory.
+* :class:`LaneFiles` / :class:`LaneStatus` -- the filesystem protocol
+  between controller and lanes (atomic JSON status, STOP files,
+  sequence-numbered hints).
+* :func:`run_contention` -- the N-process store-contention harness
+  backing the zero-lost-writes guarantee.
+* :data:`DEFAULT_PORTFOLIO` -- the stock 4-lane portfolio
+  (trace, opro, annealing, bandit).
+
+CLI: ``python -m repro.fleet <workload> [--lanes ...]``.
+See docs/fleet.md.
+"""
+
+from .race import (DEFAULT_PORTFOLIO, RaceConfig, RaceController,
+                   RaceResult, format_race, run_race)
+from .state import LaneFiles, LaneStatus
+from .stress import run_contention
+from .worker import run_lane
+
+__all__ = [
+    "DEFAULT_PORTFOLIO", "LaneFiles", "LaneStatus", "RaceConfig",
+    "RaceController", "RaceResult", "format_race", "run_contention",
+    "run_lane", "run_race",
+]

@@ -1,0 +1,60 @@
+"""CLI: race an optimizer portfolio over a workload.
+
+::
+
+    python -m repro.fleet circuit --iterations 20
+    python -m repro.fleet pennant --lanes asi-trace,bandit \
+        --store mappers.sqlite --run-dir /tmp/race1 --bar-margin 1.0
+
+Lanes come from the stock portfolio by name; the winner's mapper lands
+in the store (``--store``) exactly like a TuningService job's would.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .race import DEFAULT_PORTFOLIO, RaceConfig, format_race, run_race
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.fleet",
+                                 description=__doc__)
+    ap.add_argument("workload", help="registry workload name")
+    ap.add_argument("--lanes", default=None,
+                    help="comma-separated portfolio lane names "
+                         f"(default: all of "
+                         f"{','.join(s.name for s in DEFAULT_PORTFOLIO)})")
+    ap.add_argument("--iterations", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bar", type=float, default=None,
+                    help="early-termination bar in seconds "
+                         "(default: the workload's expert score)")
+    ap.add_argument("--bar-margin", type=float, default=1.0)
+    ap.add_argument("--poll", type=float, default=0.05)
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="per-iteration lane sleep (smoke races)")
+    ap.add_argument("--run-dir", default=None)
+    ap.add_argument("--store", default=None)
+    args = ap.parse_args(argv)
+
+    portfolio = DEFAULT_PORTFOLIO
+    if args.lanes:
+        by_name = {s.name: s for s in DEFAULT_PORTFOLIO}
+        try:
+            portfolio = tuple(by_name[n] for n in args.lanes.split(","))
+        except KeyError as e:
+            ap.error(f"unknown lane {e.args[0]!r}; "
+                     f"choose from {sorted(by_name)}")
+    result = run_race(RaceConfig(
+        workload=args.workload, portfolio=portfolio,
+        iterations=args.iterations, seed=args.seed, bar=args.bar,
+        bar_margin=args.bar_margin, poll_s=args.poll, pace_s=args.pace,
+        run_dir=args.run_dir, store=args.store))
+    print(format_race(result))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

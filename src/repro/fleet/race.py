@@ -1,0 +1,333 @@
+"""Portfolio racing: N optimizer lanes, one leaderboard, first past the
+bar wins.
+
+The paper's M1-Parallel lesson (and CompyMac's ParallelStepExecutor):
+when optimizer quality varies wildly across workloads, racing a
+*portfolio* of strategies and taking the first success beats betting the
+whole budget on any single one.  Here every
+:class:`~repro.experiments.OptimizerSpec` of the portfolio becomes a
+worker process running a checkpointed Tuner over the same workload
+against the shared sqlite :class:`~repro.service.store.MapperStore`; the
+:class:`RaceController` polls their status files and
+
+* **terminates early**: the moment any lane's best beats the bar (the
+  workload's expert score by default), every other lane gets a STOP file
+  and stands down at its next iteration boundary -- no budget is burned
+  polishing a race that is already won;
+* **cross-pollinates**: while the race runs, the leader's best decisions
+  are posted to trailing *agentic* lanes (OPRO/Trace), whose next prompt
+  carries the rival's configuration -- laggards climb from the leader's
+  shoulders instead of their own local optimum.
+
+The controller itself is pure ``observe(statuses) -> actions`` over an
+injectable clock, so race semantics are unit-testable without processes;
+:func:`run_race` is the driver that owns the actual spawning, polling,
+and teardown.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import re
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..experiments import OptimizerSpec
+from .state import LaneFiles, LaneStatus
+from .worker import _lane_proc
+
+#: The default racing portfolio: both agentic ASI arms plus the two
+#: scalar baselines that win elsewhere (annealing on smooth landscapes,
+#: the bandit on small discrete ones) -- one lane per failure mode.
+DEFAULT_PORTFOLIO: Tuple[OptimizerSpec, ...] = (
+    OptimizerSpec("asi-trace", "trace", "full", agentic=True),
+    OptimizerSpec("asi-opro", "opro", "full", agentic=True),
+    OptimizerSpec("annealing", "annealing", "scalar"),
+    OptimizerSpec("bandit", "bandit", "scalar"),
+)
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", s)
+
+
+@dataclass
+class RaceConfig:
+    """One race: a workload, a portfolio, a bar, and pacing knobs."""
+
+    workload: str
+    portfolio: Sequence[OptimizerSpec] = DEFAULT_PORTFOLIO
+    iterations: int = 20
+    seed: int = 0
+    batch: int = 1
+    #: Early-termination bar (seconds; a lane wins by scoring strictly
+    #: below it).  None derives it from the workload's expert mapper
+    #: (``expert_score * bar_margin``); workloads without an expert race
+    #: to completion and the best lane wins on points.
+    bar: Optional[float] = None
+    bar_margin: float = 1.0
+    poll_s: float = 0.05
+    #: Per-iteration lane sleep (see ``run_lane``): >0 for smoke races
+    #: whose evaluators are far faster than any real compile.
+    pace_s: float = 0.0
+    #: After the bar is cleared, how long to wait for lanes to notice
+    #: their STOP files before hard-terminating them.
+    grace_s: float = 10.0
+    run_dir: Optional[str] = None
+    store: Optional[str] = None
+
+
+class RaceController:
+    """Pure race semantics: leaderboard, bar, stops, cross-pollination.
+
+    Feed it lane statuses via :meth:`observe`; it returns the actions to
+    apply (lanes to stop, hints to post) and appends to ``events`` --
+    the audit log the benchmark and docs call the *race log*.  The clock
+    is injectable so every policy is testable on fake time.
+    """
+
+    def __init__(self, bar: Optional[float], lanes: Sequence[str],
+                 agentic: Optional[Dict[str, bool]] = None,
+                 clock=time.time):
+        self.bar = bar
+        self.lanes = list(lanes)
+        self.agentic = dict(agentic or {})
+        self.clock = clock
+        self.events: List[Dict] = []
+        self.winner: Optional[str] = None
+        self.bar_cleared_at: Optional[float] = None
+        self.leader: Optional[str] = None
+        self._seq = 0
+        self._stopped = set()
+        self._states: Dict[str, str] = {}
+        self._hinted: Dict[str, float] = {}   # lane -> leader score sent
+
+    def note(self, event: str, **kw) -> None:
+        """Append an event to the race log (drivers record external
+        facts -- spawns, terminations -- through the same log)."""
+        self.events.append({"t": self.clock(), "event": event, **kw})
+
+    def observe(self, statuses: Dict[str, Optional[LaneStatus]]) -> Dict:
+        """Fold one poll of lane statuses into the race.
+
+        Returns ``{"stop": [lane, ...], "hints": {lane: payload}}`` --
+        idempotent to apply: a lane is asked to stop once, and a given
+        leader best is hinted to a given laggard once.
+        """
+        actions: Dict = {"stop": [], "hints": {}}
+        for lane in self.lanes:
+            st = statuses.get(lane)
+            if st is not None and st.state != self._states.get(lane):
+                self._states[lane] = st.state
+                self.note("lane_state", lane=lane, state=st.state,
+                          iteration=st.iteration, score=st.best_score)
+        scored = [(st.best_score, lane) for lane, st in statuses.items()
+                  if st is not None and st.best_score is not None]
+        if not scored:
+            return actions
+        best_score, best_lane = min(scored)
+        if best_lane != self.leader:
+            self.leader = best_lane
+            self.note("lead_change", lane=best_lane, score=best_score)
+
+        # -- early termination: first lane strictly under the bar wins ------
+        if (self.bar is not None and self.winner is None
+                and best_score < self.bar):
+            self.winner = best_lane
+            self.bar_cleared_at = self.clock()
+            self.note("bar_cleared", lane=best_lane, score=best_score,
+                      bar=self.bar)
+            for lane in self.lanes:
+                st = statuses.get(lane)
+                if lane in self._stopped:
+                    continue
+                if st is None or st.running():
+                    actions["stop"].append(lane)
+                    self._stopped.add(lane)
+                    if lane != best_lane:
+                        self.note("early_termination", lane=lane,
+                                  beaten_by=best_lane)
+            return actions
+
+        # -- cross-pollination: leader's best -> trailing agentic lanes -----
+        if self.winner is None:
+            leader_st = statuses.get(best_lane)
+            decisions = (leader_st.best_decisions
+                         if leader_st is not None else None)
+            if decisions:
+                for lane in self.lanes:
+                    st = statuses.get(lane)
+                    if (lane == best_lane
+                            or not self.agentic.get(lane)
+                            or st is None or not st.running()):
+                        continue
+                    if (st.best_score is not None
+                            and st.best_score <= best_score):
+                        continue          # not actually trailing
+                    if self._hinted.get(lane) == best_score:
+                        continue          # this leader best already sent
+                    self._seq += 1
+                    actions["hints"][lane] = {
+                        "seq": self._seq, "decisions": decisions,
+                        "score": best_score, "from": best_lane}
+                    self._hinted[lane] = best_score
+                    self.note("cross_pollinate", lane=lane,
+                              source=best_lane, score=best_score)
+        return actions
+
+
+@dataclass
+class RaceResult:
+    """Outcome of one :func:`run_race` (also written to the race log)."""
+
+    workload: str
+    bar: Optional[float]
+    winner: Optional[str]          # lane that cleared the bar (or None)
+    best_lane: Optional[str]       # lowest-scoring lane overall
+    best_score: Optional[float]
+    artifact_id: Optional[str]
+    wall_s: float
+    #: bar_cleared timestamp minus the winning lane's own start -- the
+    #: spawn-overhead-free 'time to beat the expert' the benchmark
+    #: compares against single-lane runs.
+    time_to_bar: Optional[float]
+    lanes: Dict[str, Optional[Dict]] = field(default_factory=dict)
+    events: List[Dict] = field(default_factory=list)
+    run_dir: str = ""
+    store_path: str = ""
+    log_path: str = ""
+
+    def to_dict(self) -> Dict:
+        from dataclasses import asdict
+        return asdict(self)
+
+
+def run_race(cfg: RaceConfig) -> RaceResult:
+    """Race ``cfg.portfolio`` over ``cfg.workload``; returns the result
+    and writes ``race_log.json`` into the run directory."""
+    import multiprocessing
+
+    from ..asi import registry
+    from ..service import MapperStore
+
+    wl = registry.get(cfg.workload)
+    run_dir = cfg.run_dir or tempfile.mkdtemp(prefix="fleet-race-")
+    os.makedirs(run_dir, exist_ok=True)
+    store_path = cfg.store or os.path.join(run_dir, "store.sqlite")
+    MapperStore(store_path).close()    # create before workers race to
+    bar = cfg.bar
+    if bar is None:
+        from ..experiments import expert_score
+        ref = expert_score(cfg.workload)
+        bar = ref * cfg.bar_margin if ref is not None else None
+    race_id = os.path.basename(os.path.abspath(run_dir))
+
+    ctx = multiprocessing.get_context("spawn")
+    lanes: Dict[str, LaneFiles] = {}
+    procs: Dict[str, object] = {}
+    for spec in cfg.portfolio:
+        files = LaneFiles(os.path.join(run_dir, "lanes", _slug(spec.name)))
+        lanes[spec.name] = files
+        procs[spec.name] = ctx.Process(
+            target=_lane_proc,
+            args=(files.root, store_path, cfg.workload, spec.strategy,
+                  cfg.iterations, cfg.seed, cfg.batch, spec.feedback_level,
+                  cfg.pace_s, race_id, spec.name),
+            daemon=True)
+
+    controller = RaceController(
+        bar, list(lanes), {s.name: s.agentic for s in cfg.portfolio})
+    controller.note("race_start", workload=wl.name, bar=bar,
+                    lanes=list(lanes), iterations=cfg.iterations)
+    t0 = time.time()
+    for p in procs.values():
+        p.start()
+
+    deadline = None
+    while True:
+        statuses = {n: f.read_status() for n, f in lanes.items()}
+        actions = controller.observe(statuses)
+        for n in actions["stop"]:
+            lanes[n].request_stop("bar cleared")
+        for n, h in actions["hints"].items():
+            lanes[n].post_hint(h["decisions"], score=h["score"],
+                               seq=h["seq"], source=h["from"])
+        alive = [n for n, p in procs.items() if p.is_alive()]
+        if not alive:
+            break
+        if controller.winner is not None:
+            if deadline is None:
+                deadline = time.time() + cfg.grace_s
+            elif time.time() > deadline:
+                # lanes that never reached an iteration boundary within
+                # the grace window (e.g. wedged evaluator): hard stop
+                for n in alive:
+                    procs[n].terminate()
+                    controller.note("terminated", lane=n)
+                break
+        time.sleep(cfg.poll_s)
+    for p in procs.values():
+        p.join(timeout=10)
+    statuses = {n: f.read_status() for n, f in lanes.items()}
+    controller.observe(statuses)      # fold final lane states into the log
+    wall_s = time.time() - t0
+
+    best_lane, best_score = None, None
+    for n, st in statuses.items():
+        if st is not None and st.best_score is not None and (
+                best_score is None or st.best_score < best_score):
+            best_lane, best_score = n, st.best_score
+    time_to_bar = None
+    if controller.winner is not None:
+        wst = statuses.get(controller.winner)
+        start = (wst.started if wst is not None and wst.started else t0)
+        time_to_bar = max(0.0, controller.bar_cleared_at - start)
+    store = MapperStore(store_path)
+    art = store.best(wl.name)
+    store.close()
+
+    result = RaceResult(
+        workload=wl.name, bar=bar, winner=controller.winner,
+        best_lane=best_lane, best_score=best_score,
+        artifact_id=art.id if art is not None else None,
+        wall_s=wall_s, time_to_bar=time_to_bar,
+        lanes={n: (st.to_dict() if st is not None else None)
+               for n, st in statuses.items()},
+        events=controller.events, run_dir=run_dir, store_path=store_path,
+        log_path=os.path.join(run_dir, "race_log.json"))
+    payload = result.to_dict()
+    # strict JSON: statuses may carry inf best scores from invalid lanes
+    with open(result.log_path, "w") as f:
+        json.dump(json.loads(json.dumps(payload, default=str)), f,
+                  indent=2)
+    return result
+
+
+def format_race(result: RaceResult) -> str:
+    """One-screen human summary of a race (the CLI's output)."""
+    lines = [f"race over {result.workload!r}: bar="
+             f"{result.bar if result.bar is not None else 'none'} "
+             f"wall={result.wall_s:.2f}s"]
+    for lane, st in result.lanes.items():
+        if st is None:
+            lines.append(f"  {lane:<12} (no status)")
+            continue
+        score = st.get("best_score")
+        score_s = (f"{score:.4g}s" if isinstance(score, (int, float))
+                   and math.isfinite(score) else "--")
+        mark = " <- winner" if lane == result.winner else ""
+        lines.append(f"  {lane:<12} {st.get('state'):<9} "
+                     f"iter={st.get('iteration'):<3} best={score_s}{mark}")
+    if result.winner:
+        lines.append(f"bar cleared by {result.winner} in "
+                     f"{result.time_to_bar:.2f}s; "
+                     f"{sum(1 for e in result.events if e['event'] == 'early_termination')} "
+                     "lane(s) stopped early")
+    else:
+        lines.append(f"bar not cleared; best lane {result.best_lane}")
+    lines.append(f"log: {result.log_path}")
+    return "\n".join(lines)

@@ -1,0 +1,135 @@
+"""Lane state over the filesystem: atomic JSON status + control files.
+
+Racing lanes are separate *processes* (possibly separate hosts sharing a
+filesystem), so the controller<->lane channel is deliberately the dumbest
+thing that is multi-host-ready: one directory per lane holding
+
+* ``status.json``  -- lane -> controller heartbeat (atomic replace, so a
+  reader never sees a torn write);
+* ``STOP``         -- controller -> lane early-termination request; the
+  Tuner polls it at every iteration boundary;
+* ``hint.json``    -- controller -> lane cross-pollination payload (the
+  leader's best decisions); sequence-numbered so a lane injects each
+  hint once, not once per iteration;
+* ``tuner.ckpt.json`` (+ ``.evalcache``) -- the lane's Tuner checkpoint:
+  a killed worker rejoins the race warm.
+
+Everything here is plain files and :func:`os.replace`; there are no
+locks to leak and no sockets to reconnect.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+#: Lane lifecycle: starting -> running -> finished | stopped | failed.
+LANE_STATES = ("starting", "running", "finished", "stopped", "failed")
+
+
+def write_json_atomic(path: str, payload: Dict) -> None:
+    """Write ``payload`` as JSON via a same-directory tmp + rename, so
+    concurrent readers see either the old or the new file, never half."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+
+
+def read_json(path: str) -> Optional[Dict]:
+    """Parse ``path`` as JSON; None when missing or mid-write garbage
+    (callers poll -- a transiently unreadable file is just 'no news')."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+@dataclass
+class LaneStatus:
+    """One lane's heartbeat, as written to its ``status.json``."""
+
+    lane: str
+    strategy: str = ""
+    state: str = "starting"
+    iteration: int = 0
+    best_score: Optional[float] = None
+    best_decisions: Optional[Dict] = None
+    started: Optional[float] = None     # wall-clock (time.time)
+    updated: Optional[float] = None
+    pid: Optional[int] = None
+    error: Optional[str] = None
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LaneStatus":
+        known = {f for f in cls.__dataclass_fields__}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def running(self) -> bool:
+        return self.state in ("starting", "running")
+
+
+class LaneFiles:
+    """The file layout of one lane directory (see module docstring)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.status_path = os.path.join(root, "status.json")
+        self.hint_path = os.path.join(root, "hint.json")
+        self.stop_path = os.path.join(root, "STOP")
+        self.ckpt_path = os.path.join(root, "tuner.ckpt.json")
+        self._consumed_seq: Optional[int] = None
+
+    # -- status --------------------------------------------------------------
+    def write_status(self, status: LaneStatus) -> None:
+        write_json_atomic(self.status_path, status.to_dict())
+
+    def read_status(self) -> Optional[LaneStatus]:
+        d = read_json(self.status_path)
+        return LaneStatus.from_dict(d) if d else None
+
+    # -- early termination ---------------------------------------------------
+    def request_stop(self, reason: str = "") -> None:
+        """Ask the lane to stand down at its next iteration boundary."""
+        tmp = f"{self.stop_path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(reason + "\n")
+        os.replace(tmp, self.stop_path)
+
+    def stop_requested(self) -> bool:
+        """The lane's cooperative stop flag (Tuner ``stop=`` hook)."""
+        return os.path.exists(self.stop_path)
+
+    # -- cross-pollination ---------------------------------------------------
+    def post_hint(self, decisions: Dict, score: Optional[float] = None,
+                  seq: Optional[int] = None,
+                  source: Optional[str] = None) -> int:
+        """Publish a hint for the lane (controller side).  A new hint
+        replaces any unconsumed previous one -- lanes always see the
+        freshest leader state, not a backlog."""
+        if seq is None:
+            prev = read_json(self.hint_path)
+            seq = int(prev.get("seq", 0)) + 1 if prev else 1
+        write_json_atomic(self.hint_path, {
+            "seq": seq, "decisions": decisions, "score": score,
+            "from": source})
+        return seq
+
+    def take_hint(self) -> Optional[Dict]:
+        """Consume the pending hint (lane side; Tuner ``hints=`` hook).
+
+        Returns ``{"decisions": ..., "score": ...}`` the first time a
+        given sequence number is seen and None thereafter, so one posted
+        hint is injected into the search exactly once."""
+        d = read_json(self.hint_path)
+        if not d or d.get("seq") == self._consumed_seq:
+            return None
+        self._consumed_seq = d.get("seq")
+        return {"decisions": d.get("decisions"), "score": d.get("score")}

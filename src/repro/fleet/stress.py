@@ -1,0 +1,124 @@
+"""Multi-process MapperStore contention harness.
+
+The fleet's correctness floor: N worker processes hammering
+``publish_result`` against one sqlite store file must lose *zero*
+writes and leak *zero* "database is locked" errors -- that is what the
+WAL + busy-timeout + bounded-retry hardening in
+:mod:`repro.service.store` buys.  :func:`run_contention` is the
+executable form of that claim; the contention test and the
+``BENCH_fleet.json`` benchmark both run it.
+
+Workers synchronize their start through ready-files in a shared
+directory (the same filesystem-only idiom the racer uses), so all N
+processes hit the store at once instead of trickling in as the pool
+spins up.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from types import SimpleNamespace
+from typing import Dict
+
+
+class _StressWorkload:
+    """Duck-typed workload: just enough identity to publish under."""
+
+    name = "stress"
+    substrate = "stress"
+
+    def mesh_geometry(self) -> str:
+        return "1x1"
+
+
+def hammer(store_path: str, sync_dir: str, worker_id: int, n_workers: int,
+           n_puts: int) -> Dict:
+    """One contention worker (top-level: spawn-picklable).
+
+    Publishes ``n_puts`` distinct artifacts with deterministic scores --
+    worker 0's first put is the global best (score 1.0) -- and reports
+    how many sqlite lock errors escaped the store's retry layer
+    (expected: zero)."""
+    from ..service import MapperStore, publish_result
+
+    # barrier via ready-files: start hammering only when every worker
+    # is up, so the store sees truly concurrent writers, not a trickle
+    with open(os.path.join(sync_dir, f"ready-{worker_id}"), "w"):
+        pass
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        ready = [n for n in os.listdir(sync_dir) if n.startswith("ready-")]
+        if len(ready) >= n_workers:
+            break
+        time.sleep(0.005)
+
+    store = MapperStore(store_path)
+    wl = _StressWorkload()
+    locked = 0
+    published = 0
+    try:
+        for i in range(n_puts):
+            k = worker_id * n_puts + i
+            res = SimpleNamespace(
+                best_score=1.0 + k * 1e-6,
+                best_mapper=f"-- stress mapper w{worker_id} i{i}")
+            try:
+                publish_result(store, wl, res,
+                               provenance={"source": "stress",
+                                           "worker": worker_id, "put": i})
+                published += 1
+            except Exception as e:   # pragma: no cover - the failure mode
+                if "locked" in str(e).lower() or "busy" in str(e).lower():
+                    locked += 1
+                else:
+                    raise
+    finally:
+        store.close()
+    return {"worker": worker_id, "published": published, "locked": locked,
+            "journal_mode": store.journal_mode}
+
+
+def run_contention(store_path: str, sync_dir: str, *, n_procs: int = 4,
+                   n_puts: int = 25, timeout_s: float = 120.0) -> Dict:
+    """Hammer ``store_path`` from ``n_procs`` spawned processes.
+
+    Returns a summary with the invariants the caller asserts on:
+    ``lost == 0`` (every publish landed as an artifact), ``locked == 0``
+    (no lock error escaped the retry layer), and ``best_ok`` (the global
+    best survived the stampede).
+    """
+    import multiprocessing
+    from concurrent.futures import ProcessPoolExecutor
+
+    from ..service import MapperStore
+
+    os.makedirs(sync_dir, exist_ok=True)
+    MapperStore(store_path).close()    # create once, before the stampede
+    ctx = multiprocessing.get_context("spawn")
+    t0 = time.time()
+    with ProcessPoolExecutor(max_workers=n_procs, mp_context=ctx) as pool:
+        futs = [pool.submit(hammer, store_path, sync_dir, w, n_procs,
+                            n_puts)
+                for w in range(n_procs)]
+        outs = [f.result(timeout=timeout_s) for f in futs]
+    wall_s = time.time() - t0
+
+    store = MapperStore(store_path)
+    artifacts = len(store)
+    best = store.best("stress")
+    journal_mode = store.journal_mode
+    store.close()
+    expected = n_procs * n_puts
+    return {
+        "procs": n_procs,
+        "puts": expected,
+        "artifacts": artifacts,
+        "lost": expected - artifacts,
+        "locked": sum(o["locked"] for o in outs),
+        "published": sum(o["published"] for o in outs),
+        "best_score": best.score if best is not None else None,
+        "best_ok": best is not None and abs(best.score - 1.0) < 1e-12,
+        "journal_mode": journal_mode,
+        "wall_s": wall_s,
+    }

@@ -1,0 +1,158 @@
+"""One racing lane: a Tuner run wired to its lane directory.
+
+:func:`run_lane` is the whole worker -- it heartbeats ``status.json``
+every iteration, publishes every improvement to the shared
+:class:`~repro.service.store.MapperStore` as it happens (so the race
+controller and rival lanes see progress mid-run, not only at the end),
+honours the ``STOP`` file at iteration boundaries, injects posted hints
+into its search, and checkpoints after every iteration so a killed
+worker rejoins the race warm (``tuner.ckpt.json`` + ``.evalcache``).
+
+It runs three ways with the same code path: in-process (tests), as a
+spawned child of :func:`repro.fleet.race.run_race` (the single-host
+racer), or standalone via ``python -m repro.fleet.worker`` on another
+host sharing the race directory and store file (multi-host).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+import traceback
+from types import SimpleNamespace
+from typing import Dict, Optional
+
+from .state import LaneFiles, LaneStatus
+
+
+def run_lane(lane_dir: str, store_path: str, workload: str, strategy: str,
+             iterations: int, *, seed: int = 0, batch: int = 1,
+             feedback_level: str = "full", pace_s: float = 0.0,
+             race_id: str = "", lane: Optional[str] = None) -> Dict:
+    """Run one lane to completion (or early termination); returns a
+    summary dict.
+
+    ``pace_s`` sleeps after each iteration -- raceable workloads with
+    millisecond evaluators would otherwise finish before the controller
+    ever polls, which makes both tests and the smoke benchmark
+    spawn-noise instead of race semantics.  Production lanes (real
+    compiles per iteration) run with ``pace_s=0``.
+    """
+    from ..asi import Tuner, registry
+    from ..service import MapperStore, publish_result
+
+    files = LaneFiles(lane_dir)
+    lane = lane or os.path.basename(os.path.abspath(lane_dir))
+    status = LaneStatus(lane=lane, strategy=strategy, state="starting",
+                        started=time.time(), pid=os.getpid())
+    files.write_status(status)
+    wl = registry.get(workload)
+    store = MapperStore(store_path)
+    published: Dict[str, Optional[float]] = {"score": None}
+
+    def heartbeat(s):
+        best = s.full.best()
+        status.state = "running"
+        status.iteration = s.iteration
+        status.best_score = s.best_valid
+        if best is not None and best.score is not None:
+            status.best_decisions = best.values
+            # publish improvements immediately: first-successful-wins
+            # needs the winning artifact in the store the moment it
+            # exists, not when the lane winds down
+            if (published["score"] is None
+                    or best.score < published["score"]):
+                publish_result(
+                    store, wl,
+                    SimpleNamespace(best_score=best.score,
+                                    best_mapper=best.mapper),
+                    provenance={"source": "fleet", "race": race_id,
+                                "lane": lane, "strategy": strategy,
+                                "iteration": s.iteration, "seed": seed,
+                                "feedback_level": feedback_level})
+                published["score"] = best.score
+        status.updated = time.time()
+        files.write_status(status)
+        if pace_s:
+            time.sleep(pace_s)
+
+    resumed = os.path.exists(files.ckpt_path)
+    try:
+        if resumed:
+            tuner = Tuner.from_checkpoint(files.ckpt_path,
+                                          iterations=iterations,
+                                          workload=wl)
+            tuner.stop = files.stop_requested
+            tuner.hints = files.take_hint
+            tuner.on_iteration = heartbeat
+            result = tuner.resume()
+        else:
+            tuner = Tuner(workload=wl, strategy=strategy,
+                          iterations=iterations, batch=batch, seed=seed,
+                          feedback_level=feedback_level,
+                          checkpoint=files.ckpt_path,
+                          stop=files.stop_requested,
+                          hints=files.take_hint, on_iteration=heartbeat)
+            result = tuner.run()
+    except Exception:
+        status.state = "failed"
+        status.error = traceback.format_exc(limit=8)
+        status.updated = time.time()
+        files.write_status(status)
+        store.close()
+        return {"lane": lane, "state": "failed", "resumed": resumed,
+                "error": status.error}
+    status.state = "stopped" if result.stopped else "finished"
+    if math.isfinite(result.best_score):
+        status.best_score = float(result.best_score)
+    status.updated = time.time()
+    files.write_status(status)
+    store.close()
+    return {"lane": lane, "state": status.state, "resumed": resumed,
+            "stopped": bool(result.stopped),
+            "best_score": status.best_score,
+            "iteration": status.iteration}
+
+
+def _lane_proc(lane_dir, store_path, workload, strategy, iterations, seed,
+               batch, feedback_level, pace_s, race_id, lane):
+    """Spawn-context process target (top-level, positional, picklable)."""
+    run_lane(lane_dir, store_path, workload, strategy, iterations,
+             seed=seed, batch=batch, feedback_level=feedback_level,
+             pace_s=pace_s, race_id=race_id, lane=lane)
+
+
+def main(argv=None) -> int:
+    """``python -m repro.fleet.worker`` -- run one lane standalone.
+
+    The multi-host entry: point ``--lane-dir``/``--store`` at a shared
+    filesystem and a controller anywhere else drives this lane through
+    its STOP/hint files."""
+    ap = argparse.ArgumentParser(prog="python -m repro.fleet.worker",
+                                 description=main.__doc__)
+    ap.add_argument("--lane-dir", required=True)
+    ap.add_argument("--store", required=True, help="MapperStore path")
+    ap.add_argument("--workload", required=True)
+    ap.add_argument("--strategy", default="trace")
+    ap.add_argument("--iterations", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--feedback-level", default="full")
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="seconds to sleep per iteration (smoke races)")
+    ap.add_argument("--race-id", default="")
+    ap.add_argument("--lane", default=None)
+    args = ap.parse_args(argv)
+    out = run_lane(args.lane_dir, args.store, args.workload, args.strategy,
+                   args.iterations, seed=args.seed, batch=args.batch,
+                   feedback_level=args.feedback_level, pace_s=args.pace,
+                   race_id=args.race_id, lane=args.lane)
+    print(json.dumps(out, indent=2))
+    return 0 if out.get("state") != "failed" else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

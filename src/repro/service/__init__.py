@@ -22,14 +22,16 @@ CLI: ``python -m repro.service {submit,status,best,export,gc}``.
 See docs/serving.md.
 """
 
-from .jobs import JOB_STATES, Job, JobSpec, TuningService
+from .jobs import (JOB_STATES, DrainTimeout, Job, JobSpec,
+                   TuningService)
 from .resolve import Resolution, preset_mapper, resolve_mapper
 from .store import (MapperArtifact, MapperStore, mapper_fingerprint,
                     mesh_key, publish_result, workload_mesh,
                     workload_profile)
 
 __all__ = [
-    "JOB_STATES", "Job", "JobSpec", "MapperArtifact", "MapperStore",
+    "DrainTimeout", "JOB_STATES", "Job", "JobSpec", "MapperArtifact",
+    "MapperStore",
     "Resolution", "TuningService", "mapper_fingerprint", "mesh_key",
     "preset_mapper", "publish_result", "resolve_mapper", "workload_mesh",
     "workload_profile",

@@ -3,10 +3,19 @@
 VibeCodeHPC's lesson (PAPERS.md): an agent auto-tuner earns its keep
 only when it runs *continuously* -- a persistent job/artifact layer, not
 a one-shot script.  :class:`TuningService` is that layer: ``submit``
-enqueues a tuning run on a thread pool, ``status``/``cancel``/``drain``
+enqueues a tuning run on a worker pool, ``status``/``cancel``/``drain``
 manage it, and every completed run publishes its winner to the
 :class:`~repro.service.store.MapperStore` through the same
 ``publish_result`` path the Tuner hook and the experiments sweep use.
+
+Two pool backends front the same submit/status/cancel/drain API:
+
+* ``backend="thread"`` (default) -- jobs run on an in-process thread
+  pool; workloads may be registry names or ad-hoc instances.
+* ``backend="process"`` -- jobs run in spawned worker processes sharing
+  the sqlite store file (WAL + write retry make concurrent publishes
+  lossless); workloads must be registry *names* so the child can
+  reconstruct them.  This is the pool the fleet racer scales out on.
 
 Concurrency notes:
 
@@ -18,9 +27,14 @@ Concurrency notes:
   named by its (key x spec); a later submit with the same spec *resumes*
   from it -- including the evalengine's ``.evalcache`` sidecar, so
   already-paid compiles are never repaid across service restarts.
-* Workloads whose evaluators are not thread-safe stay safe: the Tuner's
-  own loop enforces ``parallel_safe`` per workload, and distinct jobs
-  touch distinct workload instances via the registry.
+* ``cancel`` of a *queued* job cancels it immediately; ``cancel`` of a
+  *running* job sets a cooperative stop flag the Tuner polls at every
+  iteration boundary -- the job halts, skips publication (a cancelled
+  run never overwrites the leaderboard), and transitions to
+  ``cancelled`` when the worker notices.
+* ``drain(timeout=...)`` raises :class:`DrainTimeout` naming the jobs
+  still pending; those jobs keep their consistent ``running``/``queued``
+  state and remain visible to ``status``/``cancel``.
 """
 
 from __future__ import annotations
@@ -29,6 +43,8 @@ import itertools
 import math
 import os
 import re
+import shutil
+import tempfile
 import threading
 import time
 import traceback
@@ -38,12 +54,32 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from .store import MapperStore, publish_result, workload_mesh
 
-#: Job lifecycle: queued -> running -> done | failed; queued -> cancelled.
+#: Job lifecycle: queued -> running -> done | failed | cancelled;
+#: queued -> cancelled.
 JOB_STATES = ("queued", "running", "done", "failed", "cancelled")
+
+#: Worker-pool backends a TuningService can run jobs on.
+BACKENDS = ("thread", "process")
 
 
 def _slug(s: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.-]+", "_", s)
+
+
+class DrainTimeout(TimeoutError):
+    """``drain(timeout=...)`` elapsed with jobs still in flight.
+
+    ``pending`` names the job ids that had not finished; they keep
+    running with consistent state -- ``status()`` still tracks them and
+    ``cancel()`` stops them -- instead of being silently orphaned.
+    """
+
+    def __init__(self, pending: List[str], timeout: Optional[float]):
+        self.pending = list(pending)
+        super().__init__(
+            f"{len(self.pending)} job(s) still running after {timeout}s: "
+            f"{', '.join(self.pending)}; they continue in the pool -- "
+            "status() tracks them, cancel() stops them")
 
 
 @dataclass
@@ -85,8 +121,14 @@ class Job:
     artifact_id: Optional[str] = None
     checkpoint: Optional[str] = None
     resumed: bool = False
+    cancel_requested: bool = False
     error: Optional[str] = None
     future: Optional[object] = field(default=None, repr=False)
+    #: Cooperative stop flag (thread backend polls the event; the
+    #: process backend additionally signals via ``stop_path``).
+    _stop: threading.Event = field(default_factory=threading.Event,
+                                   repr=False)
+    stop_path: Optional[str] = field(default=None, repr=False)
 
     def done(self) -> bool:
         return self.state in ("done", "failed", "cancelled")
@@ -99,21 +141,92 @@ class Job:
                 "best_score": self.best_score,
                 "artifact_id": self.artifact_id,
                 "checkpoint": self.checkpoint, "resumed": self.resumed,
+                "cancel_requested": self.cancel_requested,
                 "error": self.error}
 
 
+def _process_job(store_path: str, workload: str, spec: Dict,
+                 checkpoint: Optional[str], stop_path: Optional[str],
+                 job_id: str) -> Dict:
+    """Worker-process entry: run one Tuner job and publish its winner.
+
+    Top-level (picklable) on purpose.  The child opens its *own* store
+    connection on the shared sqlite file -- WAL + write retry make the
+    concurrent publish lossless -- and honours the cooperative stop file
+    at iteration boundaries, halting without publishing.
+    """
+    from ..asi import Tuner, registry
+    wl = registry.get(workload)
+    stop_fn = ((lambda: os.path.exists(stop_path)) if stop_path else None)
+    resumed = False
+    if checkpoint and os.path.exists(checkpoint):
+        tuner = Tuner.from_checkpoint(checkpoint,
+                                      iterations=spec["iterations"],
+                                      workload=wl)
+        tuner.stop = stop_fn
+        resumed = True
+        result = tuner.resume()
+    else:
+        tuner = Tuner(workload=wl, strategy=spec["strategy"],
+                      iterations=spec["iterations"], batch=spec["batch"],
+                      seed=spec["seed"],
+                      feedback_level=spec["feedback_level"],
+                      checkpoint=checkpoint, stop=stop_fn)
+        result = tuner.run()
+    out: Dict = {"resumed": resumed, "stopped": bool(result.stopped),
+                 "best_score": None, "artifact_id": None}
+    if result.stopped:
+        return out
+    store = MapperStore(store_path)
+    try:
+        artifact = publish_result(
+            store, wl, result,
+            provenance={"source": "service", "job": job_id,
+                        "backend": "process", "checkpoint": checkpoint,
+                        "resumed": resumed, **spec})
+    finally:
+        store.close()
+    if math.isfinite(result.best_score):
+        out["best_score"] = float(result.best_score)
+    out["artifact_id"] = artifact.id if artifact else None
+    return out
+
+
 class TuningService:
-    """Thread-pool tuning jobs that publish winners to a MapperStore."""
+    """Pooled tuning jobs that publish winners to a MapperStore.
+
+    ``backend`` selects the worker pool: ``"thread"`` (in-process) or
+    ``"process"`` (spawned workers sharing the store file; submit by
+    registry name).
+    """
 
     def __init__(self, store: Union[MapperStore, str], *, workers: int = 2,
-                 checkpoint_dir: Optional[str] = None):
+                 checkpoint_dir: Optional[str] = None,
+                 backend: str = "thread"):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {BACKENDS}")
         self.store = (store if isinstance(store, MapperStore)
                       else MapperStore(store))
+        self.backend = backend
         self.checkpoint_dir = checkpoint_dir
         if checkpoint_dir:
             os.makedirs(checkpoint_dir, exist_ok=True)
-        self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
-                                        thread_name_prefix="tuning")
+        if backend == "process":
+            import multiprocessing
+            from concurrent.futures import ProcessPoolExecutor
+            # spawn, not fork: worker processes re-import cleanly (JAX
+            # and thread pools do not survive forks), matching how a
+            # multi-host deployment would start them
+            self._pool = ProcessPoolExecutor(
+                max_workers=max(1, workers),
+                mp_context=multiprocessing.get_context("spawn"))
+            # stop files live here (cooperative cancel across processes)
+            self._run_dir = tempfile.mkdtemp(prefix="tuning-service-")
+        else:
+            self._pool = ThreadPoolExecutor(max_workers=max(1, workers),
+                                            thread_name_prefix="tuning")
+            self._run_dir = None
         self._lock = threading.Lock()
         self._jobs: Dict[str, Job] = {}
         self._inflight: Dict[Tuple[str, str], Job] = {}
@@ -125,10 +238,17 @@ class TuningService:
                feedback_level: str = "full") -> Job:
         """Enqueue a tuning run; returns its :class:`Job` immediately.
 
-        ``workload`` is a registry name or a ``Workload`` instance.  If a
-        job for the same ``(workload, mesh)`` store key is already queued
-        or running, that job is returned instead (in-flight dedup).
+        ``workload`` is a registry name or a ``Workload`` instance (the
+        process backend requires registry names: the worker process must
+        be able to reconstruct the workload).  If a job for the same
+        ``(workload, mesh)`` store key is already queued or running,
+        that job is returned instead (in-flight dedup).
         """
+        if self.backend == "process" and not isinstance(workload, str):
+            raise ValueError(
+                "backend='process' requires a registry workload name "
+                f"(got a {type(workload).__name__} instance): the worker "
+                "process reconstructs the workload from the registry")
         from ..asi import registry
         wl = registry.get(workload) if isinstance(workload, str) else workload
         spec = JobSpec(strategy=strategy, iterations=iterations, batch=batch,
@@ -149,12 +269,27 @@ class TuningService:
             # inside the lock: a concurrent drain()/cancel() must never
             # observe the job without its future (the worker's _run
             # re-acquires the lock, so this cannot deadlock)
-            job.future = self._pool.submit(self._run, job, wl)
+            if self.backend == "process":
+                job.stop_path = os.path.join(self._run_dir,
+                                             f"{job.id}.stop")
+                job.started = time.time()    # pool start is opaque
+                job.state = "running"
+                job.future = self._pool.submit(
+                    _process_job, self.store.path, wl.name, spec.to_dict(),
+                    job.checkpoint, job.stop_path, job.id)
+                job.future.add_done_callback(
+                    lambda fut, j=job: self._finish_process(j, fut))
+            else:
+                job.future = self._pool.submit(self._run, job, wl)
         return job
 
     def _run(self, job: Job, wl) -> Job:
         with self._lock:
-            if job.state == "cancelled":
+            if job.state == "cancelled" or job._stop.is_set():
+                job.state = "cancelled"
+                job.finished = job.finished or time.time()
+                if self._inflight.get(job.key) is job:
+                    del self._inflight[job.key]
                 return job
             job.state = "running"
             job.started = time.time()
@@ -164,6 +299,7 @@ class TuningService:
                 tuner = Tuner.from_checkpoint(
                     job.checkpoint, iterations=job.spec.iterations,
                     workload=wl)
+                tuner.stop = job._stop
                 job.resumed = True
                 result = tuner.resume()
             else:
@@ -171,17 +307,23 @@ class TuningService:
                               iterations=job.spec.iterations,
                               batch=job.spec.batch, seed=job.spec.seed,
                               feedback_level=job.spec.feedback_level,
-                              checkpoint=job.checkpoint)
+                              checkpoint=job.checkpoint, stop=job._stop)
                 result = tuner.run()
-            artifact = publish_result(
-                self.store, wl, result,
-                provenance={"source": "service", "job": job.id,
-                            "checkpoint": job.checkpoint,
-                            "resumed": job.resumed, **job.spec.to_dict()})
-            if math.isfinite(result.best_score):
-                job.best_score = float(result.best_score)
-            job.artifact_id = artifact.id if artifact else None
-            job.state = "done"
+            if result.stopped:
+                # cancelled mid-run: halted at an iteration boundary,
+                # nothing published -- the leaderboard is untouched
+                job.state = "cancelled"
+            else:
+                artifact = publish_result(
+                    self.store, wl, result,
+                    provenance={"source": "service", "job": job.id,
+                                "checkpoint": job.checkpoint,
+                                "resumed": job.resumed,
+                                **job.spec.to_dict()})
+                if math.isfinite(result.best_score):
+                    job.best_score = float(result.best_score)
+                job.artifact_id = artifact.id if artifact else None
+                job.state = "done"
         except Exception:
             job.error = traceback.format_exc(limit=8)
             job.state = "failed"
@@ -191,6 +333,35 @@ class TuningService:
                 if self._inflight.get(job.key) is job:
                     del self._inflight[job.key]
         return job
+
+    def _finish_process(self, job: Job, fut) -> None:
+        """Fold a finished process-backend future into its Job.
+
+        Idempotent (drain calls it directly so results are visible the
+        moment ``wait`` returns, without racing the done-callback)."""
+        with self._lock:
+            if job.done():
+                return
+            if fut.cancelled():
+                job.state = "cancelled"
+            else:
+                err = fut.exception()
+                if err is not None:
+                    job.error = "".join(traceback.format_exception_only(
+                        type(err), err)).strip()
+                    job.state = "failed"
+                else:
+                    out = fut.result()
+                    job.resumed = bool(out.get("resumed"))
+                    if out.get("stopped"):
+                        job.state = "cancelled"
+                    else:
+                        job.best_score = out.get("best_score")
+                        job.artifact_id = out.get("artifact_id")
+                        job.state = "done"
+            job.finished = time.time()
+            if self._inflight.get(job.key) is job:
+                del self._inflight[job.key]
 
     # -- tracking ------------------------------------------------------------
     def status(self, job_id: Optional[str] = None):
@@ -208,35 +379,56 @@ class TuningService:
             return list(self._jobs.values())
 
     def cancel(self, job_id: str) -> bool:
-        """Cancel a *queued* job; running jobs are not interrupted
-        (tuning iterations are checkpointed, not killable mid-compile).
-        Returns True when the job was cancelled."""
+        """Cancel a job.  Queued jobs cancel immediately; running jobs
+        get a cooperative stop flag the Tuner polls at every iteration
+        boundary -- they halt, skip publication, and transition to
+        ``cancelled`` when the worker notices (a job that completes
+        before the next boundary still lands ``done``).  Returns True
+        when cancellation was initiated, False for already-finished
+        jobs."""
         with self._lock:
             job = self._jobs.get(job_id)
             if job is None:
                 raise KeyError(f"unknown job {job_id!r}")
-            if job.state != "queued":
+            if job.done():
                 return False
-            if job.future is not None and not job.future.cancel():
-                return False    # the pool already started it
-            job.state = "cancelled"
-            job.finished = time.time()
-            if self._inflight.get(job.key) is job:
-                del self._inflight[job.key]
+            if (job.state == "queued" and job.future is not None
+                    and job.future.cancel()):
+                job.state = "cancelled"
+                job.finished = time.time()
+                if self._inflight.get(job.key) is job:
+                    del self._inflight[job.key]
+                return True
+            # running (or started before cancel landed): cooperative stop
+            job.cancel_requested = True
+            job._stop.set()
+            if job.stop_path:
+                with open(job.stop_path, "w") as f:
+                    f.write("cancel\n")
             return True
 
     def drain(self, timeout: Optional[float] = None) -> List[Job]:
         """Wait for every submitted job to finish; returns all jobs.
-        Raises TimeoutError if ``timeout`` (seconds) elapses first."""
-        futures = [j.future for j in self.jobs() if j.future is not None]
-        done, pending = wait(futures, timeout=timeout)
+
+        Raises :class:`DrainTimeout` -- naming the still-pending job ids
+        -- if ``timeout`` (seconds) elapses first; the pending jobs keep
+        running with consistent state (``status()`` tracks them,
+        ``cancel()`` stops them)."""
+        by_future = {j.future: j for j in self.jobs()
+                     if j.future is not None}
+        done, pending = wait(list(by_future), timeout=timeout)
+        if self.backend == "process":
+            for fut in done:            # don't race the done-callback
+                self._finish_process(by_future[fut], fut)
         if pending:
-            raise TimeoutError(f"{len(pending)} job(s) still running "
-                               f"after {timeout}s")
+            raise DrainTimeout(sorted(by_future[f].id for f in pending),
+                               timeout)
         return self.jobs()
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)
+        if self._run_dir:
+            shutil.rmtree(self._run_dir, ignore_errors=True)
 
     def __enter__(self) -> "TuningService":
         return self
@@ -250,4 +442,5 @@ class TuningService:
             states: Dict[str, int] = {}
             for j in self._jobs.values():
                 states[j.state] = states.get(j.state, 0) + 1
-        return f"<TuningService jobs={states} store={self.store.path!r}>"
+        return (f"<TuningService backend={self.backend} jobs={states} "
+                f"store={self.store.path!r}>")

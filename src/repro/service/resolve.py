@@ -99,7 +99,10 @@ def resolve_mapper(store: Optional[MapperStore], workload, mesh=None, *,
         # mappers do not port across geometries -- a mismatched enqueue
         # would re-tune on every resolve without ever serving
         if wl is not None and (mkey is None or workload_mesh(wl) == mkey):
-            job = service.submit(wl)
+            # pass the registry name through when the caller gave one so
+            # process-backend services (name-only submit) can resolve too
+            job = service.submit(workload if isinstance(workload, str)
+                                 else wl)
     preset = preset_mapper(workload, step)
     if preset:
         return Resolution(preset, "preset", name, mkey, job=job,

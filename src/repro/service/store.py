@@ -23,6 +23,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import random
 import sqlite3
 import threading
 import time
@@ -183,65 +184,120 @@ class MapperArtifact:
 # ---------------------------------------------------------------------------
 # Store
 # ---------------------------------------------------------------------------
-class MapperStore:
-    """Content-addressed, versioned mapper registry over sqlite."""
+def _is_locked_error(err: BaseException) -> bool:
+    """A transient SQLITE_BUSY/SQLITE_LOCKED condition (another process
+    holds the write lock), as opposed to a real operational failure."""
+    msg = str(err).lower()
+    return "locked" in msg or "busy" in msg
 
-    def __init__(self, path: str):
+
+class MapperStore:
+    """Content-addressed, versioned mapper registry over sqlite.
+
+    Safe for concurrent use from threads *and* processes: connections
+    open in WAL journal mode (readers never block the writer and vice
+    versa) with a ``busy_timeout``, and every write retries with bounded
+    exponential backoff on transient ``database is locked`` errors -- a
+    fleet of worker processes hammering ``publish_result`` on one store
+    file never loses a published winner.
+    """
+
+    #: Write attempts on SQLITE_BUSY before giving up (on top of the
+    #: connection-level busy_timeout, which already waits inside sqlite).
+    _WRITE_RETRIES = 6
+
+    def __init__(self, path: str, *, timeout_s: float = 5.0):
         self.path = path
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         self._lock = threading.RLock()
-        self._conn = sqlite3.connect(path, check_same_thread=False)
-        with self._lock:
-            ver = int(self._conn.execute(
-                "PRAGMA user_version").fetchone()[0])
-            has_table = self._conn.execute(
-                "SELECT name FROM sqlite_master WHERE type='table' "
-                "AND name='artifacts'").fetchone() is not None
-            if has_table and ver not in (1, STORE_VERSION):
-                self._conn.close()
-                raise ValueError(
-                    f"mapper store {path!r} is schema version {ver}, "
-                    f"this code expects {STORE_VERSION}; migrate or "
-                    "start a fresh store")
-            if has_table and ver == 1:
-                # v1 -> v2: the device-profile axis.  Every pre-profile
-                # artifact was tuned on the healthy machine, so the new
-                # column backfills to "healthy"; ids and payloads are
-                # untouched (payloads without a profile field resolve
-                # as healthy on read).
-                self._conn.execute(
-                    "ALTER TABLE artifacts ADD COLUMN profile TEXT "
-                    "NOT NULL DEFAULT 'healthy'")
+        self._conn = sqlite3.connect(path, check_same_thread=False,
+                                     timeout=timeout_s)
+        self._conn.execute(f"PRAGMA busy_timeout = {int(timeout_s * 1000)}")
+        try:
+            # WAL lets concurrent worker processes read the leaderboard
+            # while another publishes; falls back silently where the
+            # filesystem cannot support it (some network mounts).
+            self.journal_mode = str(self._conn.execute(
+                "PRAGMA journal_mode = WAL").fetchone()[0]).lower()
+            self._conn.execute("PRAGMA synchronous = NORMAL")
+        except sqlite3.OperationalError:
+            self.journal_mode = "unknown"
+        self._retry_write(lambda: self._init_schema(path))
+
+    def _retry_write(self, fn):
+        """Run ``fn`` under the thread lock, retrying on transient lock
+        contention with bounded exponential backoff + jitter."""
+        delay = 0.01
+        for attempt in range(self._WRITE_RETRIES):
+            try:
+                with self._lock:
+                    return fn()
+            except sqlite3.OperationalError as e:
+                if not _is_locked_error(e) \
+                        or attempt == self._WRITE_RETRIES - 1:
+                    raise
+                try:
+                    with self._lock:
+                        self._conn.rollback()
+                except sqlite3.OperationalError:
+                    pass
+                time.sleep(delay * (1.0 + random.random()))
+                delay = min(delay * 2, 0.25)
+
+    def _init_schema(self, path: str) -> None:
+        ver = int(self._conn.execute(
+            "PRAGMA user_version").fetchone()[0])
+        has_table = self._conn.execute(
+            "SELECT name FROM sqlite_master WHERE type='table' "
+            "AND name='artifacts'").fetchone() is not None
+        if has_table and ver not in (1, STORE_VERSION):
+            self._conn.close()
+            raise ValueError(
+                f"mapper store {path!r} is schema version {ver}, "
+                f"this code expects {STORE_VERSION}; migrate or "
+                "start a fresh store")
+        if has_table and ver == 1:
+            # v1 -> v2: the device-profile axis.  Every pre-profile
+            # artifact was tuned on the healthy machine, so the new
+            # column backfills to "healthy"; ids and payloads are
+            # untouched (payloads without a profile field resolve
+            # as healthy on read).
             self._conn.execute(
-                f"PRAGMA user_version = {int(STORE_VERSION)}")
-            self._conn.execute(
-                "CREATE TABLE IF NOT EXISTS artifacts ("
-                "  id TEXT PRIMARY KEY,"
-                "  workload TEXT NOT NULL,"
-                "  substrate TEXT NOT NULL,"
-                "  mesh TEXT NOT NULL,"
-                "  profile TEXT NOT NULL DEFAULT 'healthy',"
-                "  fingerprint TEXT NOT NULL,"
-                "  score REAL,"
-                "  created REAL NOT NULL,"
-                "  payload TEXT NOT NULL)")
-            self._conn.execute(
-                "CREATE INDEX IF NOT EXISTS idx_artifacts_key "
-                "ON artifacts (workload, mesh)")
-            self._conn.execute(
-                "CREATE INDEX IF NOT EXISTS idx_artifacts_profile "
-                "ON artifacts (workload, mesh, profile)")
-            self._conn.commit()
+                "ALTER TABLE artifacts ADD COLUMN profile TEXT "
+                "NOT NULL DEFAULT 'healthy'")
+        self._conn.execute(
+            f"PRAGMA user_version = {int(STORE_VERSION)}")
+        self._conn.execute(
+            "CREATE TABLE IF NOT EXISTS artifacts ("
+            "  id TEXT PRIMARY KEY,"
+            "  workload TEXT NOT NULL,"
+            "  substrate TEXT NOT NULL,"
+            "  mesh TEXT NOT NULL,"
+            "  profile TEXT NOT NULL DEFAULT 'healthy',"
+            "  fingerprint TEXT NOT NULL,"
+            "  score REAL,"
+            "  created REAL NOT NULL,"
+            "  payload TEXT NOT NULL)")
+        self._conn.execute(
+            "CREATE INDEX IF NOT EXISTS idx_artifacts_key "
+            "ON artifacts (workload, mesh)")
+        self._conn.execute(
+            "CREATE INDEX IF NOT EXISTS idx_artifacts_profile "
+            "ON artifacts (workload, mesh, profile)")
+        self._conn.commit()
 
     # -- write --------------------------------------------------------------
     def put(self, artifact: MapperArtifact) -> MapperArtifact:
         """Insert (or idempotently refresh) an artifact; returns it with
-        its content address filled in."""
+        its content address filled in.  Retries on transient cross-
+        process lock contention, so a concurrent fleet never loses a
+        published winner."""
         if not artifact.id:
             artifact.id = artifact.content_id()
         blob = json.dumps(artifact.to_dict(), allow_nan=False)
-        with self._lock:
+
+        def write():
             self._conn.execute(
                 "INSERT OR REPLACE INTO artifacts "
                 "(id, workload, substrate, mesh, profile, fingerprint, "
@@ -251,6 +307,8 @@ class MapperStore:
                  artifact.mesh, artifact.profile, artifact.fingerprint,
                  artifact.score, artifact.created, blob))
             self._conn.commit()
+
+        self._retry_write(write)
         return artifact
 
     # -- read ---------------------------------------------------------------
@@ -338,8 +396,9 @@ class MapperStore:
         first).  Returns the number deleted."""
         if keep < 0:
             raise ValueError("keep must be >= 0")
-        deleted = 0
-        with self._lock:
+
+        def sweep():
+            deleted = 0
             keys = self._conn.execute(
                 "SELECT DISTINCT workload, mesh, profile "
                 "FROM artifacts").fetchall()
@@ -354,7 +413,9 @@ class MapperStore:
                         "DELETE FROM artifacts WHERE id = ?", (aid,))
                     deleted += 1
             self._conn.commit()
-        return deleted
+            return deleted
+
+        return self._retry_write(sweep)
 
     def __contains__(self, artifact_id: str) -> bool:
         return self.get(artifact_id) is not None

@@ -1,0 +1,394 @@
+"""Fleet racing: contention-safe store, race semantics, warm lanes.
+
+The multi-process pieces (store contention, the process-backend service,
+the end-to-end race) use small iteration counts so spawn overhead stays
+bounded; all race *policy* is tested on :class:`RaceController` with a
+fake clock and hand-built statuses -- no processes involved.
+"""
+
+import os
+import sqlite3
+import threading
+import time
+
+import pytest
+
+from repro.asi import Tuner, registry
+from repro.experiments import OptimizerSpec, expert_score
+from repro.fleet import (LaneFiles, LaneStatus, RaceConfig, RaceController,
+                         run_contention, run_lane, run_race)
+from repro.service import (DrainTimeout, MapperStore, TuningService,
+                           publish_result)
+
+
+def _store(tmp_path, name="store.db") -> MapperStore:
+    return MapperStore(str(tmp_path / name))
+
+
+# ---------------------------------------------------------------------------
+# Contention-safe MapperStore
+# ---------------------------------------------------------------------------
+def test_store_uses_wal_and_busy_timeout(tmp_path):
+    store = _store(tmp_path)
+    assert store.journal_mode == "wal"
+    timeout = store._conn.execute("PRAGMA busy_timeout").fetchone()[0]
+    assert int(timeout) >= 1000
+    store.close()
+
+
+def test_retry_write_retries_locked_then_succeeds(tmp_path):
+    store = _store(tmp_path)
+    attempts = []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise sqlite3.OperationalError("database is locked")
+        return "ok"
+
+    assert store._retry_write(flaky) == "ok"
+    assert len(attempts) == 3
+
+    def broken():
+        raise sqlite3.OperationalError("no such table: nope")
+
+    with pytest.raises(sqlite3.OperationalError, match="no such table"):
+        store._retry_write(broken)     # non-lock errors are not retried
+    store.close()
+
+
+def test_multiprocess_contention_loses_nothing(tmp_path):
+    out = run_contention(str(tmp_path / "shared.db"),
+                         str(tmp_path / "sync"), n_procs=4, n_puts=15)
+    assert out["procs"] == 4
+    assert out["lost"] == 0, out
+    assert out["locked"] == 0, out
+    assert out["artifacts"] == 60
+    assert out["best_ok"], out
+
+
+# ---------------------------------------------------------------------------
+# TuningService: drain timeout, cooperative cancel, process backend
+# ---------------------------------------------------------------------------
+def _gated_workload(name):
+    from repro.apps import circuit
+    from repro.asi.adapters_apps import TaskGraphWorkload
+    wl = TaskGraphWorkload(circuit.make_app(), name=name)
+    real = wl.evaluator()
+    gate = threading.Event()
+
+    def gated(mapper_src):
+        assert gate.wait(timeout=60), "gate never opened"
+        return real(mapper_src)
+
+    wl._evaluator = gated
+    return wl, gate
+
+
+def test_drain_timeout_names_pending_jobs(tmp_path):
+    wl, gate = _gated_workload("gated-fleet-1")
+    with TuningService(_store(tmp_path), workers=1) as service:
+        job = service.submit(wl, iterations=2)
+        with pytest.raises(DrainTimeout) as e:
+            service.drain(timeout=0.2)
+        assert e.value.pending == [job.id]
+        assert job.id in str(e.value)
+        # the timed-out job is not orphaned: still tracked, still running
+        assert service.status(job.id)["state"] in ("queued", "running")
+        gate.set()
+        service.drain(timeout=120)
+        assert job.state == "done"
+
+
+def test_cancel_running_job_skips_publication(tmp_path):
+    wl, gate = _gated_workload("gated-fleet-2")
+    store = _store(tmp_path)
+    with TuningService(store, workers=1) as service:
+        job = service.submit(wl, iterations=10)
+        for _ in range(100):
+            if job.state == "running":
+                break
+            time.sleep(0.05)
+        assert service.cancel(job.id) is True
+        assert job.cancel_requested
+        gate.set()                   # evaluator unblocks, stop flag fires
+        service.drain(timeout=120)
+    assert job.state == "cancelled"
+    assert job.artifact_id is None
+    assert store.best(wl.name) is None
+
+
+def test_process_backend_runs_and_publishes(tmp_path):
+    store = _store(tmp_path)
+    with TuningService(store, workers=2, backend="process") as service:
+        with pytest.raises(ValueError, match="registry workload name"):
+            service.submit(registry.get("circuit"))
+        job = service.submit("circuit", iterations=3)
+        jobs = service.drain(timeout=300)
+    assert jobs == [job]
+    assert job.state == "done", job.error
+    assert job.best_score is not None
+    assert job.artifact_id is not None
+    art = store.best("circuit")
+    assert art is not None and art.provenance["backend"] == "process"
+
+
+def test_process_backend_resumes_checkpoint(tmp_path):
+    store_path = str(tmp_path / "store.db")
+    ckpt_dir = str(tmp_path / "ckpts")
+    with TuningService(store_path, workers=1, backend="process",
+                       checkpoint_dir=ckpt_dir) as s1:
+        j1 = s1.submit("circuit", iterations=2)
+        s1.drain(timeout=300)
+    assert j1.state == "done" and not j1.resumed
+    with TuningService(store_path, workers=1, backend="process",
+                       checkpoint_dir=ckpt_dir) as s2:
+        j2 = s2.submit("circuit", iterations=5)
+        s2.drain(timeout=300)
+    assert j2.state == "done", j2.error
+    assert j2.resumed      # warm rejoin from the first service's ckpt
+
+
+def test_unknown_backend_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unknown backend"):
+        TuningService(_store(tmp_path), backend="mpi")
+
+
+# ---------------------------------------------------------------------------
+# Tuner stop + hint hooks
+# ---------------------------------------------------------------------------
+def test_tuner_stop_flag_halts_without_publishing(tmp_path):
+    store = _store(tmp_path)
+    calls = []
+
+    def stop_after_three():
+        return len(calls) >= 3
+
+    tuner = Tuner("circuit", strategy="random", iterations=10,
+                  store=store, stop=stop_after_three,
+                  on_iteration=lambda s: calls.append(s.iteration))
+    result = tuner.run()
+    assert result.stopped
+    assert len(result.trajectory) == 3
+    assert store.best("circuit") is None    # stopped runs never publish
+
+
+def test_tuner_stop_preset_event_stops_at_iteration_zero(tmp_path):
+    store = _store(tmp_path)
+    ev = threading.Event()
+    ev.set()
+    result = Tuner("circuit", strategy="random", iterations=5,
+                   store=store, stop=ev).run()
+    assert result.stopped and result.trajectory == []
+    assert store.best("circuit") is None
+
+
+class _CapturingLLM:
+    """Wraps a workload's proposal backend, recording every prompt."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.prompts = []
+
+    def propose(self, prompt, decisions, rng):
+        self.prompts.append(prompt)
+        return self.inner.propose(prompt, decisions, rng)
+
+
+@pytest.mark.parametrize("strategy", ["opro", "trace"])
+def test_hints_reach_agentic_prompts(strategy):
+    wl = registry.get("circuit")
+    rival = wl.random_decisions(123)
+    llm = _CapturingLLM(wl.llm())
+    result = Tuner("circuit", strategy=strategy, iterations=4, llm=llm,
+                   hints=lambda: {"decisions": rival,
+                                  "score": 1e-6}).run()
+    assert not result.stopped
+    assert any("rival" in p.lower() for p in llm.prompts), \
+        "cross-pollination hint never reached the proposal prompt"
+
+
+# ---------------------------------------------------------------------------
+# Lane files
+# ---------------------------------------------------------------------------
+def test_lane_files_status_stop_roundtrip(tmp_path):
+    files = LaneFiles(str(tmp_path / "lane0"))
+    assert files.read_status() is None
+    st = LaneStatus(lane="lane0", strategy="trace", state="running",
+                    iteration=3, best_score=0.5,
+                    best_decisions={"map": "GPU"})
+    files.write_status(st)
+    got = files.read_status()
+    assert got.best_score == 0.5 and got.best_decisions == {"map": "GPU"}
+    assert got.running()
+    assert not files.stop_requested()
+    files.request_stop("bar cleared")
+    assert files.stop_requested()
+
+
+def test_lane_hint_consumed_once_per_seq(tmp_path):
+    files = LaneFiles(str(tmp_path / "lane1"))
+    assert files.take_hint() is None
+    seq = files.post_hint({"map": "CPU"}, score=0.1, source="leader")
+    assert seq == 1
+    hint = files.take_hint()
+    assert hint == {"decisions": {"map": "CPU"}, "score": 0.1}
+    assert files.take_hint() is None      # same seq: injected only once
+    assert files.post_hint({"map": "GPU"}, score=0.05) == 2
+    assert files.take_hint()["decisions"] == {"map": "GPU"}
+    assert files.take_hint() is None
+
+
+# ---------------------------------------------------------------------------
+# RaceController on a fake clock (pure race semantics)
+# ---------------------------------------------------------------------------
+def _st(lane, state="running", score=None, decisions=None, it=0):
+    return LaneStatus(lane=lane, state=state, iteration=it,
+                      best_score=score, best_decisions=decisions)
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def test_controller_bar_cleared_stops_every_other_lane():
+    ctl = RaceController(bar=1.0, lanes=["a", "b", "c"],
+                         agentic={"b": True}, clock=_FakeClock())
+    acts = ctl.observe({"a": _st("a", score=2.0), "b": _st("b"),
+                        "c": None})
+    assert acts["stop"] == [] and ctl.winner is None
+    acts = ctl.observe({"a": _st("a", score=0.5), "b": _st("b", score=3.0),
+                        "c": None})
+    assert ctl.winner == "a"
+    assert sorted(acts["stop"]) == ["a", "b", "c"]   # winner stands down too
+    names = [e["event"] for e in ctl.events]
+    assert names.count("bar_cleared") == 1
+    assert names.count("early_termination") == 2     # b and c, not a
+    # idempotent: a later poll never re-stops
+    acts = ctl.observe({"a": _st("a", "stopped", 0.5),
+                        "b": _st("b", "stopped", 3.0), "c": None})
+    assert acts["stop"] == [] and acts["hints"] == {}
+
+
+def test_controller_score_at_bar_does_not_win():
+    ctl = RaceController(bar=1.0, lanes=["a"], clock=_FakeClock())
+    ctl.observe({"a": _st("a", score=1.0)})
+    assert ctl.winner is None        # strictly-below bar, paper's 'beats'
+
+
+def test_controller_cross_pollinates_trailing_agentic_lanes_once():
+    ctl = RaceController(bar=None, lanes=["lead", "agentic", "scalar"],
+                         agentic={"agentic": True}, clock=_FakeClock())
+    statuses = {
+        "lead": _st("lead", score=1.0, decisions={"map": "GPU"}),
+        "agentic": _st("agentic", score=5.0),
+        "scalar": _st("scalar", score=9.0),
+    }
+    acts = ctl.observe(statuses)
+    assert list(acts["hints"]) == ["agentic"]      # scalar lanes: never
+    hint = acts["hints"]["agentic"]
+    assert hint["decisions"] == {"map": "GPU"}
+    assert hint["score"] == 1.0 and hint["from"] == "lead"
+    # same leaderboard -> no duplicate hint
+    assert ctl.observe(statuses)["hints"] == {}
+    # leader improves -> fresh hint with the new best
+    statuses["lead"] = _st("lead", score=0.5, decisions={"map": "CPU"})
+    acts = ctl.observe(statuses)
+    assert acts["hints"]["agentic"]["score"] == 0.5
+    # the agentic lane takes the lead -> nothing to pollinate
+    statuses["agentic"] = _st("agentic", score=0.1, decisions={"x": 1})
+    assert ctl.observe(statuses)["hints"] == {}
+    events = [e["event"] for e in ctl.events]
+    assert events.count("cross_pollinate") == 2
+    assert events.count("lead_change") == 2        # lead, then agentic
+
+
+def test_controller_without_bar_never_terminates():
+    ctl = RaceController(bar=None, lanes=["a", "b"], clock=_FakeClock())
+    for score in (3.0, 1.0, 0.01):
+        acts = ctl.observe({"a": _st("a", score=score), "b": _st("b")})
+        assert acts["stop"] == []
+    assert ctl.winner is None and ctl.bar_cleared_at is None
+
+
+def test_controller_logs_lane_state_transitions():
+    ctl = RaceController(bar=None, lanes=["a"], clock=_FakeClock())
+    ctl.observe({"a": _st("a", state="starting")})
+    ctl.observe({"a": _st("a", state="running")})
+    ctl.observe({"a": _st("a", state="running")})   # unchanged: no event
+    ctl.observe({"a": _st("a", state="finished")})
+    trans = [e["state"] for e in ctl.events if e["event"] == "lane_state"]
+    assert trans == ["starting", "running", "finished"]
+
+
+# ---------------------------------------------------------------------------
+# Lanes and races, end to end
+# ---------------------------------------------------------------------------
+def test_run_lane_warm_resume(tmp_path):
+    lane_dir = str(tmp_path / "lane")
+    store_path = str(tmp_path / "store.db")
+    first = run_lane(lane_dir, store_path, "circuit", "random", 3,
+                     lane="r0")
+    assert first["state"] == "finished" and not first["resumed"]
+    assert first["iteration"] == 3
+    assert os.path.exists(LaneFiles(lane_dir).ckpt_path)
+    second = run_lane(lane_dir, store_path, "circuit", "random", 6,
+                      lane="r0")
+    assert second["resumed"], "killed/finished lane must rejoin warm"
+    assert second["iteration"] == 6
+    store = MapperStore(store_path)
+    assert store.best("circuit") is not None    # improvements published
+    store.close()
+
+
+def test_run_lane_pre_stop_halts_without_publishing(tmp_path):
+    lane_dir = str(tmp_path / "lane")
+    files = LaneFiles(lane_dir)
+    files.request_stop("race already over")
+    out = run_lane(lane_dir, str(tmp_path / "store.db"), "circuit",
+                   "random", 5, lane="late")
+    assert out["state"] == "stopped" and out["stopped"]
+    assert out["iteration"] == 0
+    store = MapperStore(str(tmp_path / "store.db"))
+    assert len(store) == 0
+    store.close()
+    assert files.read_status().state == "stopped"
+
+
+def test_expert_score_is_public_and_finite():
+    bar = expert_score("circuit")
+    assert bar is not None and 0 < bar < 1
+
+
+def test_run_race_terminates_early_and_publishes(tmp_path):
+    # bandit clears the circuit expert bar within a few iterations;
+    # annealing never does -- so the race must stop it early
+    cfg = RaceConfig(
+        workload="circuit",
+        portfolio=(OptimizerSpec("bandit", "bandit", "scalar"),
+                   OptimizerSpec("annealing", "annealing", "scalar")),
+        iterations=12, poll_s=0.02, pace_s=0.1,
+        run_dir=str(tmp_path / "race"), store=str(tmp_path / "store.db"))
+    result = run_race(cfg)
+    assert result.winner == "bandit"
+    assert result.bar is not None and result.best_score < result.bar
+    assert result.time_to_bar is not None and result.time_to_bar > 0
+    assert result.artifact_id is not None
+    events = [e["event"] for e in result.events]
+    assert "bar_cleared" in events
+    assert "early_termination" in events
+    laggard = result.lanes["annealing"]
+    assert laggard["state"] == "stopped"
+    assert laggard["iteration"] < cfg.iterations   # audited early stop
+    assert os.path.exists(result.log_path)
+    store = MapperStore(result.store_path)
+    art = store.best("circuit")
+    store.close()
+    assert art is not None and art.id == result.artifact_id
+    assert art.provenance["source"] == "fleet"
+    assert art.provenance["lane"] == "bandit"

@@ -279,8 +279,9 @@ def test_duplicate_submit_dedupes_to_inflight_job(tmp_path):
 
 def test_cancel_queued_job(tmp_path):
     wl, gate = _gated_workload("gated-circuit-2")
-    with TuningService(_store(tmp_path), workers=1) as service:
-        j1 = service.submit(wl, iterations=2)
+    store = _store(tmp_path)
+    with TuningService(store, workers=1) as service:
+        j1 = service.submit(wl, iterations=5)
         for _ in range(100):        # wait until the worker picks j1 up
             if j1.state == "running":
                 break
@@ -289,13 +290,19 @@ def test_cancel_queued_job(tmp_path):
         j2 = service.submit("circuit", iterations=3)
         assert service.cancel(j2.id) is True
         assert j2.state == "cancelled"
-        assert service.cancel(j1.id) is False    # running: not cancellable
+        # running jobs cancel cooperatively: the Tuner halts at the next
+        # iteration boundary and skips publication
+        assert service.cancel(j1.id) is True
+        assert j1.cancel_requested is True
         # the cancelled job released its key: a resubmit gets a new job
         j4 = service.submit("circuit", iterations=3)
         assert j4 is not j2
         gate.set()
         service.drain(timeout=120)
-        assert j1.state == "done" and j4.state == "done"
+        assert j1.state == "cancelled" and j4.state == "done"
+        assert j1.artifact_id is None
+        assert store.best(wl.name) is None   # cancelled: never published
+        assert service.cancel(j1.id) is False   # finished: not cancellable
         with pytest.raises(KeyError):
             service.cancel("job-9999")
 

@@ -29,6 +29,7 @@ PUBLIC_INITS = {
     "repro.kernels": ROOT / "src" / "repro" / "kernels" / "__init__.py",
     "repro.experiments":
         ROOT / "src" / "repro" / "experiments" / "__init__.py",
+    "repro.fleet": ROOT / "src" / "repro" / "fleet" / "__init__.py",
     "repro.ft": ROOT / "src" / "repro" / "ft" / "__init__.py",
     "repro.serve": ROOT / "src" / "repro" / "serve" / "__init__.py",
     "repro.serve.scheduler":
