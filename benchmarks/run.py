@@ -23,6 +23,10 @@
                                   single lane time-to-expert-bar, plus
                                   the N-process store contention harness
                                   (repro.fleet)
+    (ours)   meta                 meta-optimization: warm-started vs cold
+                                  tuning iterations-to-expert-bar, mined
+                                  + validated LearnedPack, MetaTuner
+                                  knob sweep (repro.meta)
 
 Output: ``name,us_per_call,derived`` CSV rows.
 Run:  PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -925,6 +929,125 @@ def bench_fleet(out_json="BENCH_fleet.json"):
 
 
 # ---------------------------------------------------------------------------
+def bench_meta(out_json="BENCH_meta.json"):
+    """(ours) The meta-optimization layer end to end (repro.meta).
+
+    Part A -- *warm starts pay*: tune matmul/cannon once, publish its
+    winner, then tune sibling algorithms cold vs warm-started from the
+    neighbor index.  Warm must reach the expert bar in strictly fewer
+    iterations on at least two workloads.
+
+    Part B -- *mined guidance survives its own gate*: mine the tuning
+    checkpoints of two app workloads, distill a LearnedPack, and
+    validate it on a held-out workload with the record/replay harness --
+    no iterations-to-beat-expert regression allowed.
+
+    Part C -- *the optimizer tunes itself*: a small MetaTuner sweep over
+    OPRO template/temperature, reward = iterations-to-beat-expert.
+
+    Writes ``BENCH_meta.json``.
+    """
+    import json
+    import os
+    import shutil
+    import tempfile
+
+    from repro.asi import registry, tune
+    from repro.experiments import expert_score
+    from repro.meta import (MetaConfig, distill_pack, iterations_to_beat,
+                            meta_tune, mine_traces, validate_pack,
+                            warm_start_candidates)
+    from repro.service import MapperStore, publish_result
+
+    iterations, seed = 8, 0
+    tmp = tempfile.mkdtemp(prefix="bench_meta_")
+    payload = {"iterations": iterations, "seed": seed}
+    try:
+        # -- Part A: warm-started vs cold tuning on the matmul family
+        store = MapperStore(f"{tmp}/store.db")
+        t0 = time.perf_counter()
+        src = tune("matmul/cannon", strategy="trace",
+                   iterations=iterations, seed=seed)
+        publish_result(store, registry.get("matmul/cannon"), src,
+                       provenance={"source": "bench", "strategy": "trace"})
+        warm_rows = {}
+        strict_wins = 0
+        for target in ("matmul/summa", "matmul/pumma", "matmul/johnson"):
+            wl = registry.get(target)
+            bar = expert_score(target)
+            seeds = warm_start_candidates(wl, store, k=2)
+            cold = tune(target, strategy="trace", iterations=iterations,
+                        seed=seed)
+            warm = tune(target, strategy="trace", iterations=iterations,
+                        seed=seed, seed_candidates=seeds)
+            ci = iterations_to_beat(cold.trajectory, bar)
+            wi = iterations_to_beat(warm.trajectory, bar)
+            win = (wi is not None and (ci is None or wi < ci))
+            strict_wins += win
+            warm_rows[target] = {
+                "expert_bar": bar, "neighbors":
+                    [s["from"]["workload"] for s in seeds],
+                "cold_iterations_to_beat": ci,
+                "warm_iterations_to_beat": wi, "strict_win": win}
+            _emit(f"meta/warm_start/{target.split('/')[-1]}", 0.0,
+                  f"cold_iters={ci};warm_iters={wi};"
+                  f"win={'yes' if win else 'no'}")
+        us = (time.perf_counter() - t0) * 1e6
+        payload["warm_start"] = {"source": "matmul/cannon",
+                                 "targets": warm_rows,
+                                 "strict_wins": strict_wins}
+        # the headline: seeding from a solved neighbor must reach the
+        # expert bar in strictly fewer iterations on >= 2 workloads
+        assert strict_wins >= 2, warm_rows
+        _emit("meta/warm_start/summary", us,
+              f"strict_wins={strict_wins}/{len(warm_rows)}")
+
+        # -- Part B: mine -> distill -> validate a LearnedPack
+        t0 = time.perf_counter()
+        ckpt_dir = f"{tmp}/ckpts"
+        os.makedirs(ckpt_dir)
+        for wname in ("circuit", "stencil"):
+            tune(wname, strategy="trace", iterations=iterations,
+                 seed=seed, checkpoint=f"{ckpt_dir}/{wname}.json")
+        dataset = mine_traces(store=store, checkpoints=(ckpt_dir,))
+        pack = distill_pack(dataset, name="benchlearned")
+        verdict = validate_pack(pack, ["pennant"], strategy="trace",
+                                iterations=iterations, seed=seed)
+        us = (time.perf_counter() - t0) * 1e6
+        payload["learned_pack"] = {
+            "mined": dataset.summary(), "rules": len(pack.rules),
+            "rule_names": [r.name for r in pack.rules],
+            "validation": verdict}
+        assert pack.rules, dataset.summary()
+        assert verdict["passed"], verdict
+        assert verdict["replay_identical"] is True, verdict
+        _emit("meta/learned_pack", us,
+              f"rules={len(pack.rules)};validated=pass;"
+              f"replay_identical={verdict['replay_identical']};"
+              f"held_out=pennant")
+
+        # -- Part C: MetaTuner knob sweep (small grid, one workload)
+        t0 = time.perf_counter()
+        grid = [MetaConfig(),
+                MetaConfig(template="ascending"),
+                MetaConfig(template="terse", history_k=3)]
+        result = meta_tune(["circuit"], strategy="opro",
+                           iterations=iterations, seeds=(0,),
+                           configs=grid)
+        us = (time.perf_counter() - t0) * 1e6
+        payload["meta_tune"] = result.to_dict()
+        _emit("meta/meta_tune", us,
+              f"best={result.best.label()};reward={result.reward:.2f};"
+              f"improved={result.improved()}")
+
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        _emit("meta/summary", 0.0, f"written={out_json}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
 def bench_agent_overhead():
     """Mapper generation + compile latency (the non-evaluation part of one
     optimization iteration; the 'minutes not days' claim)."""
@@ -960,6 +1083,7 @@ SECTIONS = {
     "serving_load": bench_serving_load,
     "resilience": bench_resilience,
     "fleet": bench_fleet,
+    "meta": bench_meta,
 }
 
 

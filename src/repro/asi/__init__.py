@@ -16,12 +16,12 @@ from ..core.agent.autoguide import ErrorCategory, ExecutionReport
 from ..core.agent.feedback import FEEDBACK_LEVELS
 from ..core.agent.loop import TuneSession, run_loop
 from .registry import REGISTRY, WorkloadInfo, WorkloadRegistry, populate
-from .tuner import STRATEGIES, Tuner, resume, tune
+from .tuner import STRATEGIES, Tuner, chain_hints, resume, tune
 from .workload import AgentWorkload, Workload
 
 __all__ = [
     "AgentWorkload", "ErrorCategory", "ExecutionReport", "FEEDBACK_LEVELS",
     "REGISTRY", "STRATEGIES", "Tuner", "TuneSession", "Workload",
-    "WorkloadInfo", "WorkloadRegistry", "populate", "registry", "resume",
-    "run_loop", "tune",
+    "WorkloadInfo", "WorkloadRegistry", "chain_hints", "populate",
+    "registry", "resume", "run_loop", "tune",
 ]

@@ -31,7 +31,7 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 from ..core.agent.autoguide import ExecutionReport
 from ..core.agent.llm import rng_state_from_json, rng_state_to_json
@@ -104,6 +104,30 @@ def _restore_search_state(search, d: Dict) -> None:
                              if k != "rng_state"})
 
 
+def chain_hints(candidates: Sequence[Dict], fallback=None):
+    """One hint source from a finite seed queue plus an optional live one.
+
+    The returned zero-arg callable -- a valid ``Tuner.hints`` /
+    ``run_loop(hint_fn=...)`` source -- yields each seed candidate once
+    (as ``{"decisions": ..., "score": ...}``), then defers to
+    ``fallback`` forever.  This is how warm-start seeds and fleet
+    cross-pollination share the single ``Search.inject_hint`` path: a
+    seed is just a pre-loaded hint.
+    """
+    queue: List[Dict] = []
+    for cand in candidates:
+        if cand and cand.get("decisions"):
+            queue.append({"decisions": cand["decisions"],
+                          "score": cand.get("score")})
+
+    def source():
+        if queue:
+            return queue.pop(0)
+        return fallback() if fallback is not None else None
+
+    return source
+
+
 @dataclass
 class Tuner:
     """Configured tuning run over one workload.
@@ -150,6 +174,21 @@ class Tuner:
     #: with the live ``TuneSession`` -- race lanes publish improvements
     #: and heartbeat their status files here.  Runtime wiring only.
     on_iteration: Optional[object] = None
+    #: Public seeding API (warm start; see repro.meta.warmstart): an
+    #: ordered sequence of opening candidates, each either a decisions
+    #: dict or ``{"decisions": ..., "score": ...}``.  The first seed
+    #: becomes the opening candidate (unless ``run(start=...)`` pins
+    #: one); the rest flow through the same ``chain_hints`` ->
+    #: ``Search.inject_hint`` path fleet cross-pollination uses, ahead
+    #: of any live ``hints`` source.  Runtime wiring only, never
+    #: checkpointed -- a resumed session already carries the seeded
+    #: records in its graph.
+    seed_candidates: Optional[Sequence[Dict]] = None
+    #: Extra keyword arguments for the strategy's Search constructor
+    #: (e.g. ``{"template": "ascending", "temperature": 0.2}`` for
+    #: OPRO -- the MetaTuner's knobs).  Persisted in checkpoints so a
+    #: resumed run proposes exactly like the original.
+    search_params: Optional[Dict] = None
 
     def __post_init__(self):
         if isinstance(self.workload, str):
@@ -172,13 +211,24 @@ class Tuner:
                 f"choose from {FEEDBACK_LEVELS}")
         if self.batch < 1:
             raise ValueError("batch must be >= 1")
+        if self.seed_candidates:
+            # normalize: raw decision dicts -> {"decisions", "score"}
+            self.seed_candidates = [
+                c if "decisions" in c else {"decisions": c, "score": None}
+                for c in self.seed_candidates]
 
     def _make_search(self):
         wl = self.workload
-        return SEARCHES[self.strategy](
-            seed=self.seed, feedback_level=self.feedback_level,
-            llm=self.llm if self.llm is not None else wl.llm(),
-            random_fn=wl.random_decisions, neighbor_fn=wl.neighbors)
+        try:
+            return SEARCHES[self.strategy](
+                seed=self.seed, feedback_level=self.feedback_level,
+                llm=self.llm if self.llm is not None else wl.llm(),
+                random_fn=wl.random_decisions, neighbor_fn=wl.neighbors,
+                **(self.search_params or {}))
+        except TypeError as e:
+            raise ValueError(
+                f"search_params {self.search_params!r} not accepted by "
+                f"strategy {self.strategy!r}: {e}") from None
 
     def _save(self, search, session: TuneSession) -> None:
         payload = {
@@ -190,6 +240,7 @@ class Tuner:
             "seed": self.seed,
             "feedback_level": self.feedback_level,
             "tier": self.tier,
+            "search_params": self.search_params,
             "search_state": _search_state(search),
             "session": _session_to_json(session),
         }
@@ -218,6 +269,18 @@ class Tuner:
             attach = getattr(evaluator, "attach_disk_cache", None)
             if attach is not None:
                 attach(self.eval_cache_path())
+        # Warm start: the first seed becomes the opening candidate (the
+        # iteration-0 evaluation), the rest pre-load the hint queue ahead
+        # of any live cross-pollination source -- one injection path for
+        # both (see chain_hints).  A resumed session ignores the opening
+        # seed: its graph already holds the seeded records.
+        hint_fn = self.hints
+        if self.seed_candidates:
+            seeds = list(self.seed_candidates)
+            if start is None and not session.iteration:
+                start = seeds.pop(0)["decisions"]
+            if seeds:
+                hint_fn = chain_hints(seeds, fallback=self.hints)
         agent = wl.make_agent(_norm(start) if start else None)
         if session.iteration:   # resumed: restore the agent's position
             agent.set_decisions(session.graph.records[-1].values)
@@ -233,7 +296,7 @@ class Tuner:
         result = run_loop(search, agent, wl.evaluator(), self.iterations,
                           self.batch, parallel_safe=wl.parallel_safe,
                           session=session, on_iteration=on_it,
-                          should_stop=stop_fn, hint_fn=self.hints)
+                          should_stop=stop_fn, hint_fn=hint_fn)
         if self.store is not None and result.stopped:
             # cooperatively stopped (cancelled): never publish -- a
             # cancelled race lane must not overwrite the leaderboard
@@ -245,6 +308,10 @@ class Tuner:
                 "feedback_level": self.feedback_level, "seed": self.seed,
                 "iterations": self.iterations, "batch": self.batch,
                 "checkpoint": self.checkpoint}
+            if self.seed_candidates:
+                provenance["warm_start"] = len(self.seed_candidates)
+            if self.search_params:
+                provenance["search_params"] = dict(self.search_params)
             # workloads with measured tiers describe *how* the winning
             # score was produced (tier, backend, measurement controls,
             # analytic-vs-measured rank agreement)
@@ -286,7 +353,8 @@ class Tuner:
                             else payload["iterations"]),
                 batch=payload["batch"], seed=payload["seed"],
                 feedback_level=payload["feedback_level"], checkpoint=path,
-                tier=payload.get("tier"))
+                tier=payload.get("tier"),
+                search_params=payload.get("search_params"))
         t._payload = payload
         return t
 
@@ -305,16 +373,21 @@ def tune(workload: Union[str, Workload], strategy: str = "trace",
          iterations: int = 10, batch: int = 1, seed: int = 0,
          feedback_level: str = "full", start: Optional[Dict] = None,
          checkpoint: Optional[str] = None, llm: Optional[object] = None,
-         store: Optional[object] = None, tier: Optional[str] = None):
+         store: Optional[object] = None, tier: Optional[str] = None,
+         seed_candidates: Optional[Sequence[Dict]] = None,
+         search_params: Optional[Dict] = None):
     """Tune ``workload`` and return a ``SearchResult`` (the single entry
     point the CLI, examples, benchmarks, and legacy shims go through).
     ``store`` publishes the winner to a mapper artifact registry; ``tier``
     overrides the evaluation tier ("analytic" | "measured") on workloads
-    that support it."""
+    that support it; ``seed_candidates`` warm-starts the run (see
+    ``Tuner.seed_candidates``); ``search_params`` forwards extra knobs
+    to the strategy's Search constructor."""
     return Tuner(workload, strategy=strategy, iterations=iterations,
                  batch=batch, seed=seed, feedback_level=feedback_level,
-                 checkpoint=checkpoint, llm=llm, store=store,
-                 tier=tier).run(start=start)
+                 checkpoint=checkpoint, llm=llm, store=store, tier=tier,
+                 seed_candidates=seed_candidates,
+                 search_params=search_params).run(start=start)
 
 
 def resume(checkpoint: str, iterations: Optional[int] = None,

@@ -80,13 +80,22 @@ class Search:
     def __init__(self, seed: int = 0, feedback_level: str = "full",
                  llm: Optional[LLMClient] = None,
                  random_fn: Optional[Callable[[int], Dict]] = None,
-                 neighbor_fn: Optional[Callable] = None):
+                 neighbor_fn: Optional[Callable] = None,
+                 temperature: float = 0.0):
+        if not 0.0 <= temperature <= 1.0:
+            raise ValueError("temperature must be in [0, 1]")
         self.seed = seed
         self.rng = random.Random(seed)
         self.feedback_level = feedback_level
         self.llm = llm or HeuristicLLM()
         self.random_fn = random_fn or space.random_decisions
         self.neighbor_fn = neighbor_fn or space.neighbors
+        # exploration temperature for the agentic searches: with this
+        # probability a proposal takes one extra random mutation before
+        # evaluation.  0.0 (the default) never touches the RNG, so the
+        # pre-knob trajectories are reproduced bit-for-bit.  A MetaTuner
+        # sweep axis (repro.meta).
+        self.temperature = temperature
         # cross-pollination hint: a rival optimizer's (decisions, score),
         # injected by the fleet racer at iteration boundaries.  Runtime
         # state only -- never checkpointed: a resumed lane re-receives
@@ -109,6 +118,12 @@ class Search:
         """
         if decisions:
             self._hint = (copy.deepcopy(decisions), score)
+
+    def _heat(self, proposal: Dict) -> Dict:
+        """Apply the exploration temperature to an agentic proposal."""
+        if self.temperature and self.rng.random() < self.temperature:
+            return self.neighbor_fn(proposal, self.rng, k=1)
+        return proposal
 
     # -- checkpointable proposal state (JSON-safe; rng is handled by the
     # Tuner separately).  Subclasses with cross-iteration state beyond
@@ -152,11 +167,51 @@ class RandomSearch(Search):
         return self.random_fn(self.rng.randrange(1 << 30))
 
 
+#: Named OPRO prompt templates -- the MetaTuner's template axis
+#: (repro.meta).  Each entry fixes the history header, the order the
+#: top-k solutions appear in ("best_first" | "best_last"; OPRO found
+#: ascending-to-best ordering can help), whether the structured
+#: cost/HBM layers are surfaced, and an optional closing instruction.
+#: "classic" is byte-identical to the pre-knob prompt.
+OPRO_TEMPLATES: Dict[str, Dict] = {
+    "classic": {
+        "header": "Optimize the mapper. History (decisions -> score):",
+        "order": "best_first", "structured": True, "closing": None},
+    "ascending": {
+        "header": "Optimize the mapper. Prior solutions, worst to best "
+                  "(decisions -> score):",
+        "order": "best_last", "structured": True,
+        "closing": "Propose a decision assignment that beats the last "
+                   "(best) solution above."},
+    "terse": {
+        "header": "History (decisions -> score):",
+        "order": "best_first", "structured": False, "closing": None},
+}
+
+
 class OPROSearch(Search):
     """History-of-solutions prompt -> LLM proposal, restarted from the best
-    known solution each step (OPRO keeps the top-k trajectory in prompt)."""
+    known solution each step (OPRO keeps the top-k trajectory in prompt).
+
+    ``template`` (an :data:`OPRO_TEMPLATES` name), ``history_k`` and the
+    base-class ``temperature`` are the meta-tunable prompt knobs; the
+    defaults reproduce the pre-knob prompt -- and therefore the pre-knob
+    trajectories -- byte-for-byte.
+    """
 
     name = "opro"
+
+    def __init__(self, seed: int = 0, feedback_level: str = "full",
+                 llm=None, history_k: int = 5, template: str = "classic",
+                 **kw):
+        super().__init__(seed, feedback_level, llm, **kw)
+        if template not in OPRO_TEMPLATES:
+            raise ValueError(f"unknown OPRO template {template!r}; "
+                             f"choose from {sorted(OPRO_TEMPLATES)}")
+        if history_k < 1:
+            raise ValueError("history_k must be >= 1")
+        self.history_k = history_k
+        self.template = template
 
     @staticmethod
     def _format_decisions(values: Dict) -> str:
@@ -171,10 +226,13 @@ class OPROSearch(Search):
         return " ".join(parts)
 
     def _prompt(self, graph: TraceGraph) -> str:
-        lines = ["Optimize the mapper. History (decisions -> score):"]
+        tpl = OPRO_TEMPLATES[self.template]
+        lines = [tpl["header"]]
         scored = sorted(
             [r for r in graph.records if r.score is not None],
-            key=lambda r: r.score)[:5]
+            key=lambda r: r.score)[:self.history_k]
+        if tpl["order"] == "best_last":
+            scored = scored[::-1]
         for r in scored:
             lines.append(f"  {self._format_decisions(r.values)} -> "
                          f"score={r.score:.4f}s")
@@ -185,8 +243,8 @@ class OPROSearch(Search):
             # the ExecutionReport -- but only at the ablation levels that
             # include the Explanation channel (Fig. 8).
             rep = getattr(last, "report", None)
-            if rep is not None and self.feedback_level in ("explain",
-                                                           "full"):
+            if rep is not None and tpl["structured"] \
+                    and self.feedback_level in ("explain", "full"):
                 if rep.cost is not None:
                     c = rep.cost
                     lines.append(
@@ -202,12 +260,15 @@ class OPROSearch(Search):
                         f"device ({m.utilization:.0%}).")
         if self._hint is not None:
             lines.append(_rival_line(*self._hint))
+        if tpl["closing"]:
+            lines.append(tpl["closing"])
         return "\n".join(lines)
 
     def propose(self, agent, graph):
         base = graph.best() or graph.last()
         decisions = base.values if base else agent.decisions()
-        return self.llm.propose(self._prompt(graph), decisions, self.rng)
+        return self._heat(
+            self.llm.propose(self._prompt(graph), decisions, self.rng))
 
 
 def _rival_line(decisions: Dict, score: Optional[float]) -> str:
@@ -256,7 +317,7 @@ class TraceSearch(Search):
                     break  # first (most specific) category wins
         proposal = self.llm.propose(feedback, decisions, self.rng)
         if not implicated:
-            return proposal
+            return self._heat(proposal)
         # keep proposal edits only on implicated bundles
         out = copy.deepcopy(decisions)
         for b in implicated:
@@ -264,7 +325,7 @@ class TraceSearch(Search):
                 out[b] = proposal[b]
         if out == decisions:  # no effective edit: explore one implicated axis
             out = self.neighbor_fn(out, self.rng, k=1)
-        return out
+        return self._heat(out)
 
 
 class AnnealingSearch(Search):

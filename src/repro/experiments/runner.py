@@ -28,12 +28,17 @@ class OptimizerSpec:
 
     ``agentic`` marks the ASI arms (LLM proposals over structured
     feedback); the rest are the scalar-feedback classical baselines.
+    ``params`` (a hashable tuple of (key, value) pairs) forwards extra
+    Search-constructor knobs -- e.g. an OPRO prompt template or
+    temperature -- which is how the MetaTuner (repro.meta) sweeps
+    optimizer configurations through the same runner.
     """
 
     name: str
     strategy: str
     feedback_level: str = "full"
     agentic: bool = False
+    params: Tuple[Tuple[str, object], ...] = ()
 
 
 DEFAULT_OPTIMIZERS: Tuple[OptimizerSpec, ...] = (
@@ -77,7 +82,7 @@ def _specs(cfg: ExperimentConfig) -> List[OptimizerSpec]:
     for spec in cfg.optimizers:
         for lvl in cfg.feedback_levels:
             out.append(OptimizerSpec(f"{spec.name}@{lvl}", spec.strategy,
-                                     lvl, spec.agentic))
+                                     lvl, spec.agentic, spec.params))
     return out
 
 
@@ -93,18 +98,21 @@ def _tune_once(workload: str, spec: OptimizerSpec, iterations: int,
     from ..asi import tune
     t0 = time.perf_counter()
     res = tune(workload, strategy=spec.strategy, iterations=iterations,
-               seed=seed, feedback_level=spec.feedback_level, llm=llm)
+               seed=seed, feedback_level=spec.feedback_level, llm=llm,
+               search_params=dict(spec.params) if spec.params else None)
     wall_s = time.perf_counter() - t0
     traj = [_null(t) for t in res.trajectory]
     best = _null(res.best_score)
     finite = [t for t in traj if t is not None]
     iters_to_best = (traj.index(min(finite)) + 1) if finite else None
-    # best_mapper is popped by the caller before the row enters the JSON
-    # payload (sources are artifacts for the store, not bench rows)
+    # best_mapper/best_decisions are popped by the caller before the row
+    # enters the JSON payload (sources are artifacts for the store, not
+    # bench rows)
     return {"best": best, "trajectory": traj,
             "iterations_to_best": iters_to_best,
             "evaluations": len(res.graph.records), "wall_s": wall_s,
-            "best_mapper": res.best_mapper}
+            "best_mapper": res.best_mapper,
+            "best_decisions": res.best_decisions}
 
 
 def expert_score(workload: str) -> Optional[float]:
@@ -183,7 +191,8 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
             "workloads": list(cfg.workloads),
             "optimizers": [{"name": s.name, "strategy": s.strategy,
                             "feedback_level": s.feedback_level,
-                            "agentic": s.agentic} for s in specs],
+                            "agentic": s.agentic,
+                            "params": dict(s.params)} for s in specs],
             "iterations": cfg.iterations,
             "seeds": list(cfg.seeds),
         },
@@ -205,9 +214,11 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
             for seed in cfg.seeds:
                 r = _tune_once(wname, spec, cfg.iterations, seed)
                 mapper = r.pop("best_mapper")
+                decisions = r.pop("best_decisions")
                 if r["best"] is not None and (
                         winner is None or r["best"] < winner["score"]):
                     winner = {"score": r["best"], "mapper": mapper,
+                              "decisions": decisions,
                               "optimizer": spec, "seed": seed}
                 runs[str(seed)] = r
             rows[spec.name] = {"strategy": spec.strategy,
@@ -247,7 +258,8 @@ def run_experiments(cfg: ExperimentConfig) -> Dict:
             art = publish_result(store, registry.get(wname),
                                  SimpleNamespace(
                                      best_score=winner["score"],
-                                     best_mapper=winner["mapper"]),
+                                     best_mapper=winner["mapper"],
+                                     best_decisions=winner["decisions"]),
                                  provenance={"source": "experiments",
                                              "optimizer": spec.name,
                                              "strategy": spec.strategy,

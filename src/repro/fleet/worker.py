@@ -68,7 +68,8 @@ def run_lane(lane_dir: str, store_path: str, workload: str, strategy: str,
                 publish_result(
                     store, wl,
                     SimpleNamespace(best_score=best.score,
-                                    best_mapper=best.mapper),
+                                    best_mapper=best.mapper,
+                                    best_decisions=best.values),
                     provenance={"source": "fleet", "race": race_id,
                                 "lane": lane, "strategy": strategy,
                                 "iteration": s.iteration, "seed": seed,

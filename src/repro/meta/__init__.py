@@ -1,0 +1,51 @@
+"""repro.meta -- the meta-optimization layer: mine the system's own
+tuning history to improve the optimizer itself.
+
+After enough tuning runs, the MapperStore and the checkpoint piles are
+themselves a dataset.  This package closes the loop over it, three ways
+(docs/meta.md has the walkthrough):
+
+* **TraceMiner** (:mod:`repro.meta.mine`) walks store artifacts and
+  Tuner checkpoints into a :class:`TraceDataset` of normalized traces
+  with (workload, mesh, profile) provenance, and aggregates
+  cross-workload evidence: winning decision assignments and
+  error->fix transitions.
+* **LearnedPack** (:mod:`repro.meta.learned`) distills that evidence
+  into guidance rules that compose into AutoGuide through the existing
+  ``EXTRA_PACKS`` mechanism (``get_pack("app+learned")``) -- gated by
+  :func:`validate_pack`: a pack ships only if it does not regress
+  iterations-to-beat-expert on held-out workloads under the
+  deterministic record/replay harness.
+* **WarmStart** (:mod:`repro.meta.warmstart`) ranks solved neighbor
+  cells by substrate/decision-space/mesh-geometry similarity and seeds
+  a new cell's opening candidates from their best artifacts via
+  ``Tuner(seed_candidates=...)``.
+* **MetaTuner** (:mod:`repro.meta.metatune`) sweeps the optimizer's own
+  knobs (OPRO prompt template, exploration temperature, history window,
+  batch) against the iterations-to-beat-expert reward.
+
+CLI::
+
+    python -m repro.meta mine --store store.db --checkpoints runs/
+    python -m repro.meta distill --store store.db --out pack.json
+    python -m repro.meta validate --pack pack.json --workloads circuit
+    python -m repro.meta warm-start --store store.db --workload cannon
+"""
+
+from .learned import (LearnedPack, LearnedRule, distill_pack,
+                      register_pack, validate_pack, with_pack)
+from .metatune import (MetaConfig, MetaResult, MetaTuner, default_grid,
+                       iterations_to_beat, meta_tune)
+from .mine import (MinedRecord, MinedTrace, TraceDataset, TraceMiner,
+                   mine_traces)
+from .warmstart import (Neighbor, NeighborIndex, adapt_decisions,
+                        mesh_similarity, warm_start_candidates)
+
+__all__ = [
+    "LearnedPack", "LearnedRule", "MetaConfig", "MetaResult", "MetaTuner",
+    "MinedRecord", "MinedTrace", "Neighbor", "NeighborIndex",
+    "TraceDataset", "TraceMiner", "adapt_decisions", "default_grid",
+    "distill_pack", "iterations_to_beat", "mesh_similarity", "meta_tune",
+    "mine_traces", "register_pack", "validate_pack",
+    "warm_start_candidates", "with_pack",
+]

@@ -1,0 +1,160 @@
+"""CLI for the meta-optimization layer.
+
+    python -m repro.meta mine --store store.db --checkpoints runs/
+    python -m repro.meta distill --store store.db --out pack.json
+    python -m repro.meta validate --pack pack.json --workloads circuit stencil
+    python -m repro.meta warm-start --store store.db --workload cannon
+    python -m repro.meta meta-tune --workloads circuit --iters 6
+
+``validate`` exits non-zero when the pack fails the held-out gate, so a
+distill->validate pipeline can be scripted; ``warm-start`` prints the
+seed candidates (add ``--tune`` to actually run the warm-started loop
+and compare against cold start).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .learned import LearnedPack, distill_pack, validate_pack
+from .metatune import MetaConfig, iterations_to_beat, meta_tune
+from .mine import mine_traces
+from .warmstart import warm_start_candidates
+
+
+def _dataset(args):
+    return mine_traces(store=args.store,
+                       checkpoints=tuple(args.checkpoints or ()))
+
+
+def _cmd_mine(args) -> int:
+    ds = _dataset(args)
+    out = ds.summary()
+    out["win_patterns"] = ds.win_patterns(min_support=args.min_support)
+    out["fix_patterns"] = ds.fix_patterns(min_support=args.min_support)
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+def _cmd_distill(args) -> int:
+    pack = distill_pack(_dataset(args), name=args.name,
+                        min_support=args.min_support,
+                        min_lift=args.min_lift, max_rules=args.max_rules)
+    pack.save(args.out)
+    print(f"distilled {len(pack.rules)} rule(s) -> {args.out} "
+          f"(unvalidated; run `python -m repro.meta validate`)")
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    pack = LearnedPack.load(args.pack)
+    verdict = validate_pack(pack, args.workloads, strategy=args.strategy,
+                            iterations=args.iters, seed=args.seed)
+    pack.save(args.pack)           # persist the verdict with the pack
+    print(json.dumps(verdict, indent=2))
+    return 0 if verdict["passed"] else 1
+
+
+def _cmd_warm_start(args) -> int:
+    from ..asi import registry, tune
+    wl = registry.get(args.workload)
+    seeds = warm_start_candidates(wl, args.store, k=args.k)
+    report = {"workload": args.workload,
+              "candidates": [{"from": s["from"]} for s in seeds]}
+    if not seeds:
+        print(json.dumps(report, indent=2))
+        print("no transferable neighbors found", file=sys.stderr)
+        return 1
+    if args.tune:
+        from ..experiments import expert_score
+        bar = expert_score(args.workload)
+        cold = tune(wl, strategy=args.strategy, iterations=args.iters,
+                    seed=args.seed)
+        warm = tune(wl, strategy=args.strategy, iterations=args.iters,
+                    seed=args.seed, seed_candidates=seeds)
+        report["expert_score"] = bar
+        report["cold"] = {"best": cold.best_score,
+                          "iterations_to_beat":
+                              iterations_to_beat(cold.trajectory, bar)}
+        report["warm"] = {"best": warm.best_score,
+                          "iterations_to_beat":
+                              iterations_to_beat(warm.trajectory, bar)}
+    print(json.dumps(report, indent=2))
+    return 0
+
+
+def _cmd_meta_tune(args) -> int:
+    result = meta_tune(args.workloads, strategy=args.strategy,
+                       iterations=args.iters, seeds=tuple(args.seeds))
+    print(json.dumps(result.to_dict(), indent=2))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.meta",
+        description="Mine tuning history; distill, validate, and apply "
+                    "learned guidance; warm-start new cells; tune the "
+                    "optimizer's own knobs.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def add_sources(p):
+        p.add_argument("--store", default=None, help="MapperStore path")
+        p.add_argument("--checkpoints", nargs="*", default=None,
+                       help="Tuner checkpoint files or directories")
+        p.add_argument("--min-support", type=int, default=2,
+                       help="distinct supporting workloads per pattern")
+
+    p = sub.add_parser("mine", help="print the mined dataset summary "
+                                    "and cross-workload patterns")
+    add_sources(p)
+    p.set_defaults(fn=_cmd_mine)
+
+    p = sub.add_parser("distill", help="distill mined patterns into a "
+                                       "LearnedPack JSON")
+    add_sources(p)
+    p.add_argument("--name", default="learned")
+    p.add_argument("--min-lift", type=float, default=1.5)
+    p.add_argument("--max-rules", type=int, default=8)
+    p.add_argument("--out", default="learned_pack.json")
+    p.set_defaults(fn=_cmd_distill)
+
+    p = sub.add_parser("validate", help="gate a pack on held-out "
+                                        "workloads (writes the verdict "
+                                        "back into the pack file)")
+    p.add_argument("--pack", required=True)
+    p.add_argument("--workloads", nargs="+", required=True)
+    p.add_argument("--strategy", default="trace")
+    p.add_argument("--iters", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.set_defaults(fn=_cmd_validate)
+
+    p = sub.add_parser("warm-start", help="rank neighbor cells and seed "
+                                          "a new cell from their best "
+                                          "artifacts")
+    p.add_argument("--store", required=True)
+    p.add_argument("--workload", required=True)
+    p.add_argument("--k", type=int, default=3)
+    p.add_argument("--tune", action="store_true",
+                   help="run warm vs cold tuning and report both")
+    p.add_argument("--strategy", default="trace")
+    p.add_argument("--iters", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.set_defaults(fn=_cmd_warm_start)
+
+    p = sub.add_parser("meta-tune", help="sweep optimizer knobs against "
+                                         "iterations-to-beat-expert")
+    p.add_argument("--workloads", nargs="+", required=True)
+    p.add_argument("--strategy", default="opro")
+    p.add_argument("--iters", type=int, default=8)
+    p.add_argument("--seeds", nargs="+", type=int, default=[0])
+    p.set_defaults(fn=_cmd_meta_tune)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

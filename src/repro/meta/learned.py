@@ -1,0 +1,361 @@
+"""LearnedPack: distilled, provenance-carrying, validated guidance rules.
+
+The second half of the TraceMiner pipeline (docs/meta.md):
+
+* :func:`distill_pack` phrases the dataset's cross-workload evidence
+  (win patterns, error->fix transitions) into :class:`LearnedRule`
+  objects.  Each rule keeps its provenance -- the (workload, mesh,
+  profile) traces supporting it -- and compiles into a plain AutoGuide
+  :class:`~repro.core.agent.autoguide.Rule`, so a learned pack composes
+  through the existing ``EXTRA_PACKS`` / ``get_pack`` mechanism exactly
+  like the hand-written ``ft`` add-on: ``get_pack("app+learned")``.
+  An optional LLM backend (the same :class:`LLMClient` protocol the
+  optimizers use) may rephrase the explain/suggest channels; the default
+  is the deterministic template distiller, mirroring how HeuristicLLM
+  stands in for a live model everywhere else.
+* :func:`validate_pack` is the activation gate: a pack ships only if
+  composing it into the diagnostics does not regress
+  iterations-to-beat-expert on any held-out workload, measured with the
+  deterministic record/replay harness.
+* :func:`register_pack` activates a *validated* pack (refusing
+  unvalidated ones unless forced), and :func:`with_pack` returns a
+  workload view whose evaluator diagnoses through the composed pack.
+
+Packs serialize to JSON (rules are stored declaratively -- predicate
+spec, not code) and round-trip bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+import random
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .mine import TraceDataset, _signature
+
+_MISSING = object()
+#: Default cap on rules per pack: guidance, not an avalanche.
+MAX_RULES = 8
+
+
+@dataclass
+class LearnedRule:
+    """One distilled rule: declarative predicate + channels + provenance.
+
+    Unlike the hand-written packs, the predicate is *data* (kind,
+    substrate, category, signature), so the rule survives a JSON round
+    trip; :meth:`to_rule` compiles it to a live AutoGuide ``Rule``.
+    """
+
+    name: str
+    kind: str                          # "win" | "fix"
+    substrate: str
+    explain: str
+    suggest: str
+    bundle: str
+    key: str
+    value: object
+    category: str = "OK"               # ErrorCategory value
+    signature: str = ""                # error signature ("fix" rules)
+    message: str = ""                  # example message the rule fires on
+    #: The (workload, mesh, profile) traces that support this rule.
+    support: List[List[str]] = field(default_factory=list)
+    stats: Dict = field(default_factory=dict)
+
+    def to_rule(self):
+        from ..core.agent.autoguide.report import (ErrorCategory,
+                                                   ExecutionReport)
+        from ..core.agent.autoguide.rules import Rule
+        substrate = self.substrate
+
+        if self.kind == "fix":
+            category = ErrorCategory(self.category)
+            signature = self.signature
+
+            def when(r, _sig=signature, _sub=substrate):
+                if _sub and r.substrate not in ("", _sub):
+                    return False
+                return _signature(r.message) == _sig
+
+            message = self.message
+            score = None
+        else:
+            category = ErrorCategory.OK
+
+            def when(r, _sub=substrate):
+                if _sub and r.substrate not in ("", _sub):
+                    return False
+                return r.score is not None
+
+            message = (self.message
+                       or "Performance Metric: execution time is 1.0s.")
+            score = 1.0
+
+        def example(_cat=category, _msg=message, _sub=substrate,
+                    _score=score):
+            return ExecutionReport(category=_cat, message=_msg,
+                                   substrate=_sub, score=_score)
+
+        return Rule(name=self.name, category=category, when=when,
+                    explain=self.explain, suggest=self.suggest,
+                    example=example)
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "kind": self.kind,
+                "substrate": self.substrate, "explain": self.explain,
+                "suggest": self.suggest, "bundle": self.bundle,
+                "key": self.key, "value": self.value,
+                "category": self.category, "signature": self.signature,
+                "message": self.message, "support": self.support,
+                "stats": self.stats}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LearnedRule":
+        return cls(**d)
+
+
+@dataclass
+class LearnedPack:
+    """A named set of learned rules, with source + validation metadata."""
+
+    name: str
+    rules: List[LearnedRule] = field(default_factory=list)
+    created: float = 0.0
+    source: Dict = field(default_factory=dict)     # miner summary
+    #: None until :func:`validate_pack` ran; then the verdict payload
+    #: (``{"passed": bool, "workloads": {...}, ...}``).
+    validation: Optional[Dict] = None
+
+    def rules_tuple(self) -> Tuple:
+        return tuple(r.to_rule() for r in self.rules)
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "created": self.created,
+                "rules": [r.to_dict() for r in self.rules],
+                "source": self.source, "validation": self.validation}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "LearnedPack":
+        return cls(name=d["name"], created=d.get("created", 0.0),
+                   rules=[LearnedRule.from_dict(r) for r in d["rules"]],
+                   source=d.get("source", {}),
+                   validation=d.get("validation"))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, allow_nan=False)
+
+    @classmethod
+    def load(cls, path: str) -> "LearnedPack":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Distillation
+# ---------------------------------------------------------------------------
+def _phrase(llm, prompt: str, explain: str, suggest: str,
+            rng: random.Random) -> Tuple[str, str]:
+    """Route a default phrasing through the LLM backend (None = keep)."""
+    if llm is None:
+        return explain, suggest
+    out = llm.propose(prompt, {"rule": {"explain": explain,
+                                        "suggest": suggest}}, rng)
+    rule = out.get("rule", {}) if isinstance(out, dict) else {}
+    return (str(rule.get("explain", explain)),
+            str(rule.get("suggest", suggest)))
+
+
+def _fmt_value(value) -> str:
+    return value if isinstance(value, str) else json.dumps(value)
+
+
+def distill_pack(dataset: TraceDataset, name: str = "learned",
+                 llm=None, min_support: int = 2, min_lift: float = 1.5,
+                 max_rules: int = MAX_RULES) -> LearnedPack:
+    """Distill a mined dataset into an (unvalidated) LearnedPack.
+
+    Fix patterns (an error signature plus the decision edit that
+    recovered from it) come first -- they are the most actionable
+    guidance -- then win patterns, until ``max_rules``.  ``llm`` is an
+    optional :class:`LLMClient`-protocol backend given a chance to
+    rephrase each rule's explain/suggest channels (a ScriptedLLM makes
+    that deterministic in tests; None keeps the template phrasing).
+    Deterministic for a fixed dataset + backend.
+    """
+    rng = random.Random(0)
+    rules: List[LearnedRule] = []
+    for pat in dataset.fix_patterns(min_support=min_support):
+        if len(rules) >= max_rules:
+            break
+        n = len(pat["support"])
+        val = _fmt_value(pat["value"])
+        explain = (f"Across {n} tuned cells this fault was followed by a "
+                   f"recovery that changed {pat['key']} in "
+                   f"{pat['bundle']}.")
+        suggest = (f"Set {pat['key']} to {val} in {pat['bundle']} -- the "
+                   f"fix mined from {n} prior traces.")
+        prompt = (f"Phrase a diagnostic rule for substrate "
+                  f"{pat['substrate']!r}: error '{pat['signature']}' was "
+                  f"fixed by {pat['bundle']}.{pat['key']}={val} "
+                  f"{pat['count']} times.")
+        explain, suggest = _phrase(llm, prompt, explain, suggest, rng)
+        rules.append(LearnedRule(
+            name=f"{name}-fix-{len(rules)}", kind="fix",
+            substrate=pat["substrate"], explain=explain, suggest=suggest,
+            bundle=pat["bundle"], key=pat["key"], value=pat["value"],
+            category=pat["category"], signature=pat["signature"],
+            message=pat["message"], support=[list(k)
+                                             for k in pat["support"]],
+            stats={"count": pat["count"]}))
+    for pat in dataset.win_patterns(min_support=min_support,
+                                    min_lift=min_lift):
+        if len(rules) >= max_rules:
+            break
+        n = len({k[0] for k in pat["support"]})
+        val = _fmt_value(pat["value"])
+        explain = (f"Mappers setting {pat['key']} to {val} in "
+                   f"{pat['bundle']} ranked in the better half on "
+                   f"{n} workloads (lift {pat['lift']:.1f}x).")
+        suggest = (f"Prefer {pat['key']}={val} in {pat['bundle']} unless "
+                   f"the cost breakdown argues otherwise.")
+        prompt = (f"Phrase a guidance rule for substrate "
+                  f"{pat['substrate']!r}: {pat['bundle']}.{pat['key']}"
+                  f"={val} wins (lift {pat['lift']:.2f}).")
+        explain, suggest = _phrase(llm, prompt, explain, suggest, rng)
+        rules.append(LearnedRule(
+            name=f"{name}-win-{len(rules)}", kind="win",
+            substrate=pat["substrate"], explain=explain, suggest=suggest,
+            bundle=pat["bundle"], key=pat["key"], value=pat["value"],
+            support=[list(k) for k in pat["support"]],
+            stats={"lift": pat["lift"], "better": pat["better"],
+                   "worse": pat["worse"]}))
+    return LearnedPack(name=name, rules=rules, created=time.time(),
+                       source=dataset.summary())
+
+
+# ---------------------------------------------------------------------------
+# Activation (EXTRA_PACKS composition) + workload views
+# ---------------------------------------------------------------------------
+def register_pack(pack: LearnedPack, force: bool = False) -> str:
+    """Activate ``pack`` as an EXTRA_PACKS add-on (``"app+<name>"``).
+
+    Unvalidated or failed packs are refused unless ``force=True`` --
+    the ISSUE's shipping gate: a learned rule only reaches live
+    diagnostics after the replay-harness validation passed.
+    """
+    from ..core.agent.autoguide.rules import EXTRA_PACKS, RULE_PACKS
+    if not force and not (pack.validation or {}).get("passed"):
+        raise ValueError(
+            f"learned pack {pack.name!r} is not validated; run "
+            "validate_pack() first (or force=True to bypass the gate)")
+    if "+" in pack.name or not pack.name:
+        raise ValueError(f"invalid pack name {pack.name!r}")
+    if pack.name in RULE_PACKS or pack.name == "ft":
+        raise ValueError(f"pack name {pack.name!r} shadows a built-in")
+    EXTRA_PACKS[pack.name] = pack.rules_tuple()
+    return pack.name
+
+
+def with_pack(workload, pack: LearnedPack):
+    """A view of ``workload`` whose diagnostics compose ``pack``.
+
+    Returns a shallow copy with ``rule_pack = "<own>+<pack name>"`` and
+    a freshly built evaluator bound to the composed pack; the original
+    (possibly registry-cached) instance is untouched.  The pack must
+    already be registered (see :func:`register_pack`).
+    """
+    from ..core.agent.autoguide.rules import get_pack
+    composed = f"{workload.rule_pack}+{pack.name}"
+    get_pack(composed)                   # fail fast on unregistered packs
+    wl = copy.copy(workload)
+    wl.rule_pack = composed
+    wl._evaluator = None
+    ev = wl.evaluator()
+    if hasattr(ev, "pack"):              # CallableEvaluator (app/matmul)
+        ev.pack = composed
+    else:                                # tiered engine (lm)
+        eng = getattr(ev, "engine", None)
+        if eng is not None and hasattr(eng, "rule_pack"):
+            eng.rule_pack = composed
+    return wl
+
+
+# ---------------------------------------------------------------------------
+# Validation: the activation gate
+# ---------------------------------------------------------------------------
+def validate_pack(pack: LearnedPack, workloads: Sequence[str],
+                  strategy: str = "trace", iterations: int = 8,
+                  seed: int = 0, check_replay: bool = True) -> Dict:
+    """Gate ``pack`` on held-out workloads; sets ``pack.validation``.
+
+    For every workload the baseline arm tunes with the substrate's own
+    diagnostics and the candidate arm with ``+<pack>`` composed in, same
+    strategy/seed/iterations; the metric is iterations-to-beat-expert
+    (``experiments.expert_score`` is the bar).  The pack passes only if
+    no workload regresses.  ``check_replay`` additionally records the
+    first candidate run's LLM exchanges and replays them bit-for-bit
+    (the deterministic record/replay harness), so the verdict is
+    reproducible evidence, not a flaky measurement.
+    """
+    from ..asi import registry, tune
+    from ..core.agent.autoguide.rules import EXTRA_PACKS
+    from ..core.agent.llm import RecordingLLM, ReplayLLM, ReplayMismatch
+    from .metatune import iterations_to_beat
+
+    prev = EXTRA_PACKS.get(pack.name, _MISSING)
+    EXTRA_PACKS[pack.name] = pack.rules_tuple()
+    verdict: Dict = {"workloads": {}, "strategy": strategy,
+                     "iterations": iterations, "seed": seed}
+    try:
+        regressions = []
+        replay_identical = None
+        for i, wname in enumerate(workloads):
+            from ..experiments import expert_score
+            wl = registry.get(wname)
+            bar = expert_score(wname)
+            base_res = tune(wl, strategy=strategy, iterations=iterations,
+                            seed=seed)
+            view = with_pack(wl, pack)
+            llm = None
+            recorder = None
+            if check_replay and i == 0:
+                llm = recorder = RecordingLLM(view.llm())
+            cand_res = tune(view, strategy=strategy,
+                            iterations=iterations, seed=seed, llm=llm)
+            if recorder is not None:
+                try:
+                    replay = tune(with_pack(wl, pack), strategy=strategy,
+                                  iterations=iterations, seed=seed,
+                                  llm=ReplayLLM(recorder.calls,
+                                                strict=True))
+                    replay_identical = (replay.trajectory
+                                        == cand_res.trajectory)
+                except ReplayMismatch:
+                    replay_identical = False
+            base_iters = iterations_to_beat(base_res.trajectory, bar)
+            cand_iters = iterations_to_beat(cand_res.trajectory, bar)
+            regressed = (base_iters is not None
+                         and (cand_iters is None
+                              or cand_iters > base_iters))
+            if regressed:
+                regressions.append(wname)
+            verdict["workloads"][wname] = {
+                "expert_score": bar,
+                "baseline_iterations_to_beat": base_iters,
+                "learned_iterations_to_beat": cand_iters,
+                "regressed": regressed}
+        verdict["replay_identical"] = replay_identical
+        verdict["regressions"] = regressions
+        verdict["passed"] = (not regressions
+                             and replay_identical is not False)
+    finally:
+        if prev is _MISSING:
+            EXTRA_PACKS.pop(pack.name, None)
+        else:
+            EXTRA_PACKS[pack.name] = prev
+    pack.validation = verdict
+    return verdict

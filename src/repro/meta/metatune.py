@@ -1,0 +1,197 @@
+"""MetaTuner: tune the optimizer's own knobs against a learned reward.
+
+The inner optimizer (OPRO & friends) got three knobs in this PR --
+prompt ``template`` (:data:`repro.core.agent.optimizers.OPRO_TEMPLATES`),
+exploration ``temperature``, ``history_k`` -- plus the Tuner's ``batch``.
+The MetaTuner sweeps :class:`MetaConfig` grid points over those knobs,
+runs the inner tuning loop per (workload, seed) cell, and scores each
+configuration by the paper's headline currency:
+**iterations-to-beat-expert**, with ``experiments.expert_score`` as the
+bar.  A configuration that never reaches the bar on a cell pays
+``iterations + 1`` for it, so "never" is strictly worse than
+"on the last iteration" but doesn't blow up the mean.
+
+Everything is a seeded inner ``repro.asi.tune`` run, so the sweep is
+deterministic and the winning config is reproducible evidence.  The
+winner exports as an :class:`~repro.experiments.OptimizerSpec` (knobs
+ride in ``spec.params``), so the experiments harness can run a
+meta-tuned arm next to the defaults.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def iterations_to_beat(trajectory: Sequence[Optional[float]],
+                       bar: Optional[float]) -> Optional[int]:
+    """First 1-based iteration whose best-so-far matches or beats
+    ``bar``; None when the run never gets there (or there is no bar).
+
+    Accepts trajectories in either convention: JSON-null (None) or
+    ``inf`` for "no valid candidate yet".
+    """
+    if bar is None:
+        return None
+    for i, t in enumerate(trajectory):
+        if t is not None and t != float("inf") and t <= bar:
+            return i + 1
+    return None
+
+
+@dataclass(frozen=True)
+class MetaConfig:
+    """One grid point of optimizer hyper-parameters."""
+
+    template: str = "classic"
+    temperature: float = 0.0
+    history_k: int = 5
+    batch: int = 1
+
+    def search_params(self, strategy: str) -> Dict:
+        """The Search-constructor kwargs this config carries, restricted
+        to what ``strategy`` accepts (template/history_k are OPRO-only;
+        temperature is universal)."""
+        params: Dict = {}
+        if self.temperature:
+            params["temperature"] = self.temperature
+        if strategy == "opro":
+            if self.template != "classic":
+                params["template"] = self.template
+            if self.history_k != 5:
+                params["history_k"] = self.history_k
+        return params
+
+    def label(self) -> str:
+        return (f"{self.template}/T{self.temperature:g}"
+                f"/k{self.history_k}/b{self.batch}")
+
+    def spec(self, strategy: str = "opro",
+             feedback_level: str = "full"):
+        """Export as an experiments OptimizerSpec (params tuple)."""
+        from ..experiments import OptimizerSpec
+        params = tuple(sorted(self.search_params(strategy).items()))
+        return OptimizerSpec(name=f"meta[{self.label()}]",
+                             strategy=strategy,
+                             feedback_level=feedback_level,
+                             agentic=True, params=params)
+
+
+#: The default sweep: the stock configuration first (stable argmin keeps
+#: it on reward ties -- never churn knobs without a measured win), then
+#: the template/temperature/history alternatives.
+def default_grid(strategy: str = "opro") -> List[MetaConfig]:
+    configs = [MetaConfig()]
+    templates = (("classic", "ascending", "terse")
+                 if strategy == "opro" else ("classic",))
+    ks = ((5, 3) if strategy == "opro" else (5,))
+    for template, temp, k in itertools.product(
+            templates, (0.0, 0.25), ks):
+        cfg = MetaConfig(template=template, temperature=temp, history_k=k)
+        if cfg not in configs:
+            configs.append(cfg)
+    return configs
+
+
+@dataclass
+class MetaResult:
+    """Sweep outcome: the winning config plus the full reward table."""
+
+    best: MetaConfig
+    reward: float                     # mean iterations-to-beat (lower wins)
+    table: List[Dict] = field(default_factory=list)
+    strategy: str = "opro"
+
+    def improved(self) -> bool:
+        """True when a non-default config strictly beat the default."""
+        default = next((r for r in self.table
+                        if r["config"] == MetaConfig().label()), None)
+        return (default is not None
+                and self.best != MetaConfig()
+                and self.reward < default["reward"])
+
+    def to_dict(self) -> Dict:
+        return {"strategy": self.strategy,
+                "best": self.best.label(),
+                "best_params": {"template": self.best.template,
+                                "temperature": self.best.temperature,
+                                "history_k": self.best.history_k,
+                                "batch": self.best.batch},
+                "reward": self.reward,
+                "improved": self.improved(),
+                "table": self.table}
+
+
+class MetaTuner:
+    """Sweep MetaConfigs; reward = mean iterations-to-beat-expert.
+
+    ``workloads`` should ship expert mappers (cells without a bar are
+    skipped and reported); ``configs`` defaults to :func:`default_grid`.
+    The inner loop is plain ``repro.asi.tune`` -- same front door as the
+    CLI and the experiments harness.
+    """
+
+    def __init__(self, workloads: Sequence[str], strategy: str = "opro",
+                 iterations: int = 8, seeds: Sequence[int] = (0,),
+                 configs: Optional[Sequence[MetaConfig]] = None):
+        self.workloads = list(workloads)
+        self.strategy = strategy
+        self.iterations = iterations
+        self.seeds = list(seeds)
+        self.configs = list(configs) if configs is not None \
+            else default_grid(strategy)
+
+    def _bars(self) -> Dict[str, Optional[float]]:
+        from ..experiments import expert_score
+        return {w: expert_score(w) for w in self.workloads}
+
+    def _reward(self, config: MetaConfig,
+                bars: Dict[str, Optional[float]]) -> Tuple[float, Dict]:
+        from ..asi import tune
+        cells: Dict[str, Dict] = {}
+        total, n = 0.0, 0
+        for wname in self.workloads:
+            bar = bars[wname]
+            if bar is None:
+                cells[wname] = {"skipped": "no expert bar"}
+                continue
+            per_seed = {}
+            for seed in self.seeds:
+                res = tune(wname, strategy=self.strategy,
+                           iterations=self.iterations, seed=seed,
+                           batch=config.batch,
+                           search_params=config.search_params(
+                               self.strategy) or None)
+                iters = iterations_to_beat(res.trajectory, bar)
+                per_seed[str(seed)] = iters
+                total += iters if iters is not None \
+                    else self.iterations + 1
+                n += 1
+            cells[wname] = {"bar": bar, "iterations_to_beat": per_seed}
+        reward = total / n if n else float("inf")
+        return reward, cells
+
+    def run(self) -> MetaResult:
+        bars = self._bars()
+        table: List[Dict] = []
+        best_cfg, best_reward = None, None
+        for config in self.configs:
+            reward, cells = self._reward(config, bars)
+            table.append({"config": config.label(), "reward": reward,
+                          "cells": cells})
+            if best_reward is None or reward < best_reward:
+                best_cfg, best_reward = config, reward
+        return MetaResult(best=best_cfg or MetaConfig(),
+                          reward=best_reward if best_reward is not None
+                          else float("inf"),
+                          table=table, strategy=self.strategy)
+
+
+def meta_tune(workloads: Sequence[str], strategy: str = "opro",
+              iterations: int = 8, seeds: Sequence[int] = (0,),
+              configs: Optional[Sequence[MetaConfig]] = None) -> MetaResult:
+    """Convenience wrapper: ``MetaTuner(...).run()``."""
+    return MetaTuner(workloads, strategy=strategy, iterations=iterations,
+                     seeds=seeds, configs=configs).run()

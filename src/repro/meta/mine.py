@@ -1,0 +1,300 @@
+"""TraceMiner: walk the system's own tuning history and structure it.
+
+PRs 5-9 left exactly the raw material a meta-optimizer needs lying on
+disk: MapperStore artifacts (winners with provenance, keyed by
+(workload, mesh, profile)), Tuner checkpoints (full per-iteration
+trajectories with decision assignments), and the structured
+ExecutionReports riding on every checkpointed record.  The miner turns
+that heap into a :class:`TraceDataset`:
+
+* one :class:`MinedTrace` per source (a checkpoint session or a store
+  artifact), normalized to (workload, mesh, profile) provenance keys;
+* cross-workload aggregates over it -- ``win_patterns`` (decision
+  assignments over-represented among each workload's better half of
+  scored candidates) and ``fix_patterns`` (decision edits that turned a
+  failing candidate into the next scoring one) -- the evidence
+  :func:`repro.meta.learned.distill_pack` phrases into guidance rules.
+
+Scores are never compared across workloads (scales differ); the
+better/worse split is computed per trace and only the *counts* cross
+workloads.  Everything is deterministic: mining the same store +
+checkpoints yields the same dataset, patterns, and ordering.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: Checkpoint versions the miner understands (mirrors repro.asi.tuner).
+_CKPT_READABLE = (1, 2)
+
+
+@dataclass
+class MinedRecord:
+    """One candidate evaluation, normalized across sources."""
+
+    values: Dict                      # bundle -> decisions
+    score: Optional[float]            # seconds; None = failed/screened
+    category: str = "OK"              # ErrorCategory value (string form)
+    message: str = ""                 # report message / feedback head
+    primary: bool = True
+
+
+@dataclass
+class MinedTrace:
+    """One tuning trajectory (or published winner) with provenance."""
+
+    workload: str
+    substrate: str
+    mesh: str
+    profile: str
+    strategy: str
+    source: str                       # "checkpoint:<path>" | "artifact:<id>"
+    records: List[MinedRecord] = field(default_factory=list)
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.workload, self.mesh, self.profile)
+
+    def scored(self) -> List[MinedRecord]:
+        return [r for r in self.records if r.score is not None]
+
+
+def _arm(value) -> str:
+    """Hashable form of a decision value (mirrors the bandit's arms)."""
+    return json.dumps(value, sort_keys=True, default=str)
+
+
+def _signature(message: str) -> str:
+    """Scale-free error signature: lowercased head with numbers struck,
+    so 'peak HBM 18.2 GiB' and 'peak HBM 97.0 GiB' mine as one fault."""
+    head = message.strip().splitlines()[0] if message.strip() else ""
+    head = re.sub(r"\d+(\.\d+)?", "#", head.lower())
+    return head[:120]
+
+
+def _axes(values: Dict) -> Iterable[Tuple[str, str, str, object]]:
+    """Flatten a decision dict into (bundle, key, arm, raw) axes."""
+    for bundle in sorted(values):
+        bvals = values[bundle]
+        if not isinstance(bvals, dict):
+            continue
+        for key in sorted(bvals):
+            yield bundle, key, _arm(bvals[key]), bvals[key]
+
+
+@dataclass
+class TraceDataset:
+    """Mined history plus the cross-workload aggregations over it."""
+
+    traces: List[MinedTrace] = field(default_factory=list)
+
+    def provenance_keys(self) -> List[Tuple[str, str, str]]:
+        return sorted({t.key() for t in self.traces})
+
+    def substrates(self) -> List[str]:
+        return sorted({t.substrate for t in self.traces if t.substrate})
+
+    # -- aggregate 1: winning decision assignments ---------------------------
+    def win_patterns(self, min_support: int = 2,
+                     min_lift: float = 1.5) -> List[Dict]:
+        """Decision assignments over-represented in each trace's better
+        half of scored candidates.
+
+        For every trace, scored records split at the median into a
+        better and a worse half; per (substrate, bundle, key, value)
+        assignment the dataset counts better/worse memberships across
+        all traces.  Patterns with Laplace-smoothed lift
+        ``(better+1)/(worse+1) >= min_lift`` supported by at least
+        ``min_support`` distinct workloads survive, best lift first.
+        """
+        better: Dict[Tuple, int] = {}
+        worse: Dict[Tuple, int] = {}
+        support: Dict[Tuple, set] = {}
+        raws: Dict[Tuple, object] = {}
+        for trace in self.traces:
+            scored = sorted(trace.scored(), key=lambda r: r.score)
+            if len(scored) < 2:
+                continue
+            half = max(1, len(scored) // 2)
+            for rank, rec in enumerate(scored):
+                side = better if rank < half else worse
+                for bundle, key, arm, raw in _axes(rec.values):
+                    pat = (trace.substrate, bundle, key, arm)
+                    side[pat] = side.get(pat, 0) + 1
+                    raws.setdefault(pat, raw)
+                    if rank < half:
+                        support.setdefault(pat, set()).add(trace.key())
+        out = []
+        for pat, b in better.items():
+            w = worse.get(pat, 0)
+            lift = (b + 1) / (w + 1)
+            wls = sorted(support.get(pat, ()))
+            if lift >= min_lift and len({k[0] for k in wls}) >= min_support:
+                substrate, bundle, key, _ = pat
+                out.append({"substrate": substrate, "bundle": bundle,
+                            "key": key, "value": raws[pat], "lift": lift,
+                            "better": b, "worse": w, "support": wls})
+        out.sort(key=lambda p: (-p["lift"], -p["better"], p["bundle"],
+                                p["key"], _arm(p["value"])))
+        return out
+
+    # -- aggregate 2: error -> fix transitions -------------------------------
+    def fix_patterns(self, min_support: int = 2) -> List[Dict]:
+        """Decision edits that turned a failing primary candidate into
+        the next primary candidate that scored.
+
+        Groups by (substrate, error signature, bundle, key, new value);
+        a pattern needs ``min_support`` distinct supporting workloads.
+        Most-seen first.
+        """
+        counts: Dict[Tuple, int] = {}
+        support: Dict[Tuple, set] = {}
+        raws: Dict[Tuple, object] = {}
+        messages: Dict[Tuple, str] = {}
+        categories: Dict[Tuple, str] = {}
+        for trace in self.traces:
+            chain = [r for r in trace.records if r.primary]
+            for i, rec in enumerate(chain):
+                if rec.score is not None or rec.category == "OK":
+                    continue
+                fix = next((n for n in chain[i + 1:]
+                            if n.score is not None), None)
+                if fix is None:
+                    continue
+                sig = _signature(rec.message)
+                before = {(b, k): a for b, k, a, _ in _axes(rec.values)}
+                for bundle, key, arm, raw in _axes(fix.values):
+                    if before.get((bundle, key)) in (None, arm):
+                        continue
+                    pat = (trace.substrate, sig, bundle, key, arm)
+                    counts[pat] = counts.get(pat, 0) + 1
+                    support.setdefault(pat, set()).add(trace.key())
+                    raws.setdefault(pat, raw)
+                    messages.setdefault(pat, rec.message)
+                    categories.setdefault(pat, rec.category)
+        out = []
+        for pat, n in counts.items():
+            wls = sorted(support[pat])
+            if len({k[0] for k in wls}) < min_support:
+                continue
+            substrate, sig, bundle, key, _ = pat
+            out.append({"substrate": substrate, "signature": sig,
+                        "category": categories[pat],
+                        "message": messages[pat], "bundle": bundle,
+                        "key": key, "value": raws[pat], "count": n,
+                        "support": wls})
+        out.sort(key=lambda p: (-p["count"], p["signature"], p["bundle"],
+                                p["key"], _arm(p["value"])))
+        return out
+
+    def summary(self) -> Dict:
+        return {"traces": len(self.traces),
+                "records": sum(len(t.records) for t in self.traces),
+                "keys": [list(k) for k in self.provenance_keys()],
+                "substrates": self.substrates()}
+
+
+class TraceMiner:
+    """Walk a MapperStore and/or Tuner checkpoints into a TraceDataset.
+
+    ``store`` is a :class:`repro.service.MapperStore` (or its path);
+    ``checkpoints`` is any mix of checkpoint files and directories
+    (directories are scanned for ``*.json`` files, non-checkpoint JSON
+    is skipped).  Workload substrate/mesh/profile resolve through the
+    ASI registry when the workload is registered, through the artifact
+    row otherwise.
+    """
+
+    def __init__(self, store=None,
+                 checkpoints: Sequence[str] = ()):
+        self.store = store
+        self.checkpoints = list(checkpoints)
+
+    # -- source: MapperStore -------------------------------------------------
+    def _mine_store(self, out: List[MinedTrace]) -> None:
+        from ..service import MapperStore
+        store = self.store
+        if store is None:
+            return
+        if not isinstance(store, MapperStore):
+            store = MapperStore(str(store))
+        for art in store.list():
+            prov = art.provenance or {}
+            rec = MinedRecord(values=prov.get("decisions") or {},
+                              score=art.score, category="OK",
+                              message=f"published winner "
+                                      f"({prov.get('source', 'unknown')})")
+            out.append(MinedTrace(
+                workload=art.workload, substrate=art.substrate,
+                mesh=art.mesh, profile=art.profile,
+                strategy=str(prov.get("strategy", "")),
+                source=f"artifact:{art.id}", records=[rec]))
+
+    # -- source: Tuner checkpoints -------------------------------------------
+    def _checkpoint_paths(self) -> List[str]:
+        paths = []
+        for entry in self.checkpoints:
+            if os.path.isdir(entry):
+                paths.extend(sorted(
+                    os.path.join(entry, f) for f in os.listdir(entry)
+                    if f.endswith(".json")))
+            else:
+                paths.append(entry)
+        return paths
+
+    def _mine_checkpoint(self, path: str, out: List[MinedTrace]) -> None:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return
+        if not isinstance(payload, dict) \
+                or payload.get("version") not in _CKPT_READABLE \
+                or "session" not in payload:
+            return                      # not a Tuner checkpoint
+        wname = str(payload.get("workload", ""))
+        substrate, mesh, profile = self._resolve(wname)
+        trace = MinedTrace(workload=wname, substrate=substrate,
+                           mesh=mesh, profile=profile,
+                           strategy=str(payload.get("strategy", "")),
+                           source=f"checkpoint:{path}")
+        for r in payload["session"].get("records", ()):
+            rep = r.get("report") or {}
+            category = str(rep.get("category", "OK" if r.get("score")
+                                   is not None else "EXECUTION"))
+            message = str(rep.get("message", "")) or \
+                str(r.get("feedback", "")).strip().split("\n")[0]
+            trace.records.append(MinedRecord(
+                values=r.get("values") or {}, score=r.get("score"),
+                category=category, message=message,
+                primary=bool(r.get("primary", True))))
+        out.append(trace)
+
+    @staticmethod
+    def _resolve(wname: str) -> Tuple[str, str, str]:
+        """(substrate, mesh, profile) of a workload name, via the
+        registry when registered; blanks otherwise (still minable)."""
+        try:
+            from ..asi import registry
+            from ..service import workload_mesh, workload_profile
+            wl = registry.get(wname)
+            return (getattr(wl, "substrate", ""), workload_mesh(wl),
+                    workload_profile(wl))
+        except Exception:
+            return ("", "", "healthy")
+
+    def mine(self) -> TraceDataset:
+        traces: List[MinedTrace] = []
+        self._mine_store(traces)
+        for path in self._checkpoint_paths():
+            self._mine_checkpoint(path, traces)
+        return TraceDataset(traces=traces)
+
+
+def mine_traces(store=None, checkpoints: Sequence[str] = ()) -> TraceDataset:
+    """Convenience wrapper: ``TraceMiner(store, checkpoints).mine()``."""
+    return TraceMiner(store=store, checkpoints=checkpoints).mine()

@@ -1,0 +1,245 @@
+"""WarmStart: seed a new tuning cell from its nearest solved neighbors.
+
+When a (workload, mesh geometry, device profile) cell is tuned for the
+first time, the MapperStore usually already holds winners for *related*
+cells -- the same algorithm on another mesh, a sibling of the same
+family (the matmul variants share one decision space), or the same
+workload under a degraded profile.  :class:`NeighborIndex` ranks those
+cells by a weighted similarity over
+
+* substrate (0.4) -- guidance rules, cost models, and decision
+  vocabularies are substrate-scoped, so cross-substrate transfer is
+  near-worthless;
+* decision-space overlap (0.3) -- Jaccard over (bundle, key) axes;
+* mesh geometry (0.2) -- device-count ratio and rank match of the
+  ``RxC:axes`` geometry keys;
+* profile match (0.1).
+
+:func:`adapt_decisions` then translates a neighbor's winning decision
+assignment into the target's space (exact-axis adoption plus
+majority-value fill for unmatched keys), and
+:func:`warm_start_candidates` packages the top-k as seed candidates for
+``Tuner(seed_candidates=...)``.  Neighbor scores are deliberately
+dropped (``score=None``): a rival workload's seconds are not on this
+workload's scale and must never win a best-score comparison here.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Similarity component weights (sum to 1.0).
+WEIGHTS = {"substrate": 0.4, "space": 0.3, "mesh": 0.2, "profile": 0.1}
+
+
+def _parse_mesh(key: str) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """``"2x4:data,model"`` -> ``((2, 4), ("data", "model"))``."""
+    geom, _, axes = key.partition(":")
+    shape = []
+    for part in geom.split("x"):
+        try:
+            shape.append(int(part))
+        except ValueError:
+            return ((), ())
+    return (tuple(shape),
+            tuple(a for a in axes.split(",") if a) if axes else ())
+
+
+def mesh_similarity(a: str, b: str) -> float:
+    """Geometry similarity of two mesh keys in [0, 1]."""
+    if a == b:
+        return 1.0
+    shape_a, _ = _parse_mesh(a)
+    shape_b, _ = _parse_mesh(b)
+    if not shape_a or not shape_b:
+        return 0.0
+    count_a, count_b = 1, 1
+    for s in shape_a:
+        count_a *= s
+    for s in shape_b:
+        count_b *= s
+    ratio = min(count_a, count_b) / max(count_a, count_b)
+    rank = 1.0 if len(shape_a) == len(shape_b) else 0.5
+    return 0.5 * ratio + 0.5 * rank
+
+
+def _space_axes(workload) -> set:
+    """The (bundle, key) axis set of a workload's decision space."""
+    try:
+        return {(bundle, key) for bundle, keys in workload.bundles().items()
+                for key in keys}
+    except Exception:
+        return set()
+
+
+def _axes_of_decisions(decisions: Dict) -> set:
+    return {(bundle, key) for bundle, keys in (decisions or {}).items()
+            if isinstance(keys, dict) for key in keys}
+
+
+def space_similarity(target_axes: set, source_axes: set) -> float:
+    """Jaccard overlap of two (bundle, key) axis sets."""
+    if not target_axes or not source_axes:
+        return 0.0
+    inter = len(target_axes & source_axes)
+    union = len(target_axes | source_axes)
+    return inter / union
+
+
+@dataclass
+class Neighbor:
+    """A ranked neighbor cell: its best artifact plus the score parts."""
+
+    artifact: object                  # MapperArtifact
+    similarity: float
+    parts: Dict[str, float] = field(default_factory=dict)
+
+    def describe(self) -> Dict:
+        return {"workload": self.artifact.workload,
+                "mesh": self.artifact.mesh,
+                "profile": self.artifact.profile,
+                "artifact": self.artifact.id,
+                "similarity": round(self.similarity, 4),
+                "parts": {k: round(v, 4) for k, v in self.parts.items()}}
+
+
+class NeighborIndex:
+    """Rank MapperStore cells by similarity to a target workload cell.
+
+    Decision-space axes resolve through the ASI registry when the
+    neighbor workload is registered there; otherwise they fall back to
+    the axes visible in the artifact's provenance decisions (mined
+    stores from other hosts stay usable).
+    """
+
+    def __init__(self, store, registry=None):
+        from ..asi import registry as default_registry
+        from ..service import MapperStore
+        if not isinstance(store, MapperStore):
+            store = MapperStore(str(store))
+        self.store = store
+        self.registry = registry or default_registry
+
+    def _source_axes(self, artifact) -> set:
+        try:
+            return _space_axes(self.registry.get(artifact.workload))
+        except Exception:
+            prov = artifact.provenance or {}
+            return _axes_of_decisions(prov.get("decisions"))
+
+    def neighbors(self, workload, k: int = 3,
+                  profile: Optional[str] = None) -> List[Neighbor]:
+        """Top-``k`` neighbor cells of ``workload``, most similar first.
+
+        The target cell itself (same workload, mesh, profile) is
+        excluded -- resuming your own winner is the store's ``best()``,
+        not a warm start.  Ties break on (workload, mesh, profile) so
+        the ranking is deterministic.
+        """
+        from ..service import workload_mesh, workload_profile
+        target_sub = getattr(workload, "substrate", "")
+        target_mesh = workload_mesh(workload)
+        target_profile = profile or workload_profile(workload)
+        target_axes = _space_axes(workload)
+        target_key = (getattr(workload, "name", ""), target_mesh,
+                      target_profile)
+        ranked: List[Neighbor] = []
+        for key in self.store.keys():
+            if key == target_key:
+                continue
+            art = self.store.best(key[0], mesh=key[1], profile=key[2])
+            if art is None:
+                continue
+            parts = {
+                "substrate": 1.0 if art.substrate == target_sub else 0.0,
+                "space": space_similarity(target_axes,
+                                          self._source_axes(art)),
+                "mesh": mesh_similarity(target_mesh, art.mesh),
+                "profile": 1.0 if art.profile == target_profile else 0.0,
+            }
+            sim = sum(WEIGHTS[name] * val for name, val in parts.items())
+            ranked.append(Neighbor(artifact=art, similarity=sim,
+                                   parts=parts))
+        ranked.sort(key=lambda n: (-n.similarity, n.artifact.workload,
+                                   n.artifact.mesh, n.artifact.profile))
+        return ranked[:k]
+
+
+def adapt_decisions(source: Dict, workload) -> Optional[Dict]:
+    """Translate a neighbor's decision assignment into ``workload``'s
+    decision space.
+
+    Exact (bundle, key) axes adopt the source value when it is allowed
+    on the target axis.  Target keys with no exact match fall back to
+    the majority value the source assigned under the *same bundle* --
+    apps share value vocabularies (layouts, index functions) even when
+    per-task keys are named differently -- provided that value is
+    allowed; everything else keeps the target default.  Returns None
+    when nothing transferred (the caller should not seed a candidate
+    that is just the default restated).
+    """
+    try:
+        defaults = workload.default_decisions()
+        spaces = workload.bundles()
+    except Exception:
+        return None
+    out = json.loads(json.dumps(defaults))
+    transferred = 0
+    for bundle, keys in out.items():
+        if not isinstance(keys, dict):
+            continue
+        src_bundle = (source or {}).get(bundle)
+        if not isinstance(src_bundle, dict):
+            continue
+        allowed = spaces.get(bundle, {})
+        # majority value of the source bundle, deterministic tie-break
+        tally: Dict[str, int] = {}
+        raw_by_arm: Dict[str, object] = {}
+        for val in src_bundle.values():
+            arm = json.dumps(val, sort_keys=True, default=str)
+            tally[arm] = tally.get(arm, 0) + 1
+            raw_by_arm.setdefault(arm, val)
+        majority = None
+        if tally:
+            best_arm = min(tally, key=lambda a: (-tally[a], a))
+            majority = raw_by_arm[best_arm]
+        for key in keys:
+            options = allowed.get(key, ())
+            if key in src_bundle and src_bundle[key] in options:
+                if out[bundle][key] != src_bundle[key]:
+                    transferred += 1
+                out[bundle][key] = src_bundle[key]
+            elif majority is not None and majority in options:
+                if out[bundle][key] != majority:
+                    transferred += 1
+                out[bundle][key] = majority
+    return out if transferred else None
+
+
+def warm_start_candidates(workload, store, k: int = 3,
+                          profile: Optional[str] = None,
+                          registry=None) -> List[Dict]:
+    """Seed candidates for ``Tuner(seed_candidates=...)`` mined from the
+    nearest neighbors' best artifacts, nearest first.
+
+    Each candidate is ``{"decisions": ..., "score": None, "from": ...}``
+    -- score stays None so a foreign scale never beats live
+    measurements.  Deduplicates identical adapted assignments.
+    """
+    index = NeighborIndex(store, registry=registry)
+    out: List[Dict] = []
+    seen = set()
+    for nb in index.neighbors(workload, k=k, profile=profile):
+        prov = nb.artifact.provenance or {}
+        decisions = adapt_decisions(prov.get("decisions"), workload)
+        if decisions is None:
+            continue
+        arm = json.dumps(decisions, sort_keys=True, default=str)
+        if arm in seen:
+            continue
+        seen.add(arm)
+        out.append({"decisions": decisions, "score": None,
+                    "from": nb.describe()})
+    return out

@@ -373,6 +373,16 @@ class MapperStore:
             rows = self._conn.execute(q, args).fetchall()
         return [MapperArtifact.from_dict(json.loads(r[0])) for r in rows]
 
+    def keys(self) -> List[Tuple[str, str, str]]:
+        """Every distinct (workload, mesh, profile) key in the store --
+        the iteration primitive for trace mining and the neighbor index
+        (:mod:`repro.meta`) as well as per-key garbage collection."""
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT DISTINCT workload, mesh, profile FROM artifacts "
+                "ORDER BY workload, mesh, profile").fetchall()
+        return [tuple(r) for r in rows]
+
     def summary(self) -> List[Dict]:
         """One row per (workload, mesh, profile): count + current best."""
         with self._lock:
@@ -399,10 +409,7 @@ class MapperStore:
 
         def sweep():
             deleted = 0
-            keys = self._conn.execute(
-                "SELECT DISTINCT workload, mesh, profile "
-                "FROM artifacts").fetchall()
-            for workload, mesh, profile in keys:
+            for workload, mesh, profile in self.keys():
                 ids = [r[0] for r in self._conn.execute(
                     "SELECT id FROM artifacts WHERE workload = ? "
                     "AND mesh = ? AND profile = ? "
@@ -469,6 +476,13 @@ def publish_result(store: MapperStore, workload, result,
     score = result.best_score
     if score is None or not math.isfinite(score) or not result.best_mapper:
         return None
+    provenance = dict(provenance or {})
+    # the winner's decision assignment rides along (JSON-normal form):
+    # warm start (repro.meta) re-seeds new tuning runs from neighbor
+    # artifacts' decisions without re-parsing mapper source
+    decisions = getattr(result, "best_decisions", None)
+    if decisions and "decisions" not in provenance:
+        provenance["decisions"] = json.loads(json.dumps(decisions))
     return store.put(MapperArtifact.build(
         workload=workload.name,
         substrate=getattr(workload, "substrate", ""),
@@ -478,4 +492,4 @@ def publish_result(store: MapperStore, workload, result,
         workload_profile(workload),
         fingerprint=mapper_fingerprint(workload, result.best_mapper),
         score=float(score),
-        provenance=dict(provenance or {})))
+        provenance=provenance))

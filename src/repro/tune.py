@@ -103,6 +103,15 @@ def main(argv=None) -> int:
                          "bit-for-bit (fails loudly on divergence)")
     ap.add_argument("--resume", default=None, metavar="CHECKPOINT",
                     help="resume a checkpointed session")
+    ap.add_argument("--warm-start", default=None, metavar="STORE",
+                    help="seed opening candidates from the nearest "
+                         "neighbor cells' best artifacts in this "
+                         "MapperStore (see repro.meta)")
+    ap.add_argument("--warm-k", type=int, default=3,
+                    help="neighbor cells to seed from (default: 3)")
+    ap.add_argument("--learned-pack", default=None, metavar="PACK.json",
+                    help="compose this validated LearnedPack into the "
+                         "workload's diagnostics for the run")
     ap.add_argument("--out", default=None,
                     help="write the result (trajectory, best mapper) as "
                          "JSON here instead of stdout")
@@ -126,6 +135,8 @@ def main(argv=None) -> int:
                       ("checkpoint", args.checkpoint),
                       ("record-llm", args.record_llm),
                       ("replay-llm", args.replay_llm),
+                      ("warm-start", args.warm_start),
+                      ("learned-pack", args.learned_pack),
                       ("workload", args.workload)] if v is not None]
             if fixed:
                 ap.error(f"--resume takes these from the checkpoint; "
@@ -155,12 +166,35 @@ def main(argv=None) -> int:
                 from .core.agent.llm import RecordingLLM
                 llm = recorder = RecordingLLM(
                     registry.get(args.workload).llm())
-            res = tune(args.workload, strategy=args.strategy,
+            target = args.workload
+            seeds = None
+            if args.learned_pack:
+                from .asi import registry
+                from .meta import LearnedPack, register_pack, with_pack
+                pack = LearnedPack.load(args.learned_pack)
+                register_pack(pack)     # refuses unvalidated packs
+                target = with_pack(registry.get(args.workload), pack)
+                print(f"composed learned pack {pack.name!r} "
+                      f"({len(pack.rules)} rules) into diagnostics",
+                      file=sys.stderr)
+            if args.warm_start:
+                from .asi import registry
+                from .meta import warm_start_candidates
+                wl = target if not isinstance(target, str) \
+                    else registry.get(target)
+                seeds = warm_start_candidates(wl, args.warm_start,
+                                              k=args.warm_k)
+                names = [s["from"]["workload"] for s in seeds]
+                print(f"warm start: {len(seeds)} seed candidate(s) "
+                      f"from {names}" if seeds else
+                      "warm start: no transferable neighbors found",
+                      file=sys.stderr)
+            res = tune(target, strategy=args.strategy,
                        iterations=args.iters, batch=args.batch,
                        seed=args.seed,
                        feedback_level=args.feedback_level or "full",
                        checkpoint=args.checkpoint, llm=llm,
-                       tier=args.tier)
+                       tier=args.tier, seed_candidates=seeds or None)
             if recorder is not None:
                 recorder.save(args.record_llm)
                 print(f"recorded {len(recorder.calls)} LLM proposals "

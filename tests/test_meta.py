@@ -1,0 +1,435 @@
+"""The meta-optimization layer (repro.meta).
+
+TraceMiner over real checkpoints and stores (including a v1-schema
+store migrated in place), LearnedPack distill -> validate -> register,
+the neighbor index + warm-start seeding path, the public
+``Tuner(seed_candidates=...)`` API, and the MetaTuner knob sweep.  All
+tuning runs use the fast deterministic workloads.
+"""
+
+import copy
+import json
+import sqlite3
+
+import pytest
+
+from repro.asi import Tuner, chain_hints, registry, tune
+from repro.core.agent.llm import ScriptedLLM
+from repro.meta import (LearnedPack, MetaConfig, MinedRecord, MinedTrace,
+                        NeighborIndex, TraceDataset, adapt_decisions,
+                        distill_pack, iterations_to_beat, mesh_similarity,
+                        meta_tune, mine_traces, register_pack,
+                        validate_pack, warm_start_candidates, with_pack)
+from repro.service import MapperArtifact, MapperStore, publish_result
+
+
+def _jnorm(obj):
+    """JSON-normalize (tuples become lists, keys become strings)."""
+    return json.loads(json.dumps(obj, default=list))
+
+
+def _trace(workload, substrate="GPU", records=(), mesh="2x4",
+           profile="healthy"):
+    return MinedTrace(workload=workload, substrate=substrate, mesh=mesh,
+                      profile=profile, strategy="trace", source="test",
+                      records=list(records))
+
+
+def _rec(score, **axes):
+    return MinedRecord(values={b: dict(kv) for b, kv in axes.items()},
+                       score=score)
+
+
+def _two_workload_dataset():
+    """circuit + stencil traces where rx=SOA wins on both."""
+    traces = []
+    for w in ("circuit", "stencil"):
+        traces.append(_trace(w, records=[
+            _rec(1.0, layout_decision={"rz": "SOA"}),
+            _rec(2.0, layout_decision={"rz": "AOS"})]))
+    return TraceDataset(traces=traces)
+
+
+# ---------------------------------------------------------------------------
+# TraceMiner
+# ---------------------------------------------------------------------------
+def test_miner_roundtrips_checkpoints_deterministically(tmp_path):
+    ckpt = str(tmp_path / "circuit.json")
+    res = tune("circuit", strategy="trace", iterations=3, seed=0,
+               checkpoint=ckpt)
+    ds1 = mine_traces(checkpoints=(str(tmp_path),))
+    ds2 = mine_traces(checkpoints=(str(tmp_path),))
+    assert len(ds1.traces) == 1
+    t = ds1.traces[0]
+    assert t.workload == "circuit" and t.strategy == "trace"
+    assert t.profile == "healthy" and t.mesh   # registry-resolved key
+    assert t.substrate == registry.get("circuit").substrate
+    # every evaluated candidate is mined, with its decision assignment
+    assert len(t.records) == len(res.graph.records)
+    assert t.records[0].values == _jnorm(res.graph.records[0].values)
+    assert [r.score for r in t.scored()] == \
+        [r.score for r in res.graph.records if r.score is not None]
+    # deterministic: mining the same sources twice yields the same data
+    assert [r.__dict__ for r in ds1.traces[0].records] == \
+        [r.__dict__ for r in ds2.traces[0].records]
+
+
+def test_miner_skips_non_checkpoint_json(tmp_path):
+    (tmp_path / "notes.json").write_text(json.dumps({"hello": 1}))
+    (tmp_path / "broken.json").write_text("{not json")
+    assert mine_traces(checkpoints=(str(tmp_path),)).traces == []
+
+
+def test_miner_reads_store_artifacts_with_provenance(tmp_path):
+    store = MapperStore(str(tmp_path / "s.db"))
+    res = tune("circuit", strategy="trace", iterations=3, seed=0)
+    publish_result(store, registry.get("circuit"), res,
+                   provenance={"source": "test", "strategy": "trace"})
+    ds = mine_traces(store=store)
+    assert len(ds.traces) == 1
+    t = ds.traces[0]
+    assert t.source.startswith("artifact:")
+    # publish_result now attaches the winner's decisions as provenance,
+    # so store-only mining still yields decision evidence
+    assert t.records[0].values == _jnorm(res.best_decisions)
+    assert t.records[0].score == res.best_score
+    assert ds.provenance_keys() == [("circuit", t.mesh, "healthy")]
+
+
+def test_miner_reads_v1_store_migrated_in_place(tmp_path):
+    """A pre-profile (v1 schema) store opens, migrates, and mines."""
+    path = str(tmp_path / "v1.db")
+    art = MapperArtifact.build(
+        workload="circuit", substrate="app", mesh="2x4",
+        mapper="Task * GPU;", score=1.5,
+        provenance={"decisions": {"layout_decision": {"rz": "SOA"}}})
+    payload = art.to_dict()
+    del payload["profile"]            # v1 artifacts predate the axis
+    conn = sqlite3.connect(path)
+    conn.execute(
+        "CREATE TABLE artifacts (id TEXT PRIMARY KEY, workload TEXT NOT "
+        "NULL, substrate TEXT NOT NULL, mesh TEXT NOT NULL, fingerprint "
+        "TEXT NOT NULL, score REAL, created REAL NOT NULL, payload TEXT "
+        "NOT NULL)")
+    conn.execute(
+        "INSERT INTO artifacts VALUES (?, ?, ?, ?, ?, ?, ?, ?)",
+        (art.id, art.workload, art.substrate, art.mesh, art.fingerprint,
+         art.score, art.created, json.dumps(payload)))
+    conn.execute("PRAGMA user_version = 1")
+    conn.commit()
+    conn.close()
+    ds = mine_traces(store=path)      # opens + migrates via MapperStore
+    assert len(ds.traces) == 1
+    assert ds.traces[0].profile == "healthy"    # backfilled axis
+    assert ds.traces[0].records[0].values == \
+        {"layout_decision": {"rz": "SOA"}}
+
+
+def test_win_patterns_cross_workload_support_and_order():
+    ds = _two_workload_dataset()
+    pats = ds.win_patterns(min_support=2)
+    assert len(pats) == 1
+    p = pats[0]
+    assert (p["bundle"], p["key"], p["value"]) == \
+        ("layout_decision", "rz", "SOA")
+    assert {k[0] for k in p["support"]} == {"circuit", "stencil"}
+    # one workload of support is below min_support
+    assert TraceDataset(traces=ds.traces[:1]).win_patterns(
+        min_support=2) == []
+
+
+def test_fix_patterns_pair_error_with_next_scored():
+    traces = []
+    for w in ("circuit", "stencil"):
+        fail = MinedRecord(values={"layout_decision": {"rz": "AOS"}},
+                           score=None, category="RESOURCE",
+                           message="peak HBM 18.2 GiB exceeds limit")
+        fix = _rec(1.0, layout_decision={"rz": "SOA"})
+        traces.append(_trace(w, records=[fail, fix]))
+    pats = TraceDataset(traces=traces).fix_patterns(min_support=2)
+    assert len(pats) == 1
+    p = pats[0]
+    assert p["category"] == "RESOURCE"
+    assert "#" in p["signature"]      # numbers struck from the signature
+    assert (p["key"], p["value"]) == ("rz", "SOA")
+
+
+# ---------------------------------------------------------------------------
+# LearnedPack: distill -> validate -> register -> compose
+# ---------------------------------------------------------------------------
+def test_distill_roundtrip_and_examples_fire():
+    pack = distill_pack(_two_workload_dataset(), name="t1")
+    assert len(pack.rules) == 1
+    rule = pack.rules[0]
+    assert rule.kind == "win" and rule.support   # provenance attached
+    # JSON round trip is exact
+    clone = LearnedPack.from_dict(json.loads(json.dumps(pack.to_dict())))
+    assert clone.to_dict() == pack.to_dict()
+    # every compiled rule's example report fires the rule (the same
+    # invariant the hand-written packs are tested for)
+    for lr in clone.rules:
+        compiled = lr.to_rule()
+        assert compiled.matches(compiled.example())
+
+
+def test_distill_phrasing_via_scripted_llm_is_deterministic():
+    mk = lambda: ScriptedLLM([("rule", "explain", "scripted explain")])
+    p1 = distill_pack(_two_workload_dataset(), name="t2", llm=mk())
+    p2 = distill_pack(_two_workload_dataset(), name="t2", llm=mk())
+    assert p1.rules[0].explain == "scripted explain"
+    assert p1.rules[0].suggest == p2.rules[0].suggest
+    assert [r.to_dict() for r in p1.rules] == \
+        [r.to_dict() for r in p2.rules]
+
+
+def test_register_refuses_unvalidated_and_reserved_names():
+    pack = distill_pack(_two_workload_dataset(), name="unvalidated")
+    with pytest.raises(ValueError, match="not validated"):
+        register_pack(pack)
+    pack.validation = {"passed": True}
+    bad = copy.deepcopy(pack)
+    bad.name = "ft"                   # shadows the hand-written add-on
+    with pytest.raises(ValueError, match="built-in|shadow"):
+        register_pack(bad)
+
+
+def test_validate_registers_and_composes_into_diagnostics():
+    pack = distill_pack(_two_workload_dataset(), name="learnedtest")
+    verdict = validate_pack(pack, ["circuit"], strategy="trace",
+                            iterations=3, seed=0)
+    assert verdict["passed"] is True
+    assert verdict["replay_identical"] is True   # record/replay harness
+    assert pack.validation is verdict            # persisted on the pack
+    base = verdict["workloads"]["circuit"]["baseline_iterations_to_beat"]
+    learned = verdict["workloads"]["circuit"]["learned_iterations_to_beat"]
+    assert base is None or learned is not None   # no regression
+    # the gate now opens; the pack composes through EXTRA_PACKS like ft
+    register_pack(pack)
+    from repro.core.agent.autoguide.rules import get_pack
+    composed = get_pack("app+learnedtest")
+    assert len(composed) > len(get_pack("app"))
+    wl = with_pack(registry.get("circuit"), pack)
+    assert wl.rule_pack == "app+learnedtest"
+    # the learned suggestion reaches live feedback on a scored report
+    fb = wl.evaluator()(wl.render_mapper(wl.default_decisions()))
+    assert fb.score is not None
+    # original registry instance is untouched
+    assert registry.get("circuit").rule_pack == "app"
+
+
+# ---------------------------------------------------------------------------
+# WarmStart
+# ---------------------------------------------------------------------------
+def test_mesh_similarity_geometry():
+    assert mesh_similarity("2x4:x,y", "2x4:x,y") == 1.0
+    # same device count, same rank, different shape
+    assert mesh_similarity("2x4", "4x2") == 1.0
+    assert mesh_similarity("2x4", "4x4") == pytest.approx(0.75)
+    assert mesh_similarity("2x4", "8") == pytest.approx(0.75)
+    assert mesh_similarity("2x4", "weird") == 0.0
+
+
+def test_adapt_decisions_exact_and_majority_fill():
+    wl = registry.get("circuit")
+    defaults = wl.default_decisions()
+    bundle = "layout_decision"
+    keys = list(defaults[bundle])
+    spaces = wl.bundles()
+    alt = next(v for v in spaces[bundle][keys[0]]
+               if v != defaults[bundle][keys[0]])
+    # exact axis: same bundle+key adopts the source value
+    adapted = adapt_decisions({bundle: {keys[0]: alt}}, wl)
+    assert adapted[bundle][keys[0]] == alt
+    # unmatched keys fall back to the source bundle's majority value
+    src = {bundle: {"foreign_a": alt, "foreign_b": alt}}
+    adapted = adapt_decisions(src, wl)
+    assert adapted is not None
+    assert all(adapted[bundle][k] == alt for k in keys
+               if alt in spaces[bundle][k])
+    # nothing transferable -> None, never a restated default
+    assert adapt_decisions({"nope": {"x": 1}}, wl) is None
+    assert adapt_decisions(defaults, wl) is None
+
+
+def test_neighbor_index_ranks_substrate_and_geometry(tmp_path):
+    store = MapperStore(str(tmp_path / "s.db"))
+    wl = registry.get("matmul/summa")
+    from repro.service import workload_mesh
+    mesh = workload_mesh(wl)
+    sibling = registry.get("matmul/cannon")
+    for name, substrate, m in [
+            ("matmul/cannon", sibling.substrate, mesh),   # best neighbor
+            ("circuit", "app", "2x4"),                    # wrong substrate
+    ]:
+        store.put(MapperArtifact.build(
+            workload=name, substrate=substrate, mesh=m,
+            mapper="Task * GPU;", score=1.0,
+            provenance={"decisions":
+                        registry.get(name).default_decisions()}))
+    ranked = NeighborIndex(store).neighbors(wl, k=5)
+    assert [n.artifact.workload for n in ranked] == \
+        ["matmul/cannon", "circuit"]
+    assert ranked[0].parts["substrate"] == 1.0
+    assert ranked[0].parts["space"] == 1.0    # identical decision space
+    assert ranked[0].similarity > ranked[1].similarity
+    # the target's own cell is never its own neighbor
+    store.put(MapperArtifact.build(
+        workload="matmul/summa", substrate=wl.substrate, mesh=mesh,
+        mapper="Task * GPU;", score=1.0))
+    names = [n.artifact.workload
+             for n in NeighborIndex(store).neighbors(wl, k=5)]
+    assert "matmul/summa" not in names
+
+
+def test_warm_start_beats_cold_on_sibling_workload(tmp_path):
+    """The PR's headline: seeding from a solved neighbor reaches the
+    expert bar in strictly fewer iterations than a cold start."""
+    from repro.experiments import expert_score
+    store = MapperStore(str(tmp_path / "s.db"))
+    src = tune("matmul/cannon", strategy="trace", iterations=6, seed=0)
+    publish_result(store, registry.get("matmul/cannon"), src,
+                   provenance={"strategy": "trace"})
+    wl = registry.get("matmul/summa")
+    # a bare path works too (the CLI hands one straight through)
+    seeds = warm_start_candidates(wl, str(tmp_path / "s.db"), k=2)
+    assert seeds and seeds[0]["from"]["workload"] == "matmul/cannon"
+    assert all(s["score"] is None for s in seeds)   # foreign scales
+    bar = expert_score("matmul/summa")
+    cold = tune("matmul/summa", strategy="trace", iterations=6, seed=0)
+    warm = tune("matmul/summa", strategy="trace", iterations=6, seed=0,
+                seed_candidates=seeds)
+    ci = iterations_to_beat(cold.trajectory, bar)
+    wi = iterations_to_beat(warm.trajectory, bar)
+    assert wi is not None and (ci is None or wi < ci), (ci, wi)
+
+
+# ---------------------------------------------------------------------------
+# The public seeding API (satellite of the fleet hint path)
+# ---------------------------------------------------------------------------
+def test_chain_hints_drains_queue_then_falls_back():
+    calls = []
+    fallback = lambda: calls.append("live") or {"decisions": {"live": 1}}
+    src = chain_hints([{"decisions": {"a": 1}, "score": 2.0},
+                       {"decisions": {}},          # empty: dropped
+                       {"decisions": {"b": 2}}], fallback=fallback)
+    assert src() == {"decisions": {"a": 1}, "score": 2.0}
+    assert src() == {"decisions": {"b": 2}, "score": None}
+    assert src()["decisions"] == {"live": 1} and calls == ["live"]
+    assert chain_hints([])() is None                # no fallback: None
+
+
+def test_first_seed_candidate_becomes_opening_candidate():
+    wl = registry.get("circuit")
+    seeded = wl.random_decisions(seed=7)
+    res = tune("circuit", strategy="trace", iterations=2, seed=0,
+               seed_candidates=[{"decisions": seeded}])
+    assert _jnorm(res.graph.records[0].values) == _jnorm(seeded)
+    # bare decision dicts normalize to the candidate form too
+    res2 = tune("circuit", strategy="trace", iterations=2, seed=0,
+                seed_candidates=[seeded])
+    assert _jnorm(res2.graph.records[0].values) == _jnorm(seeded)
+    assert res2.trajectory == res.trajectory
+
+
+def test_explicit_start_pins_and_remaining_seeds_flow_as_hints():
+    wl = registry.get("circuit")
+    start = wl.default_decisions()
+    s1 = wl.random_decisions(seed=3)
+    tuner = Tuner(workload=wl, strategy="trace", iterations=2, seed=0,
+                  seed_candidates=[{"decisions": s1}])
+    res = tuner.run(start=start)
+    # run(start=...) wins; the seed is not silently dropped -- it rides
+    # the hint path into the search prompt instead
+    assert _jnorm(res.graph.records[0].values) == _jnorm(start)
+
+
+def test_search_params_checkpoint_resume_reproduces(tmp_path):
+    ckpt = str(tmp_path / "s.json")
+    params = {"template": "ascending", "history_k": 3}
+    full = tune("circuit", strategy="opro", iterations=4, seed=0,
+                search_params=params)
+    tune("circuit", strategy="opro", iterations=2, seed=0,
+         search_params=params, checkpoint=ckpt)
+    t = Tuner.from_checkpoint(ckpt, iterations=4)
+    assert t.search_params == params     # persisted through the payload
+    resumed = t.resume()
+    assert resumed.trajectory == full.trajectory
+    assert resumed.best_decisions == full.best_decisions
+
+
+def test_search_params_validation_and_golden_default():
+    with pytest.raises(ValueError, match="not accepted"):
+        tune("circuit", strategy="trace", iterations=1, seed=0,
+             search_params={"no_such_knob": 1})
+    with pytest.raises(ValueError, match="template"):
+        tune("circuit", strategy="opro", iterations=1, seed=0,
+             search_params={"template": "nope"})
+    # temperature=0.0 must not perturb the default trajectory
+    base = tune("circuit", strategy="trace", iterations=3, seed=0)
+    zero = tune("circuit", strategy="trace", iterations=3, seed=0,
+                search_params={"temperature": 0.0})
+    assert zero.trajectory == base.trajectory
+
+
+# ---------------------------------------------------------------------------
+# MetaTuner
+# ---------------------------------------------------------------------------
+def test_iterations_to_beat_conventions():
+    assert iterations_to_beat([3.0, 2.0, 1.0], 2.0) == 2
+    assert iterations_to_beat([float("inf"), None, 1.0], 1.5) == 3
+    assert iterations_to_beat([3.0, 3.0], 1.0) is None
+    assert iterations_to_beat([1.0], None) is None
+
+
+def test_meta_config_spec_and_param_scoping():
+    cfg = MetaConfig(template="ascending", temperature=0.25, history_k=3)
+    assert cfg.search_params("opro") == {
+        "template": "ascending", "temperature": 0.25, "history_k": 3}
+    # trace has no prompt template: only the universal knob survives
+    assert cfg.search_params("trace") == {"temperature": 0.25}
+    spec = cfg.spec("opro")
+    assert spec.agentic and dict(spec.params)["template"] == "ascending"
+    assert MetaConfig().search_params("opro") == {}   # defaults: golden
+
+
+def test_meta_tune_is_deterministic_and_prefers_default_on_tie():
+    grid = [MetaConfig(), MetaConfig(template="terse")]
+    r1 = meta_tune(["circuit"], strategy="opro", iterations=3,
+                   seeds=(0,), configs=grid)
+    r2 = meta_tune(["circuit"], strategy="opro", iterations=3,
+                   seeds=(0,), configs=grid)
+    assert r1.to_dict() == r2.to_dict()
+    assert len(r1.table) == 2
+    rewards = [row["reward"] for row in r1.table]
+    if rewards[0] == min(rewards):       # stable argmin: ties keep stock
+        assert r1.best == MetaConfig()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_meta_cli_mine_and_distill(tmp_path, capsys):
+    from repro.meta.__main__ import main
+    tune("circuit", strategy="trace", iterations=3, seed=0,
+         checkpoint=str(tmp_path / "c.json"))
+    tune("stencil", strategy="trace", iterations=3, seed=0,
+         checkpoint=str(tmp_path / "s.json"))
+    assert main(["mine", "--checkpoints", str(tmp_path)]) == 0
+    mined = json.loads(capsys.readouterr().out)
+    assert mined["traces"] == 2
+    out = str(tmp_path / "pack.json")
+    assert main(["distill", "--checkpoints", str(tmp_path),
+                 "--out", out]) == 0
+    pack = LearnedPack.load(out)
+    assert pack.validation is None       # distilled packs start ungated
+
+
+def test_tune_cli_refuses_unvalidated_learned_pack(tmp_path, capsys):
+    from repro.tune import main
+    pack = distill_pack(_two_workload_dataset(), name="cligate")
+    path = str(tmp_path / "pack.json")
+    pack.save(path)
+    rc = main(["--workload", "circuit", "--iters", "1",
+               "--learned-pack", path])
+    assert rc == 2
+    assert "not validated" in capsys.readouterr().err

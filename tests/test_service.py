@@ -83,6 +83,30 @@ def test_gc_keeps_the_best_per_key(tmp_path):
     assert store.best("pennant").score == 3.0
 
 
+def test_gc_is_per_profile_key(tmp_path):
+    """gc(keep=N) retains the top-N per (workload, mesh, profile) key:
+    a degraded-profile winner must survive even when the healthy key
+    holds better absolute scores (regression: a global top-N would
+    evict every straggler artifact and break degraded-mode resolve)."""
+    store = _store(tmp_path)
+    for i in range(3):
+        store.put(_artifact(score=1.0 + i, mapper=f"Task h{i} GPU;"))
+    for i in range(3):
+        # same cell, straggler profile: scores are all worse than every
+        # healthy artifact's (a sick machine is slower across the board)
+        store.put(MapperArtifact.build(
+            workload="circuit", substrate="app", mesh="2x4",
+            mapper=f"Task s{i} GPU;", score=10.0 + i,
+            profile="straggler:3x1", provenance={"source": "test"}))
+    deleted = store.gc(keep=1)
+    assert deleted == 4
+    assert store.keys() == [("circuit", "2x4", "healthy"),
+                            ("circuit", "2x4", "straggler:3x1")]
+    assert store.best("circuit", "2x4").score == 1.0
+    degraded = store.best("circuit", "2x4", profile="straggler:3x1")
+    assert degraded is not None and degraded.score == 10.0
+
+
 def test_store_refuses_other_schema_versions(tmp_path):
     import sqlite3
 

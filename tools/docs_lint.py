@@ -31,6 +31,7 @@ PUBLIC_INITS = {
         ROOT / "src" / "repro" / "experiments" / "__init__.py",
     "repro.fleet": ROOT / "src" / "repro" / "fleet" / "__init__.py",
     "repro.ft": ROOT / "src" / "repro" / "ft" / "__init__.py",
+    "repro.meta": ROOT / "src" / "repro" / "meta" / "__init__.py",
     "repro.serve": ROOT / "src" / "repro" / "serve" / "__init__.py",
     "repro.serve.scheduler":
         ROOT / "src" / "repro" / "serve" / "scheduler" / "__init__.py",
